@@ -1,0 +1,48 @@
+"""Kernel microbench: interpret-mode validation timing + analytic TPU cost
+of SARA-chosen tile configs (wall-clock on CPU interpret mode is NOT a TPU
+number; the analytic column is the §Roofline-relevant one)."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import tpu_costmodel as tcm
+from repro.core.hw import OS
+from repro.core.sara import SaraDispatcher
+from repro.kernels import ops, ref
+from benchmarks.common import emit
+
+
+def run():
+    rows = []
+    d = SaraDispatcher()
+    for (M, K, N) in [(512, 512, 512), (2048, 1024, 256), (300, 7000, 120)]:
+        cfg = d.recommend(M, K, N)
+        t = tcm.tile_cost_seconds([M], [K], [N])[0, cfg.class_id]
+        flops = 2 * M * K * N
+        rows.append({
+            "name": f"kernels.rsa_gemm.{M}x{K}x{N}.analytic_us",
+            "value": round(float(t) * 1e6, 3),
+            "derived": f"config=({cfg.describe()}) "
+                       f"util={flops / (t * 197e12):.2f} of peak"})
+        a = jax.random.normal(jax.random.PRNGKey(0), (M, K), jnp.float32)
+        b = jax.random.normal(jax.random.PRNGKey(1), (K, N), jnp.float32)
+        out = ops.rsa_gemm(a, b, block_m=cfg.block_m, block_n=cfg.block_n,
+                           block_k=cfg.block_k, mode=cfg.mode)
+        err = float(jnp.max(jnp.abs(out - ref.rsa_gemm_ref(a, b))))
+        rows.append({
+            "name": f"kernels.rsa_gemm.{M}x{K}x{N}.interpret_max_err",
+            "value": err, "derived": "vs ref.py oracle"})
+    # adaptnetx recommendation latency (cycle model) + correctness
+    from repro.core.adaptnet import AdaptNetConfig, init_params
+    from repro.core.adaptnetx_model import AdaptNetXDesign
+    p = init_params(jax.random.PRNGKey(0), AdaptNetConfig(num_classes=108))
+    ids = jnp.array([256, 64, 256], jnp.int32)
+    lg = ops.adaptnetx_recommend(ids, p)
+    gold = ref.adaptnetx_ref(ids, p["emb_m"], p["emb_k"], p["emb_n"],
+                             p["w1"], p["b1"], p["w2"], p["b2"])
+    rows.append({"name": "kernels.adaptnetx.max_err",
+                 "value": float(jnp.max(jnp.abs(lg - gold))),
+                 "derived": f"cycles@1GHz={AdaptNetXDesign().cycles(108)}"})
+    return emit(rows, "kernels")

@@ -1,0 +1,22 @@
+"""Beyond-paper: ADAPTNET-TPU (tile space) + distributed sharding planner."""
+import numpy as np
+
+from repro.core import tpu_costmodel as tcm
+from repro.core.sara import train_adaptnet_tpu
+from benchmarks.common import emit
+
+
+def run():
+    rows = []
+    params, acc, geo = train_adaptnet_tpu(n_samples=120_000, epochs=12)
+    rows.append({"name": "sara_tpu.adaptnet_tile.accuracy",
+                 "value": round(acc, 4),
+                 "derived": f"geomean_rel_time={geo:.4f} over "
+                            f"{tcm.NUM_TILE_CLASSES} tile classes"})
+    for dims in [(8192, 8192, 8192), (4096, 128, 4096), (256, 256, 256),
+                 (32768, 4096, 16384)]:
+        p = tcm.plan_gemm_sharding(*dims)
+        rows.append({"name": f"sara_tpu.shard_plan.{dims[0]}x{dims[1]}x{dims[2]}",
+                     "value": p.name,
+                     "derived": f"t={p.time_s:.2e}s comm={p.comm_bytes:.2e}B"})
+    return emit(rows, "sara_tpu")

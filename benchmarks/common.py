@@ -1,0 +1,24 @@
+"""Shared benchmark helpers: timing + row emission."""
+import json
+import time
+from pathlib import Path
+
+RESULTS_DIR = Path(__file__).parent / "results"
+RESULTS_DIR.mkdir(exist_ok=True)
+
+
+def emit(rows, name):
+    """Print CSV rows (name,value,derived) and persist JSON."""
+    for r in rows:
+        print(f"{r['name']},{r['value']},{r.get('derived','')}")
+    (RESULTS_DIR / f"{name}.json").write_text(json.dumps(rows, indent=1))
+    return rows
+
+
+class timer:
+    def __enter__(self):
+        self.t0 = time.time()
+        return self
+
+    def __exit__(self, *a):
+        self.seconds = time.time() - self.t0

@@ -1,0 +1,40 @@
+"""Paper Fig. 11: runtime/reads/energy/EDP on AlphaGoZero, DeepSpeech2,
+FasterRCNN (+ sensitivity nets) for monolithic, distributed, SAGAR."""
+import numpy as np
+
+from repro.core import costmodel as cm
+from repro.core import workloads as W
+from repro.core.rsa import SAGAR_INSTANCE
+from benchmarks.common import emit
+
+
+def _system_costs(M, K, N):
+    mono = cm.best_dataflow_cost(
+        lambda m, k, n, df: cm.monolithic_cost(m, k, n, 128, 128, df),
+        M, K, N)
+    dist = cm.best_dataflow_cost(
+        lambda m, k, n, df: cm.distributed_cost(m, k, n, 4, 4, 1024, df),
+        M, K, N)
+    best = cm.best_config(SAGAR_INSTANCE, M, K, N, objective="edp")
+    sc = cm.sweep_configs(SAGAR_INSTANCE, M, K, N)
+    take = lambda a: np.take_along_axis(a, best[:, None], -1)[:, 0]
+    sagar = {"runtime": take(sc.runtime), "sram_reads": take(sc.sram_reads),
+             "energy_pj": take(sc.energy_pj), "edp": take(sc.edp)}
+    return mono, dist, sagar
+
+
+def run():
+    rows = []
+    for net in ("alphagozero", "deepspeech2", "fasterrcnn",
+                "resnet50", "bert_base"):
+        M, K, N = W.layer_dims(W.WORKLOADS[net]())
+        mono, dist, sagar = _system_costs(M, K, N)
+        for metric in ("runtime", "sram_reads", "energy_pj", "edp"):
+            m, d_, s = (float(x[metric].sum())
+                        for x in (mono, dist, sagar))
+            rows.append({
+                "name": f"fig11.{net}.{metric}.sagar_vs_mono",
+                "value": round(s / m, 4),
+                "derived": f"sagar_vs_dist={s/d_:.4f} "
+                           f"(mono={m:.3e} dist={d_:.3e} sagar={s:.3e})"})
+    return emit(rows, "fig11")

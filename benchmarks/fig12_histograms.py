@@ -1,0 +1,25 @@
+"""Paper Fig. 12: histogram of favorable array sizes (distributed system)
+for synthetic G1-G20 + the three DNN workloads."""
+import collections
+
+import numpy as np
+
+from repro.core import costmodel as cm
+from repro.core import workloads as W
+from repro.core.rsa import SAGAR_INSTANCE, enumerate_configs
+from benchmarks.common import emit
+
+
+def run():
+    cfgs = enumerate_configs(SAGAR_INSTANCE)
+    rows = []
+    for net in ("synthetic", "alphagozero", "deepspeech2", "fasterrcnn"):
+        M, K, N = W.layer_dims(W.WORKLOADS[net]())
+        best = cm.best_config(SAGAR_INSTANCE, M, K, N, objective="runtime",
+                              system=cm.DISTRIBUTED)
+        hist = collections.Counter(
+            f"{cfgs[b].sub_rows}x{cfgs[b].sub_cols}" for b in best)
+        top = ", ".join(f"{k}:{v}" for k, v in hist.most_common(4))
+        rows.append({"name": f"fig12.{net}.distinct_best_sizes",
+                     "value": len(hist), "derived": top})
+    return emit(rows, "fig12")

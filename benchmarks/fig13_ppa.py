@@ -1,0 +1,21 @@
+"""Paper Fig. 13: post-PnR PPA arithmetic (published constants)."""
+from repro.core import ppa
+from benchmarks.common import emit
+
+
+def run():
+    r = ppa.headline_ratios()
+    paper = {"density_vs_distributed": 3.2,
+             "power_eff_vs_distributed": 3.5,
+             "area_overhead_vs_monolithic": 0.08,
+             "power_overhead_vs_monolithic": 0.50,
+             "adaptnetx_area_frac": 0.0865,
+             "adaptnetx_power_frac": 0.0136,
+             "sigma_compute_eq_power_saving": 0.43,
+             "sigma_compute_eq_area_saving": 0.30}
+    rows = [{"name": f"fig13.{k}", "value": round(v, 4),
+             "derived": f"paper={paper[k]}"} for k, v in r.items()]
+    rows.append({"name": "fig13.sagar.tops", "value": ppa.SAGAR.tops,
+                 "derived": f"area={ppa.SAGAR.area_mm2}mm2 "
+                            f"power={ppa.SAGAR.power_w}W @28nm 1GHz"})
+    return emit(rows, "fig13")

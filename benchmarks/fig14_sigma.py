@@ -1,0 +1,36 @@
+"""Paper Fig. 14: SAGAR vs SIGMA (compute- and area-normalized, sparsity)."""
+import numpy as np
+
+from repro.core import costmodel as cm
+from repro.core import sigma
+from repro.core import workloads as W
+from repro.core.rsa import SAGAR_INSTANCE
+from benchmarks.common import emit
+
+
+def run():
+    rows = []
+    for net in ("synthetic", "deepspeech2", "alphagozero"):
+        M, K, N = W.layer_dims(W.WORKLOADS[net]())
+        sag = cm.oracle_runtime(SAGAR_INSTANCE, M, K, N).sum()
+        sc = sigma.sigma_c_runtime(M, K, N).sum()
+        sa = sigma.sigma_a_runtime(M, K, N).sum()
+        rows.append({"name": f"fig14.{net}.sigma_c_vs_sagar",
+                     "value": round(float(sc / sag), 4),
+                     "derived": "paper: SIGMA_C wins dense (<1)"})
+        rows.append({"name": f"fig14.{net}.sigma_a_vs_sagar",
+                     "value": round(float(sa / sag), 4),
+                     "derived": "paper: ~an order of magnitude slower (>1)"})
+    # sparsity crossover (Fig 14d)
+    M, K, N = W.layer_dims(W.alphagozero())
+    sag = cm.oracle_runtime(SAGAR_INSTANCE, M, K, N).sum()
+    cross = None
+    for sparsity in np.arange(0.0, 0.96, 0.05):
+        sa = sigma.sigma_a_runtime(M, K, N, density=1 - sparsity).sum()
+        if sa < sag:
+            cross = sparsity
+            break
+    rows.append({"name": "fig14d.sigma_a_crossover_sparsity",
+                 "value": float(cross) if cross is not None else -1,
+                 "derived": "paper: SIGMA_A wins only above ~70% sparsity"})
+    return emit(rows, "fig14")

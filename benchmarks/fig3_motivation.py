@@ -1,0 +1,35 @@
+"""Paper Fig. 3: runtime + SRAM reads, 256x64 @ 64x256, mono vs distributed
+vs RSA — the motivating trade-off."""
+import numpy as np
+
+from repro.core import costmodel as cm
+from repro.core.hw import OS
+from repro.core.rsa import SAGAR_INSTANCE
+from benchmarks.common import emit
+
+M, K, N = 256, 64, 256
+
+
+def run():
+    rows = []
+    mono = cm.monolithic_cost(M, K, N, 128, 128, OS)
+    t0, r0 = float(mono.runtime), float(mono.sram_reads)
+    rows.append({"name": "fig3.monolithic_128x128.runtime", "value": t0,
+                 "derived": f"reads={r0:.0f}"})
+    for units, dim in [(4, 64), (16, 32), (64, 16), (256, 8), (1024, 4)]:
+        d = cm.distributed_cost(M, K, N, dim, dim, units, OS)
+        rows.append({
+            "name": f"fig3.distributed_{units}x{dim}x{dim}.runtime",
+            "value": float(d.runtime),
+            "derived": (f"speedup_vs_mono={t0/float(d.runtime):.2f}x "
+                        f"reads_vs_mono={float(d.sram_reads)/r0:.1f}x")})
+    best = cm.oracle_runtime(SAGAR_INSTANCE, [M], [K], [N])[0]
+    lbl = cm.best_config(SAGAR_INSTANCE, [M], [K], [N],
+                         objective="edp")[0]
+    sc = cm.sweep_configs(SAGAR_INSTANCE, [M], [K], [N])
+    rows.append({"name": "fig3.rsa_best.runtime", "value": float(best),
+                 "derived": f"speedup_vs_mono={t0/best:.2f}x"})
+    rows.append({"name": "fig3.rsa_edp_choice.reads",
+                 "value": float(sc.sram_reads[0, lbl]),
+                 "derived": f"reads_vs_mono={float(sc.sram_reads[0,lbl])/r0:.2f}x"})
+    return emit(rows, "fig3")

@@ -1,0 +1,36 @@
+"""Paper Fig. 8: ADAPTNET test accuracy across RSA sizes (2^12..2^14)."""
+import numpy as np
+
+from repro.core import adaptnet as A
+from repro.core import dataset as D
+from repro.core.rsa import make_instance
+from benchmarks.common import emit
+
+N_SAMPLES = 400_000
+EPOCHS = 20
+
+
+def run(shared=None):
+    rows = []
+    out_shared = {}
+    for p in (12, 13, 14):
+        inst = make_instance(2 ** p)
+        if p == 14 and shared and "dataset" in shared:
+            ds = shared["dataset"]
+        else:
+            ds = D.generate(N_SAMPLES, inst=inst, seed=42)
+        tr, te = ds.split()
+        res = A.train(tr, te, epochs=EPOCHS, log=False)
+        pred = A.predict(res.params, te.features)
+        geo = D.geomean_relative(inst, te.features, pred, "edp")
+        rows.append({
+            "name": f"fig8.adaptnet_{ds.num_classes}cls_2^{p}macs.accuracy",
+            "value": round(res.test_accuracy, 4),
+            "derived": (f"geomean_rel_edp={geo:.5f} "
+                        f"({100/geo:.2f}% of oracle; paper: >90% acc, "
+                        f"99.93% of oracle)")})
+        if p == 14:
+            out_shared = {"dataset": ds, "adaptnet": res,
+                          "test": te, "geo": geo}
+    emit(rows, "fig8")
+    return rows, out_shared

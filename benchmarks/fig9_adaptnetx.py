@@ -1,0 +1,36 @@
+"""Paper Fig. 9: ADAPTNETX cycles vs systolic-cells + prediction quality."""
+import numpy as np
+
+from repro.core import dataset as D
+from repro.core.adaptnetx_model import (AdaptNetXDesign, sweep_multipliers)
+from repro.core.rsa import SAGAR_INSTANCE, enumerate_configs
+from benchmarks.common import emit
+
+
+def run(shared=None):
+    rows = []
+    n_classes = len(enumerate_configs(SAGAR_INSTANCE))
+    for classes in (n_classes, 858):
+        sw = sweep_multipliers(classes)
+        best_sc = min(sw["systolic_cells"].items(), key=lambda kv: kv[1])
+        best_ax = min(sw["adaptnetx"].items(), key=lambda kv: kv[1])
+        rows.append({"name": f"fig9a.systolic_cells_{classes}cls.best_cycles",
+                     "value": best_sc[1],
+                     "derived": f"at {best_sc[0]} multipliers "
+                                f"(paper @858cls: 1134@1024)"})
+        rows.append({"name": f"fig9a.adaptnetx_{classes}cls.best_cycles",
+                     "value": best_ax[1],
+                     "derived": f"at {best_ax[0]} multipliers "
+                                f"(paper @858cls: 576@512)"})
+    d = AdaptNetXDesign()
+    rows.append({"name": "fig9.adaptnetx.model_bytes",
+                 "value": d.model_bytes(n_classes),
+                 "derived": "fits the 512KB ADAPTNETX SRAM (paper §IV-B)"})
+    rows.append({"name": "fig9.adaptnetx.latency_us",
+                 "value": round(d.cycles(n_classes) / 1000.0, 3),
+                 "derived": "@1GHz; ~6 orders below software search"})
+    if shared and "geo" in shared:
+        rows.append({"name": "fig9c.relative_performance_geomean",
+                     "value": round(100.0 / shared["geo"], 3),
+                     "derived": "% of oracle EDP (paper: 99.93% runtime)"})
+    return emit(rows, "fig9")

@@ -1,0 +1,31 @@
+"""Benchmark harness: one function per paper table/figure.
+
+Prints ``name,value,derived`` CSV rows; JSON persisted per figure under
+benchmarks/results/ (EXPERIMENTS.md cites these).
+"""
+import time
+
+
+def main() -> None:
+    t0 = time.time()
+    from benchmarks import (bench_kernels, bench_sara_tpu, fig3_motivation,
+                            fig7_classifiers, fig8_adaptnet, fig9_adaptnetx,
+                            fig11_workloads, fig12_histograms, fig13_ppa,
+                            fig14_sigma, tab2_bandwidth)
+    print("name,value,derived")
+    fig3_motivation.run()
+    tab2_bandwidth.run()
+    _, shared = fig8_adaptnet.run()          # trains ADAPTNETs (slowest)
+    fig7_classifiers.run(shared)
+    fig9_adaptnetx.run(shared)
+    fig11_workloads.run()
+    fig12_histograms.run()
+    fig13_ppa.run()
+    fig14_sigma.run()
+    bench_kernels.run()
+    bench_sara_tpu.run()
+    print(f"# benchmarks done in {time.time() - t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

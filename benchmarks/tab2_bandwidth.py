@@ -1,0 +1,24 @@
+"""Paper Table II: bypass-link bandwidth requirements per dataflow.
+
+Elements/cycle entering each sub-array edge for OS/WS/IS — the structural
+reason every systolic-cell needs a dedicated high-bandwidth bypass link."""
+from repro.core.hw import DATAFLOW_NAMES, IS, OS, WS
+from benchmarks.common import emit
+
+
+def run():
+    # per R x C sub-array: (horizontal stream, vertical stream) el/cycle
+    reqs = {
+        OS: ("inputs R/cycle", "weights C/cycle + outputs drain"),
+        WS: ("inputs R/cycle", "outputs C/cycle (psums)"),
+        IS: ("weights R/cycle", "outputs C/cycle (psums)"),
+    }
+    rows = []
+    for df, (h, v) in reqs.items():
+        rows.append({"name": f"tab2.{DATAFLOW_NAMES[df]}.links",
+                     "value": 2,
+                     "derived": f"hor={h}; ver={v}; both HIGH bandwidth"})
+    # SAGAR provisioning: 31 bypass + 1 direct per row/col -> 1024 banks
+    rows.append({"name": "tab2.sagar_banks_per_buffer", "value": 1024,
+                 "derived": "32 rows x 32 links (Table III)"})
+    return emit(rows, "tab2")

@@ -1,0 +1,49 @@
+"""Refresh derived roofline metrics in stored dry-run JSONs WITHOUT
+recompiling: recomputes MODEL_FLOPS (fixed enc-dec decode + SSM terms) and
+MODEL_MIN_BYTES from the config, keeps the stored HLO-derived numbers
+(flops / bytes / collective bytes), and rewrites the derived ratios.
+
+Usage:  PYTHONPATH=src python scripts/refresh_roofline.py [results/dryrun2]
+"""
+import json
+import sys
+from pathlib import Path
+
+from repro.configs.registry import get_arch
+from repro.configs.shapes import SHAPES
+from repro.launch.hlo_analysis import RooflineTerms
+from repro.launch.steps import model_flops_estimate, model_min_bytes_estimate
+from repro.models.api import build_model
+
+
+def main() -> None:
+    out_dir = Path(sys.argv[1] if len(sys.argv) > 1 else "results/dryrun2")
+    aval_cache = {}
+    for f in sorted(out_dir.glob("*.json")):
+        rec = json.loads(f.read_text())
+        if rec.get("status") != "ok":
+            continue
+        cfg = get_arch(rec["arch"])
+        shape = SHAPES[rec["shape"]]
+        if rec["arch"] not in aval_cache:
+            aval_cache[rec["arch"]] = build_model(cfg).init_abstract()
+        params_aval = aval_cache[rec["arch"]]
+        mf = model_flops_estimate(cfg, params_aval, shape)
+        mb = model_min_bytes_estimate(cfg, params_aval, shape)
+        old = rec["roofline"]
+        terms = RooflineTerms(
+            compute_s=old["compute_s"], memory_s=old["memory_s"],
+            collective_s=old["collective_s"],
+            hlo_flops_global=old["hlo_flops_global"],
+            hlo_bytes_global=old["hlo_bytes_global"],
+            collective_bytes_global=old["collective_bytes_global"],
+            chips=old["chips"], model_flops=mf, model_min_bytes=mb)
+        rec["roofline"] = terms.to_dict()
+        f.write_text(json.dumps(rec, indent=1))
+        print(f"{f.name:60} frac={terms.roofline_fraction:6.3f} "
+              f"mem_att={terms.memory_attainment:6.3f} "
+              f"bound_att={terms.bound_attainment:6.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Architecture registry: --arch <id> -> ArchConfig."""
+from typing import Dict
+
+from repro.configs.base import ArchConfig
+
+
+def _load() -> Dict[str, ArchConfig]:
+    from repro.configs import (command_r_plus_104b, deepseek_coder_33b,
+                               deepseek_v3_671b, gemma_2b, internvl2_76b,
+                               llama3_2_1b, qwen2_moe_a27b, rwkv6_1_6b,
+                               seamless_m4t_medium, zamba2_7b)
+    mods = [gemma_2b, deepseek_coder_33b, llama3_2_1b, command_r_plus_104b,
+            qwen2_moe_a27b, deepseek_v3_671b, rwkv6_1_6b,
+            seamless_m4t_medium, internvl2_76b, zamba2_7b]
+    return {m.CONFIG.name: m.CONFIG for m in mods}
+
+
+REGISTRY: Dict[str, ArchConfig] = _load()
+ARCH_IDS = tuple(REGISTRY)
+
+# Beyond-paper optimized profile per architecture (EXPERIMENTS.md §Perf):
+# the config the SARA-TPU recommender converges to for the training shapes.
+#  - small dense / MoE models: ZeRO-3 DP beats Megatron TP (activation
+#    collectives dominate at d_model ~2K); flash-attention Pallas kernel.
+#  - large dense models: keep TP (weights dominate), add the flash kernel.
+#  - SSM/hybrid: Pallas WKV kernel (rwkv); hybrid keeps TP + flash kernel
+#    on its shared-attention blocks.
+OPTIMIZED_OVERRIDES: Dict[str, dict] = {
+    "gemma-2b":            {"attn_impl": "pallas", "tp_strategy": "dp_all"},
+    "llama3.2-1b":         {"attn_impl": "pallas", "tp_strategy": "dp_all"},
+    "qwen2-moe-a2.7b":     {"attn_impl": "pallas",
+                            "tp_strategy": "dp_all_noep"},
+    "deepseek-coder-33b":  {"attn_impl": "pallas"},
+    "command-r-plus-104b": {"attn_impl": "pallas"},
+    "internvl2-76b":       {"attn_impl": "pallas"},
+    "deepseek-v3-671b":    {"attn_impl": "pallas"},
+    "seamless-m4t-medium": {"attn_impl": "pallas"},
+    "rwkv6-1.6b":          {"ssm_impl": "pallas"},
+    "zamba2-7b":           {"attn_impl": "pallas"},
+}
+
+
+def get_arch(name: str, optimized: bool = False,
+             global_batch: int = 0, devices: int = 256) -> ArchConfig:
+    """optimized=True applies OPTIMIZED_OVERRIDES — SHAPE-AWARE, which is
+    the paper's whole point (the best config is workload-dependent): the
+    ZeRO-3 `dp_all*` layouts only apply when the global batch divides the
+    device count; otherwise the profile keeps TP and the kernel levers.
+    (Measured: blindly applying dp_all to prefill_32k (B=32, 256 chips)
+    replicates the batch 8x and regresses 30-80x — EXPERIMENTS.md §Perf.)"""
+    if name not in REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(REGISTRY)}")
+    cfg = REGISTRY[name]
+    if optimized:
+        ov = dict(OPTIMIZED_OVERRIDES.get(name, {}))
+        if "tp_strategy" in ov and global_batch % max(devices, 1) != 0:
+            ov.pop("tp_strategy")
+        cfg = cfg.replace(**ov)
+    return cfg

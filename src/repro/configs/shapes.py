@@ -1,0 +1,94 @@
+"""Assigned input-shape set and ShapeDtypeStruct input specs.
+
+Every (architecture × shape) cell is defined by one of these shapes:
+
+  train_4k     seq_len=4096    global_batch=256   -> lowers train_step
+  prefill_32k  seq_len=32768   global_batch=32    -> lowers prefill
+  decode_32k   seq_len=32768   global_batch=128   -> lowers serve_step
+                                                     (1 new token, 32K cache)
+  long_500k    seq_len=524288  global_batch=1     -> serve_step; only for
+                                                     sub-quadratic archs
+
+``input_specs`` returns ShapeDtypeStructs (no allocation) for the model
+inputs of a given arch+shape, matching the batch dicts the model consumes.
+Modality frontends are stubs: the spec provides precomputed frame/patch
+embeddings, per the assignment.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                   # "train" | "prefill" | "decode"
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+# sub-quadratic (state-space) archs that can run long_500k
+LONG_CONTEXT_OK = ("rwkv6-1.6b", "zamba2-7b")
+
+
+def shape_applicable(cfg: ArchConfig, shape_name: str) -> bool:
+    if shape_name in cfg.skip_shapes:
+        return False
+    if shape_name == "long_500k":
+        return cfg.name in LONG_CONTEXT_OK or cfg.family in ("ssm", "hybrid")
+    return True
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for the model inputs of this cell.
+
+    train  -> {"tokens": (B, S+1)} (+frontend features)
+    prefill-> {"tokens": (B, S)}   (+frontend features)
+    decode -> {"tokens": (B, 1)}   (cache spec comes from cache_specs())
+    """
+    B, S = shape.global_batch, shape.seq_len
+    specs: Dict[str, Any] = {}
+    if shape.kind == "train":
+        specs["tokens"] = _sds((B, S + 1), jnp.int32)
+    elif shape.kind == "prefill":
+        specs["tokens"] = _sds((B, S), jnp.int32)
+    else:
+        specs["tokens"] = _sds((B, 1), jnp.int32)
+
+    if cfg.family == "vlm" and shape.kind != "decode":
+        n_img = cfg.frontend.num_tokens
+        specs["patch_embeds"] = _sds((B, n_img, cfg.frontend.feature_dim),
+                                     jnp.dtype(cfg.compute_dtype))
+        # image tokens count against the sequence budget
+        specs["tokens"] = _sds(
+            (B, specs["tokens"].shape[1] - n_img), jnp.int32)
+    if cfg.family == "encdec" and shape.kind != "decode":
+        specs["src_features"] = _sds((B, S, cfg.frontend.feature_dim),
+                                     jnp.dtype(cfg.compute_dtype))
+    return specs
+
+
+def cache_specs(cfg: ArchConfig, shape: ShapeSpec) -> Any:
+    """Abstract cache pytree for decode cells (KV cache of seq_len)."""
+    from repro.models import serving
+    B, S = shape.global_batch, shape.seq_len
+    src = S if cfg.family == "encdec" else 0
+    return jax.eval_shape(lambda: serving.init_cache(cfg, B, S, src))

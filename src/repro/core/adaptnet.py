@@ -1,0 +1,132 @@
+"""ADAPTNET — the paper's recommendation network (Fig. 7f), in pure JAX.
+
+Architecture (faithful): one trainable embedding table per input feature
+(M, K, N), concatenated, one 128-unit hidden layer, softmax over config
+classes.  The embedding tables dominate the on-chip footprint (paper
+footnote 1): 3 x 10001 x 16 at one byte/weight ~ 480 KB of the 512 KB
+ADAPTNETX SRAM.
+
+Trained with this repo's own substrate (optim.AdamW), not an external
+framework — the framework trains its own controller.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Dict, Iterator, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.dataset import Dataset, MAX_DIM
+from repro.optim.adamw import AdamW, apply_updates, cosine_schedule
+
+EMBED_DIM = 16
+HIDDEN = 128
+VOCAB = MAX_DIM + 1
+
+
+@dataclass
+class AdaptNetConfig:
+    num_classes: int
+    embed_dim: int = EMBED_DIM
+    hidden: int = HIDDEN
+    vocab: int = VOCAB
+
+
+def init_params(key, cfg: AdaptNetConfig) -> Dict:
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    e = cfg.embed_dim
+    return {
+        "emb_m": jax.random.normal(k1, (cfg.vocab, e)) * 0.02,
+        "emb_k": jax.random.normal(k2, (cfg.vocab, e)) * 0.02,
+        "emb_n": jax.random.normal(k3, (cfg.vocab, e)) * 0.02,
+        "w1": jax.random.normal(k4, (3 * e, cfg.hidden)) *
+              (1.0 / np.sqrt(3 * e)),
+        "b1": jnp.zeros((cfg.hidden,)),
+        "w2": jax.random.normal(k5, (cfg.hidden, cfg.num_classes)) *
+              (1.0 / np.sqrt(cfg.hidden)),
+        "b2": jnp.zeros((cfg.num_classes,)),
+    }
+
+
+def logits_fn(params: Dict, feats: jnp.ndarray) -> jnp.ndarray:
+    """feats: (B, 3) int32 (M, K, N) -> (B, num_classes)."""
+    m = params["emb_m"][jnp.clip(feats[:, 0], 0, VOCAB - 1)]
+    k = params["emb_k"][jnp.clip(feats[:, 1], 0, VOCAB - 1)]
+    n = params["emb_n"][jnp.clip(feats[:, 2], 0, VOCAB - 1)]
+    h = jnp.concatenate([m, k, n], axis=-1)
+    h = jax.nn.relu(h @ params["w1"] + params["b1"])
+    return h @ params["w2"] + params["b2"]
+
+
+def predict(params: Dict, feats: np.ndarray, batch: int = 8192) -> np.ndarray:
+    f = jax.jit(lambda p, x: jnp.argmax(logits_fn(p, x), -1))
+    out = []
+    for lo in range(0, len(feats), batch):
+        out.append(np.asarray(f(params, feats[lo:lo + batch])))
+    return np.concatenate(out)
+
+
+@dataclass
+class TrainResult:
+    params: Dict
+    history: list          # (epoch, train_acc, val_acc)
+    test_accuracy: float
+    train_seconds: float
+
+
+def train(train_ds: Dataset, test_ds: Dataset, *, epochs: int = 20,
+          batch: int = 1024, lr: float = 3e-3, seed: int = 0,
+          log: bool = True) -> TrainResult:
+    cfg = AdaptNetConfig(num_classes=train_ds.num_classes)
+    params = init_params(jax.random.PRNGKey(seed), cfg)
+    n = len(train_ds.labels)
+    steps_per_epoch = n // batch
+    total_steps = epochs * steps_per_epoch
+    opt = AdamW(lr=cosine_schedule(lr, warmup=min(200, total_steps // 10),
+                                   total=total_steps),
+                weight_decay=0.0, clip_norm=1.0)
+    opt_state = opt.init(params)
+
+    @jax.jit
+    def step(params, opt_state, xb, yb):
+        def loss_fn(p):
+            lg = logits_fn(p, xb)
+            lse = jax.nn.logsumexp(lg, axis=-1)
+            gold = jnp.take_along_axis(lg, yb[:, None], -1)[:, 0]
+            loss = jnp.mean(lse - gold)
+            acc = jnp.mean((jnp.argmax(lg, -1) == yb).astype(jnp.float32))
+            return loss, acc
+        (loss, acc), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        updates, opt_state, _ = opt.update(grads, opt_state, params)
+        return apply_updates(params, updates), opt_state, loss, acc
+
+    rng = np.random.default_rng(seed)
+    feats = train_ds.features
+    labels = train_ds.labels
+    hist = []
+    t0 = time.time()
+    for ep in range(epochs):
+        order = rng.permutation(n)
+        accs = []
+        for s in range(steps_per_epoch):
+            idx = order[s * batch:(s + 1) * batch]
+            params, opt_state, loss, acc = step(
+                params, opt_state, feats[idx], labels[idx])
+            accs.append(float(acc))
+        val_acc = accuracy(params, test_ds)
+        hist.append((ep, float(np.mean(accs)), val_acc))
+        if log:
+            print(f"  adaptnet epoch {ep}: train_acc={np.mean(accs):.4f} "
+                  f"val_acc={val_acc:.4f}")
+    return TrainResult(params=params, history=hist,
+                       test_accuracy=accuracy(params, test_ds),
+                       train_seconds=time.time() - t0)
+
+
+def accuracy(params: Dict, ds: Dataset) -> float:
+    pred = predict(params, ds.features)
+    return float(np.mean(pred == ds.labels))

@@ -1,0 +1,268 @@
+"""Classical classifier baselines for Fig. 7e (ADAPTNET vs. the field).
+
+The paper compares SVCs, XGBoost and MLPs (scikit-learn / xgboost / keras).
+Those packages are unavailable offline, so the comparison set is implemented
+here in NumPy/JAX (DESIGN.md §2.1): kNN, multinomial logistic regression, a
+plain MLP on log-features (no embeddings — isolates ADAPTNET's embedding
+contribution), and a random-forest (the tree-ensemble stand-in for XGBoost).
+
+All baselines receive log-scaled features — the representation most
+favorable to them; ADAPTNET's advantage comes from per-integer embeddings
+that can express the ceil-quantization cliffs of the config space.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.dataset import Dataset
+
+
+def _logfeat(x: np.ndarray) -> np.ndarray:
+    return np.log1p(x.astype(np.float64))
+
+
+@dataclass
+class BaselineResult:
+    name: str
+    accuracy: float
+    train_seconds: float
+    predict: Callable[[np.ndarray], np.ndarray]
+
+
+# ---------------------------------------------------------------------------
+# kNN
+# ---------------------------------------------------------------------------
+
+def knn(train: Dataset, test: Dataset, k: int = 5,
+        max_train: int = 60_000) -> BaselineResult:
+    t0 = time.time()
+    rng = np.random.default_rng(0)
+    idx = rng.permutation(len(train.labels))[:max_train]
+    X = _logfeat(train.features[idx])
+    y = train.labels[idx]
+    mu, sd = X.mean(0), X.std(0) + 1e-9
+    Xn = (X - mu) / sd
+
+    Xj = jnp.asarray(Xn, jnp.float32)
+    yj = jnp.asarray(y)
+
+    @jax.jit
+    def _pred(q):
+        d = jnp.sum((Xj[None] - q[:, None]) ** 2, -1)
+        _, nb = jax.lax.top_k(-d, k)
+        votes = yj[nb]                                     # (B, k)
+        onehot = jax.nn.one_hot(votes, train.num_classes).sum(1)
+        return jnp.argmax(onehot, -1)
+
+    def predict(feats: np.ndarray) -> np.ndarray:
+        q = (_logfeat(feats) - mu) / sd
+        out = []
+        for lo in range(0, len(q), 512):
+            out.append(np.asarray(_pred(jnp.asarray(q[lo:lo + 512],
+                                                    jnp.float32))))
+        return np.concatenate(out)
+
+    acc = float(np.mean(predict(test.features) == test.labels))
+    return BaselineResult("kNN-5", acc, time.time() - t0, predict)
+
+
+# ---------------------------------------------------------------------------
+# multinomial logistic regression (a linear SVC-class stand-in)
+# ---------------------------------------------------------------------------
+
+def logistic_regression(train: Dataset, test: Dataset, epochs: int = 30,
+                        lr: float = 0.5) -> BaselineResult:
+    t0 = time.time()
+    X = _logfeat(train.features)
+    mu, sd = X.mean(0), X.std(0) + 1e-9
+    Xn = jnp.asarray((X - mu) / sd, jnp.float32)
+    y = jnp.asarray(train.labels)
+    C = train.num_classes
+    W = jnp.zeros((X.shape[1], C))
+    b = jnp.zeros((C,))
+
+    @jax.jit
+    def step(W, b):
+        def loss(Wb):
+            W_, b_ = Wb
+            lg = Xn @ W_ + b_
+            lse = jax.nn.logsumexp(lg, -1)
+            gold = jnp.take_along_axis(lg, y[:, None], -1)[:, 0]
+            return jnp.mean(lse - gold)
+        g = jax.grad(loss)((W, b))
+        return W - lr * g[0], b - lr * g[1]
+
+    for _ in range(epochs):
+        W, b = step(W, b)
+
+    Wn, bn = np.asarray(W), np.asarray(b)
+
+    def predict(feats: np.ndarray) -> np.ndarray:
+        q = (_logfeat(feats) - mu) / sd
+        return np.argmax(q @ Wn + bn, -1)
+
+    acc = float(np.mean(predict(test.features) == test.labels))
+    return BaselineResult("LogReg", acc, time.time() - t0, predict)
+
+
+# ---------------------------------------------------------------------------
+# plain MLP on log features (no embeddings)
+# ---------------------------------------------------------------------------
+
+def plain_mlp(train: Dataset, test: Dataset, hidden: Tuple[int, ...] = (128, 128),
+              epochs: int = 20, batch: int = 1024,
+              lr: float = 3e-3) -> BaselineResult:
+    from repro.optim.adamw import AdamW, apply_updates
+    t0 = time.time()
+    X = _logfeat(train.features)
+    mu, sd = X.mean(0), X.std(0) + 1e-9
+    Xn = (X - mu) / sd
+    y = train.labels
+    C = train.num_classes
+    key = jax.random.PRNGKey(0)
+    sizes = (X.shape[1],) + hidden + (C,)
+    params = []
+    for i in range(len(sizes) - 1):
+        key, k = jax.random.split(key)
+        params.append({
+            "w": jax.random.normal(k, (sizes[i], sizes[i + 1])) /
+                 np.sqrt(sizes[i]),
+            "b": jnp.zeros((sizes[i + 1],))})
+
+    def fwd(params, x):
+        for i, layer in enumerate(params):
+            x = x @ layer["w"] + layer["b"]
+            if i < len(params) - 1:
+                x = jax.nn.relu(x)
+        return x
+
+    opt = AdamW(lr=lr, weight_decay=0.0)
+    opt_state = opt.init(params)
+
+    @jax.jit
+    def step(params, opt_state, xb, yb):
+        def loss(p):
+            lg = fwd(p, xb)
+            lse = jax.nn.logsumexp(lg, -1)
+            gold = jnp.take_along_axis(lg, yb[:, None], -1)[:, 0]
+            return jnp.mean(lse - gold)
+        grads = jax.grad(loss)(params)
+        updates, opt_state2, _ = opt.update(grads, opt_state, params)
+        return apply_updates(params, updates), opt_state2
+
+    rng = np.random.default_rng(0)
+    n = len(y)
+    for _ in range(epochs):
+        order = rng.permutation(n)
+        for s in range(n // batch):
+            idx = order[s * batch:(s + 1) * batch]
+            params, opt_state = step(params, opt_state,
+                                     jnp.asarray(Xn[idx], jnp.float32),
+                                     jnp.asarray(y[idx]))
+
+    def predict(feats: np.ndarray) -> np.ndarray:
+        q = jnp.asarray((_logfeat(feats) - mu) / sd, jnp.float32)
+        return np.asarray(jnp.argmax(fwd(params, q), -1))
+
+    acc = float(np.mean(predict(test.features) == test.labels))
+    return BaselineResult("MLP(128,128)", acc, time.time() - t0, predict)
+
+
+# ---------------------------------------------------------------------------
+# random forest (axis-aligned CART, histogram splits) — XGBoost stand-in
+# ---------------------------------------------------------------------------
+
+class _Tree:
+    __slots__ = ("feat", "thr", "left", "right", "leaf")
+
+    def __init__(self):
+        self.leaf = None
+
+
+def _grow(X, y, C, depth, max_depth, min_leaf, rng) -> _Tree:
+    node = _Tree()
+    if depth >= max_depth or len(y) < 2 * min_leaf or \
+            np.all(y == y[0]):
+        node.leaf = np.bincount(y, minlength=C)
+        return node
+    best = (None, None, np.inf)
+    counts = np.bincount(y, minlength=C).astype(np.float64)
+    total_gini = 1.0 - np.sum((counts / len(y)) ** 2)
+    feats = rng.choice(X.shape[1], size=X.shape[1], replace=False)
+    for f in feats:
+        xs = X[:, f]
+        qs = np.quantile(xs, np.linspace(0.05, 0.95, 16))
+        for thr in np.unique(qs):
+            mask = xs <= thr
+            nl = int(mask.sum())
+            if nl < min_leaf or len(y) - nl < min_leaf:
+                continue
+            cl = np.bincount(y[mask], minlength=C).astype(np.float64)
+            cr = counts - cl
+            gl = 1.0 - np.sum((cl / max(nl, 1)) ** 2)
+            gr = 1.0 - np.sum((cr / max(len(y) - nl, 1)) ** 2)
+            g = (nl * gl + (len(y) - nl) * gr) / len(y)
+            if g < best[2]:
+                best = (f, thr, g)
+    if best[0] is None or best[2] >= total_gini:
+        node.leaf = np.bincount(y, minlength=C)
+        return node
+    f, thr, _ = best
+    mask = X[:, f] <= thr
+    node.feat, node.thr = f, thr
+    node.left = _grow(X[mask], y[mask], C, depth + 1, max_depth, min_leaf, rng)
+    node.right = _grow(X[~mask], y[~mask], C, depth + 1, max_depth, min_leaf,
+                       rng)
+    return node
+
+
+def _tree_predict_counts(node: _Tree, X: np.ndarray, out: np.ndarray,
+                         idx: np.ndarray):
+    if node.leaf is not None:
+        out[idx] += node.leaf / max(node.leaf.sum(), 1)
+        return
+    mask = X[idx, node.feat] <= node.thr
+    _tree_predict_counts(node.left, X, out, idx[mask])
+    _tree_predict_counts(node.right, X, out, idx[~mask])
+
+
+def random_forest(train: Dataset, test: Dataset, n_trees: int = 12,
+                  max_depth: int = 12, max_train: int = 40_000
+                  ) -> BaselineResult:
+    t0 = time.time()
+    rng = np.random.default_rng(0)
+    sel = rng.permutation(len(train.labels))[:max_train]
+    X = _logfeat(train.features[sel])
+    y = train.labels[sel].astype(np.int64)
+    C = train.num_classes
+    trees = []
+    for t in range(n_trees):
+        bs = rng.integers(0, len(y), len(y))
+        trees.append(_grow(X[bs], y[bs], C, 0, max_depth, 8,
+                           np.random.default_rng(t)))
+
+    def predict(feats: np.ndarray) -> np.ndarray:
+        Xq = _logfeat(feats)
+        probs = np.zeros((len(Xq), C))
+        for tree in trees:
+            _tree_predict_counts(tree, Xq, probs, np.arange(len(Xq)))
+        return np.argmax(probs, -1)
+
+    acc = float(np.mean(predict(test.features) == test.labels))
+    return BaselineResult(f"RandomForest-{n_trees}", acc,
+                          time.time() - t0, predict)
+
+
+def run_all(train: Dataset, test: Dataset) -> Dict[str, BaselineResult]:
+    out = {}
+    for fn in (logistic_regression, knn, plain_mlp, random_forest):
+        r = fn(train, test)
+        out[r.name] = r
+    return out

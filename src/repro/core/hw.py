@@ -1,0 +1,65 @@
+"""Hardware constants.
+
+Two hardware models live here:
+
+1. TPU v5e-class chip (the roofline TARGET for the dry-run analysis).
+2. The paper's 28nm accelerator technology constants (for the SCALE-Sim-
+   equivalent cost model, energy/EDP reproduction, and PPA arithmetic).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+# ---------------------------------------------------------------------------
+# TPU roofline target (per chip)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class TPUChip:
+    peak_bf16_flops: float = 197e12     # FLOP/s
+    hbm_bw: float = 819e9               # B/s
+    ici_link_bw: float = 50e9           # B/s per link
+    hbm_bytes: float = 16e9             # HBM capacity
+    vmem_bytes: float = 16 * 2 ** 20    # ~16 MiB VMEM
+    mxu_dim: int = 128                  # systolic MXU tile
+
+
+TPU_V5E = TPUChip()
+
+
+# ---------------------------------------------------------------------------
+# Paper-side constants (28nm-class; sources noted)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class AcceleratorTech:
+    freq_hz: float = 1e9                # SAGAR runs at 1 GHz (paper §V-B)
+    # per-op energies (28nm-class, pJ) — Dally et al. CACM'20 + Horowitz
+    # ISSCC'14 scaling; the paper cites 100 fJ/bit-mm wire energy.
+    e_mac_pj: float = 1.0               # one 8-bit-ish MAC
+    e_sram_read_pj_per_byte: float = 6.0
+    e_sram_write_pj_per_byte: float = 8.0
+    e_dram_pj_per_byte: float = 160.0
+    e_wire_fj_per_bit_mm: float = 100.0
+    e_noc_hop_pj_per_byte: float = 2.0  # mesh NoC hop (router+link)
+    # NoC latency per hop (cycles) for the distributed baseline (OpenSMART)
+    noc_hop_cycles: float = 1.0
+    # SAGAR bypass pipelining: 8 systolic-cells per pipeline stage (Fig 13h)
+    bypass_cells_per_stage: int = 8
+
+    # published PnR numbers (paper Fig. 13b) used by core/ppa.py
+    sagar_area_mm2: float = 81.90
+    sagar_power_w: float = 13.01
+    sagar_tops: float = 32.768
+    adaptnetx_area_frac: float = 0.0865
+    adaptnetx_power_frac: float = 0.0136
+
+
+TECH_28NM = AcceleratorTech()
+
+
+# Dataflow ids (paper: output/weight/input stationary)
+OS, WS, IS = 0, 1, 2
+DATAFLOW_NAMES = {OS: "OS", WS: "WS", IS: "IS"}

@@ -1,0 +1,111 @@
+"""SARA — the Self-Adaptive layer that couples ADAPTNET to the execution
+substrate (paper §IV, adapted to TPU per DESIGN.md §2).
+
+``SaraDispatcher`` is the framework-level realization of Fig. 2: every GEMM
+site can ask it for a configuration.  Two recommendation paths:
+
+  - "oracle": argmin over the analytic TPU tile cost model (exhaustive
+    search — what the paper's software stack would do at compile time);
+  - "adaptnet": O(1) lookup through a trained ADAPTNET-TPU (what SARA does
+    in hardware at runtime).  The paper's claim — the learned model replaces
+    search at equal quality — is validated in tests/benchmarks by comparing
+    the two paths.
+
+``sara_gemm`` executes the GEMM with the recommended config through the
+Pallas RSA kernel (kernels/rsa_gemm.py) or, off-TPU, through XLA with the
+recommended sharding plan.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import tpu_costmodel as tcm
+from repro.core.adaptnet import AdaptNetConfig, init_params, logits_fn
+
+
+@dataclass
+class SaraDispatcher:
+    mode: str = "oracle"                   # "oracle" | "adaptnet"
+    adaptnet_params: Optional[Dict] = None
+    use_pallas: bool = False
+    _cache: Dict = None
+
+    def __post_init__(self):
+        self._cache = {}
+
+    # -- recommendation ------------------------------------------------------
+    def recommend(self, M: int, K: int, N: int) -> tcm.TPUTileConfig:
+        key = (M, K, N)
+        if key in self._cache:
+            return self._cache[key]
+        if self.mode == "adaptnet" and self.adaptnet_params is not None:
+            feats = jnp.array([[M, K, N]], jnp.int32)
+            cid = int(jnp.argmax(logits_fn(self.adaptnet_params, feats), -1)[0])
+        else:
+            cid = int(tcm.best_tile_config(M, K, N))
+        cfg = tcm.TILE_CONFIGS[cid]
+        self._cache[key] = cfg
+        return cfg
+
+    def recommend_sharding(self, M: int, K: int, N: int,
+                           data: int = 16, model: int = 16) -> tcm.ShardPlan:
+        return tcm.plan_gemm_sharding(M, K, N, data=data, model=model)
+
+    # -- execution -----------------------------------------------------------
+    def gemm(self, x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+        """Self-adaptive GEMM: (..., M, K) @ (K, N)."""
+        M = int(np.prod(x.shape[:-1]))
+        K = int(x.shape[-1])
+        N = int(w.shape[-1])
+        cfg = self.recommend(M, K, N)
+        if self.use_pallas:
+            from repro.kernels import ops
+            x2 = x.reshape(M, K)
+            out = ops.rsa_gemm(x2, w, block_m=cfg.block_m,
+                               block_n=cfg.block_n, block_k=cfg.block_k,
+                               mode=cfg.mode)
+            return out.reshape(x.shape[:-1] + (N,))
+        return jnp.einsum("...k,kn->...n", x, w)
+
+
+def train_adaptnet_tpu(n_samples: int = 150_000, epochs: int = 10,
+                       seed: int = 0, log: bool = False):
+    """Train ADAPTNET-TPU on the TPU tile-config space; returns
+    (params, test_accuracy, geomean_rel_time)."""
+    from repro.core import adaptnet as A
+    from repro.core.dataset import Dataset, sample_workloads
+
+    feats = sample_workloads(n_samples, dist="loguniform", seed=seed)
+    labels = tcm.best_tile_config(feats[:, 0], feats[:, 1],
+                                  feats[:, 2]).astype(np.int32)
+    ds = Dataset(feats, labels, num_classes=tcm.NUM_TILE_CLASSES)
+    tr, te = ds.split()
+    res = A.train(tr, te, epochs=epochs, log=log)
+    pred = A.predict(res.params, te.features)
+    cost = tcm.tile_cost_seconds(te.features[:, 0], te.features[:, 1],
+                                 te.features[:, 2])
+    chosen = np.take_along_axis(cost, pred[:, None].astype(int), -1)[:, 0]
+    rel = chosen / cost.min(-1)
+    geomean = float(np.exp(np.mean(np.log(np.clip(rel, 1.0, None)))))
+    return res.params, res.test_accuracy, geomean
+
+
+_GLOBAL: Optional[SaraDispatcher] = None
+
+
+def global_dispatcher() -> SaraDispatcher:
+    global _GLOBAL
+    if _GLOBAL is None:
+        _GLOBAL = SaraDispatcher()
+    return _GLOBAL
+
+
+def sara_gemm(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    return global_dispatcher().gemm(x, w)

@@ -1,0 +1,136 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+Pad-to-block handling, dtype plumbing, and the interpret switch live here:
+``interpret=True`` (default) executes the kernel bodies in Python on CPU for
+validation; on real TPU hardware pass ``interpret=False``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hw import OS
+from repro.kernels.adaptnetx import adaptnetx_pallas
+from repro.kernels.flash_attn import flash_attention_pallas
+from repro.kernels.linear_attn import linear_attn_pallas
+from repro.kernels.rsa_gemm import rsa_gemm_pallas
+
+
+def _pad_to(x: jnp.ndarray, axis: int, mult: int) -> jnp.ndarray:
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k",
+                                             "mode", "interpret"))
+def rsa_gemm(a: jnp.ndarray, b: jnp.ndarray, *, block_m: int = 128,
+             block_n: int = 128, block_k: int = 256, mode: int = OS,
+             interpret: bool = True) -> jnp.ndarray:
+    """(M, K) @ (K, N) with SARA-configurable tiling; arbitrary shapes."""
+    M, N = a.shape[0], b.shape[1]
+    a2 = _pad_to(_pad_to(a, 0, block_m), 1, block_k)
+    b2 = _pad_to(_pad_to(b, 0, block_k), 1, block_n)
+    out = rsa_gemm_pallas(a2, b2, block_m=block_m, block_n=block_n,
+                          block_k=block_k, mode=mode, interpret=interpret)
+    return out[:M, :N]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def adaptnetx_recommend(ids: jnp.ndarray, params: dict, *,
+                        interpret: bool = True) -> jnp.ndarray:
+    """One fused recommendation query.  ids: (3,) int32 -> logits."""
+    return adaptnetx_pallas(
+        ids, params["emb_m"], params["emb_k"], params["emb_n"],
+        params["w1"], params["b1"], params["w2"], params["b2"],
+        interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
+                                             "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 512,
+                    block_k: int = 512, interpret: bool = True):
+    """Flash attention with arbitrary Sq/Skv (pads to block multiples).
+
+    q: (B, Sq, H, hd); k: (B, Skv, KVH, hd); v: (B, Skv, KVH, hd_v)
+    -> (B, Sq, H, hd_v).  Differentiable (custom-vjp Pallas backward).
+    """
+    B, Sq, H, hd = q.shape
+    Skv = k.shape[1]
+    bq = min(block_q, max(Sq, 1))
+    bk = min(block_k, max(Skv, 1))
+    scale = 1.0 / (hd ** 0.5)
+    q2 = _pad_to(q, 1, bq)
+    k2 = _pad_to(k, 1, bk)
+    v2 = _pad_to(v, 1, bk)
+    o = flash_attention_pallas(q2, k2, v2, causal, scale, Skv, bq, bk,
+                               interpret)
+    return o[:, :Sq]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def linear_attn(r, k, v, logw, u, *, chunk: int = 64,
+                interpret: bool = True):
+    """Chunked linear attention; pads S to the chunk multiple.
+
+    r,k,logw: (BH, S, K); v: (BH, S, V); u: (BH, K) -> (BH, S, V).
+    """
+    S = r.shape[1]
+    rr = _pad_to(r, 1, chunk)
+    kk = _pad_to(k, 1, chunk)
+    vv = _pad_to(v, 1, chunk)
+    ww = _pad_to(logw, 1, chunk)
+    o = linear_attn_pallas(rr, kk, vv, ww, u, chunk=chunk,
+                           interpret=interpret)
+    return o[:, :S]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(6, 7))
+def wkv_attention(r, k, v, logw, u, state0, chunk: int = 64,
+                  interpret: bool = True):
+    """RWKV6/GLA chunked linear attention, Pallas fwd + reference-VJP bwd.
+
+    r, k, logw: (B, S, H, K); v: (B, S, H, V); u: (H, K);
+    state0: (B, H, K, V) -> (o: (B, S, H, V), state: (B, H, K, V)).
+    Backward recomputes through the pure-jnp chunked scan (models/ssm.py),
+    so train cells stay differentiable; the fwd-only prefill/decode path is
+    the §Perf target the kernel accelerates.
+    """
+    return _wkv_fwd_impl(r, k, v, logw, u, state0, chunk, interpret)
+
+
+def _wkv_fwd_impl(r, k, v, logw, u, state0, chunk, interpret):
+    from repro.kernels.linear_attn import linear_attn_bshk_pallas
+    S = r.shape[1]
+    rr = _pad_to(r, 1, chunk)
+    kk = _pad_to(k, 1, chunk)
+    vv = _pad_to(v, 1, chunk)
+    ww = _pad_to(logw, 1, chunk)
+    o, sf = linear_attn_bshk_pallas(rr, kk, vv, ww, u, state0, chunk=chunk,
+                                    interpret=interpret)
+    return o[:, :S], sf
+
+
+def _wkv_vjp_fwd(r, k, v, logw, u, state0, chunk, interpret):
+    out = _wkv_fwd_impl(r, k, v, logw, u, state0, chunk, interpret)
+    return out, (r, k, v, logw, u, state0)
+
+
+def _wkv_vjp_bwd(chunk, interpret, res, cts):
+    from repro.models.ssm import _wkv_chunked
+    r, k, v, logw, u, state0 = res
+    _, vjp = jax.vjp(
+        lambda r_, k_, v_, w_, u_, s_: _wkv_chunked(r_, k_, v_, w_, u_, s_,
+                                                    chunk),
+        r, k, v, logw, u, state0)
+    return vjp(cts)
+
+
+wkv_attention.defvjp(_wkv_vjp_fwd, _wkv_vjp_bwd)

@@ -1,0 +1,67 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rsa_gemm_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """f32-accumulated GEMM (all modes compute the same function)."""
+    return jnp.dot(a, b, preferred_element_type=jnp.float32).astype(a.dtype)
+
+
+def adaptnetx_ref(ids, emb_m, emb_k, emb_n, w1, b1, w2, b2) -> jnp.ndarray:
+    x = jnp.concatenate([emb_m[ids[0]], emb_k[ids[1]], emb_n[ids[2]]], -1)
+    h = jnp.maximum(x.astype(jnp.float32) @ w1.astype(jnp.float32)
+                    + b1.astype(jnp.float32), 0.0)
+    return h @ w2.astype(jnp.float32) + b2.astype(jnp.float32)
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True,
+                        kv_len: int | None = None,
+                        scale: float | None = None) -> jnp.ndarray:
+    """Naive f32 softmax attention.  q: (B,Sq,H,hd); k/v: (B,Skv,KVH,hd[_v])."""
+    B, Sq, H, hd = q.shape
+    Skv, KVH = k.shape[1], k.shape[2]
+    G = H // KVH
+    if scale is None:
+        scale = 1.0 / (hd ** 0.5)
+    if kv_len is None:
+        kv_len = Skv
+    qf = q.astype(jnp.float32).reshape(B, Sq, KVH, G, hd)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qf, kf) * scale
+    mask = (jnp.arange(Skv) < kv_len)[None, :]
+    if causal:
+        mask = mask & (jnp.arange(Skv)[None, :] <= jnp.arange(Sq)[:, None])
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, vf)
+    return o.reshape(B, Sq, H, vf.shape[-1]).astype(q.dtype)
+
+
+def linear_attn_ref(r, k, v, logw, u) -> jnp.ndarray:
+    """Exact sequential recurrence (the definition, O(S) steps).
+
+    r,k,logw: (BH, S, K); v: (BH, S, V); u: (BH, K).
+    o_t = r_t (S_{t-1} + diag(u) k_t v_t^T);  S_t = diag(w_t) S_{t-1} + k v^T
+    """
+    BH, S, K = r.shape
+    V = v.shape[-1]
+
+    def per_bh(rb, kb, vb, wb, ub):
+        def step(h, xs):
+            rt, kt, vt, wt = xs
+            o = rt @ (h + ub[:, None] * (kt[:, None] * vt[None, :]))
+            h = jnp.exp(wt)[:, None] * h + kt[:, None] * vt[None, :]
+            return h, o
+
+        h0 = jnp.zeros((K, V), jnp.float32)
+        _, o = jax.lax.scan(step, h0, (rb, kb, vb, wb))
+        return o
+
+    return jax.vmap(per_bh)(r.astype(jnp.float32), k.astype(jnp.float32),
+                            v.astype(jnp.float32), logw.astype(jnp.float32),
+                            u.astype(jnp.float32)).astype(r.dtype)

@@ -1,0 +1,124 @@
+"""RSA GEMM — the TPU-native reconfigurable-tiling GEMM kernel.
+
+The RSA's (sub-array dims x dataflow) configuration space maps onto the
+Pallas tiling space (DESIGN.md §2): BlockSpec tile sizes are the sub-array
+dimensions, and the *residency mode* — which operand's tile stays pinned in
+VMEM while the grid iterates — is the dataflow:
+
+  OS (output-stationary): grid (Mt, Nt, Kt), K innermost; the f32
+      accumulator tile lives in VMEM scratch for the whole K loop.
+  WS (weight-stationary): grid (Nt, Kt, Mt), M innermost; the B (weight)
+      tile is revisited with a constant index over the whole M sweep, so it
+      stays resident; partial sums accumulate into the output tile.
+  IS (input-stationary):  grid (Mt, Kt, Nt), N innermost; the A (input)
+      tile stays resident; partial sums accumulate into the output tile.
+
+Block shapes are the SARA-recommended configuration (core/sara.py); MXU
+alignment wants multiples of 128 in M/N and the lane dim.  Validated in
+interpret mode against kernels/ref.py on CPU; compiled path targets TPU.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.hw import IS, OS, WS
+
+
+def _kernel_os(a_ref, b_ref, o_ref, acc_ref, *, n_k: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(a_ref[...], b_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == n_k - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _kernel_psum(a_ref, b_ref, o_ref, *, k_axis: int):
+    """WS/IS: accumulate partial sums directly into the revisited out tile."""
+    prod = jnp.dot(a_ref[...], b_ref[...],
+                   preferred_element_type=jnp.float32).astype(o_ref.dtype)
+
+    @pl.when(pl.program_id(k_axis) == 0)
+    def _init():
+        o_ref[...] = prod
+
+    @pl.when(pl.program_id(k_axis) != 0)
+    def _acc():
+        o_ref[...] = o_ref[...] + prod
+
+
+def rsa_gemm_pallas(a: jnp.ndarray, b: jnp.ndarray, *, block_m: int,
+                    block_n: int, block_k: int, mode: int = OS,
+                    interpret: bool = True) -> jnp.ndarray:
+    """a: (M, K), b: (K, N) — M, K, N must be multiples of the blocks
+    (ops.rsa_gemm pads arbitrary shapes)."""
+    M, K = a.shape
+    K2, N = b.shape
+    assert K == K2, (a.shape, b.shape)
+    assert M % block_m == 0 and N % block_n == 0 and K % block_k == 0
+    mt, nt, kt = M // block_m, N // block_n, K // block_k
+    out_shape = jax.ShapeDtypeStruct((M, N), a.dtype)
+
+    if mode == OS:
+        grid = (mt, nt, kt)
+        return pl.pallas_call(
+            functools.partial(_kernel_os, n_k=kt),
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((block_m, block_k), lambda m, n, k: (m, k)),
+                pl.BlockSpec((block_k, block_n), lambda m, n, k: (k, n)),
+            ],
+            out_specs=pl.BlockSpec((block_m, block_n),
+                                   lambda m, n, k: (m, n)),
+            out_shape=out_shape,
+            scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+            compiler_params=pltpu.CompilerParams(
+                dimension_semantics=("parallel", "parallel", "arbitrary")),
+            interpret=interpret,
+        )(a, b)
+
+    if mode == WS:
+        grid = (nt, kt, mt)       # B tile constant over the M sweep
+        return pl.pallas_call(
+            functools.partial(_kernel_psum, k_axis=1),
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((block_m, block_k), lambda n, k, m: (m, k)),
+                pl.BlockSpec((block_k, block_n), lambda n, k, m: (k, n)),
+            ],
+            out_specs=pl.BlockSpec((block_m, block_n),
+                                   lambda n, k, m: (m, n)),
+            out_shape=out_shape,
+            compiler_params=pltpu.CompilerParams(
+                dimension_semantics=("parallel", "arbitrary", "arbitrary")),
+            interpret=interpret,
+        )(a, b)
+
+    if mode == IS:
+        grid = (mt, kt, nt)       # A tile constant over the N sweep
+        return pl.pallas_call(
+            functools.partial(_kernel_psum, k_axis=1),
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((block_m, block_k), lambda m, k, n: (m, k)),
+                pl.BlockSpec((block_k, block_n), lambda m, k, n: (k, n)),
+            ],
+            out_specs=pl.BlockSpec((block_m, block_n),
+                                   lambda m, k, n: (m, n)),
+            out_shape=out_shape,
+            compiler_params=pltpu.CompilerParams(
+                dimension_semantics=("parallel", "arbitrary", "arbitrary")),
+            interpret=interpret,
+        )(a, b)
+
+    raise ValueError(f"unknown mode {mode}")

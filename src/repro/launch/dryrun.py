@@ -1,0 +1,152 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST run before any jax import: jax locks the device
+count at first initialization.  This flag is dry-run-only — tests and
+benchmarks see the single real CPU device.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3.2-1b \
+      --shape train_4k [--multi-pod] [--out results/dryrun2]
+  PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all
+
+Per cell this records: compile wall time, memory_analysis (per-device bytes),
+cost_analysis (FLOPs/bytes), parsed collective bytes by opcode, the roofline
+terms of §Roofline, and MODEL_FLOPS — into one JSON per cell.
+"""
+
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: Path,
+             force: bool = False, optimized: bool = False) -> dict:
+    import jax
+    from repro.configs.registry import get_arch
+    from repro.configs.shapes import SHAPES, shape_applicable
+    from repro.launch.hlo_analysis import roofline_from_compiled
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.steps import (lower_for_cell, model_flops_estimate,
+                                    model_min_bytes_estimate)
+
+    mesh_tag = "pod2" if multi_pod else "pod1"
+    out_path = out_dir / f"{arch}__{shape_name}__{mesh_tag}.json"
+    if out_path.exists() and not force:
+        rec = json.loads(out_path.read_text())
+        if rec.get("status") in ("ok", "skipped"):
+            print(f"[cached] {arch} x {shape_name} x {mesh_tag}: "
+                  f"{rec['status']}")
+            return rec
+
+    cfg = get_arch(arch, optimized=optimized,
+                   global_batch=SHAPES[shape_name].global_batch,
+                   devices=512 if multi_pod else 256)
+    shape = SHAPES[shape_name]
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_tag,
+           "kind": shape.kind}
+    if not shape_applicable(cfg, shape_name):
+        rec["status"] = "skipped"
+        rec["reason"] = ("long_500k needs sub-quadratic attention; "
+                         f"{arch} is full-attention (DESIGN.md §4)")
+        out_path.write_text(json.dumps(rec, indent=1))
+        print(f"[skip]   {arch} x {shape_name}: N/A")
+        return rec
+
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        chips = int(mesh.devices.size)
+        t0 = time.time()
+        lowered, model, params_aval = lower_for_cell(cfg, mesh, shape)
+        t1 = time.time()
+        compiled = lowered.compile()
+        t2 = time.time()
+
+        ma = compiled.memory_analysis()
+        mem = {}
+        if ma is not None:
+            for f in ("generated_code_size_in_bytes",
+                      "argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "alias_size_in_bytes"):
+                mem[f] = int(getattr(ma, f, 0))
+            mem["per_device_hbm_bytes"] = (
+                mem["argument_size_in_bytes"] + mem["temp_size_in_bytes"]
+                + mem["output_size_in_bytes"] - mem["alias_size_in_bytes"])
+        print(f"  memory_analysis: {mem}")
+
+        mf = model_flops_estimate(cfg, params_aval, shape)
+        mb = model_min_bytes_estimate(cfg, params_aval, shape)
+        terms, stats = roofline_from_compiled(compiled, chips, model_flops=mf,
+                                              model_min_bytes=mb)
+        print(f"  hlo (trip-weighted, per-dev): flops={stats.flops:.3e} "
+              f"bytes={stats.hbm_bytes:.3e} "
+              f"coll={stats.collective_bytes:.3e}")
+
+        rec.update({
+            "status": "ok",
+            "chips": chips,
+            "lower_s": round(t1 - t0, 2),
+            "compile_s": round(t2 - t1, 2),
+            "num_params": int(model.num_params(params_aval)),
+            "memory": mem,
+            "cost_analysis_raw": stats.raw_cost_analysis,
+            "collectives": {"bytes_by_op": stats.collective_bytes_by_op,
+                            "count_by_op": stats.collective_count_by_op},
+            "roofline": terms.to_dict(),
+        })
+        print(f"[ok]     {arch} x {shape_name} x {mesh_tag}: "
+              f"compile {rec['compile_s']}s  dominant={terms.dominant}  "
+              f"roofline_frac={terms.roofline_fraction:.3f}")
+    except Exception as e:  # noqa: BLE001 — record the failure, keep sweeping
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+        print(f"[FAIL]   {arch} x {shape_name} x {mesh_tag}: {rec['error']}")
+
+    out_path.write_text(json.dumps(rec, indent=1))
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="results/dryrun2")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--optimized", action="store_true",
+                    help="apply per-arch OPTIMIZED_OVERRIDES (beyond-paper "
+                         "configs from EXPERIMENTS.md §Perf)")
+    args = ap.parse_args()
+
+    from repro.configs.registry import ARCH_IDS
+    from repro.configs.shapes import SHAPES
+
+    out_dir = Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    archs = list(ARCH_IDS) if args.arch == "all" else args.arch.split(",")
+    shapes = list(SHAPES) if args.shape == "all" else args.shape.split(",")
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    n_ok = n_fail = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                rec = run_cell(arch, shape, mp, out_dir, force=args.force,
+                               optimized=args.optimized)
+                if rec["status"] == "error":
+                    n_fail += 1
+                else:
+                    n_ok += 1
+    print(f"\ndry-run sweep done: {n_ok} ok/skipped, {n_fail} failed")
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,96 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""§Perf hillclimb driver: run a named VARIANT (a set of config overrides)
+of one (arch x shape) cell, record its roofline terms next to the baseline,
+and print the delta on every term.
+
+Each iteration of the hypothesis -> change -> measure -> validate loop is one
+invocation; results accumulate in results/hillclimb/<arch>__<shape>.json as
+an ordered log that EXPERIMENTS.md §Perf reproduces.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.hillclimb --arch gemma-2b \
+      --shape train_4k --variant causal_skip \
+      --hypothesis "tri-pairs halve attention score traffic" \
+      --set flash_causal_skip=True
+"""
+
+import argparse
+import json
+from pathlib import Path
+
+from repro.launch.profile import parse_override, profile_cell
+
+
+def run_variant(arch: str, shape: str, variant: str, overrides: dict,
+                hypothesis: str, out_dir: Path, multi_pod: bool = False,
+                force: bool = False) -> dict:
+    out_path = out_dir / f"{arch}__{shape}.json"
+    log = json.loads(out_path.read_text()) if out_path.exists() else []
+    for e in log:
+        if e["variant"] == variant and not force:
+            print(f"[cached] {variant}")
+            return e
+
+    out = profile_cell(arch, shape, multi_pod, overrides, top=0)
+    terms, stats = out["terms"], out["stats"]
+    ma = out["compiled"].memory_analysis()
+    per_dev = 0
+    if ma is not None:
+        per_dev = (ma.argument_size_in_bytes + ma.temp_size_in_bytes
+                   + ma.output_size_in_bytes - ma.alias_size_in_bytes)
+    entry = {
+        "variant": variant,
+        "overrides": {k: repr(v) for k, v in overrides.items()},
+        "hypothesis": hypothesis,
+        "compile_s": round(out["compile_s"], 1),
+        "per_device_hbm_bytes": int(per_dev),
+        "vmem_credited_bodies": stats.vmem_credited_bodies,
+        "collective_bytes_by_op": stats.collective_bytes_by_op,
+        "roofline": terms.to_dict(),
+    }
+    log = [e for e in log if e["variant"] != variant] + [entry]
+    out_dir.mkdir(parents=True, exist_ok=True)
+    out_path.write_text(json.dumps(log, indent=1))
+
+    base = next((e for e in log if e["variant"] == "baseline"), None)
+    _print_entry(entry, base)
+    return entry
+
+
+def _print_entry(e: dict, base: dict | None) -> None:
+    r = e["roofline"]
+    print(f"\n== {e['variant']}  ({e['hypothesis']})")
+    print(f"   overrides: {e['overrides']}")
+    for t in ("compute_s", "memory_s", "collective_s"):
+        delta = ""
+        if base and base is not e:
+            b = base["roofline"][t]
+            if b > 0:
+                delta = f"  ({(r[t] - b) / b * 100:+.1f}% vs baseline)"
+        print(f"   {t:14} {r[t]:10.4f}{delta}")
+    print(f"   dominant={r['dominant']}  bound_attain={r['bound_attainment']:.4f} "
+          f" roofline_frac={r['roofline_fraction']:.4f}  "
+          f"hbm/dev={e['per_device_hbm_bytes'] / 1e9:.2f}GB")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--variant", required=True)
+    ap.add_argument("--hypothesis", default="")
+    ap.add_argument("--set", action="append", default=[])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--out", default="results/hillclimb")
+    args = ap.parse_args()
+
+    overrides = dict(parse_override(kv) for kv in args.set)
+    run_variant(args.arch, args.shape, args.variant, overrides,
+                args.hypothesis, Path(args.out), args.multi_pod, args.force)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,678 @@
+"""Post-optimization HLO analysis: trip-count-aware FLOPs / bytes /
+collective traffic, and the §Roofline terms.
+
+Why not ``compiled.cost_analysis()`` alone?  XLA's cost analysis counts each
+``while`` body ONCE — a 61-layer scanned transformer reports ~1/61 of its
+real FLOPs (verified empirically on the CPU backend).  Since every model
+here runs scan-over-layers (mandatory for 512-device compile times), we parse
+the optimized HLO text ourselves:
+
+1. split the module into computations;
+2. build the call graph (while body/condition, call/conditional, fusion);
+3. extract while trip counts from the loop-condition constant;
+4. propagate execution weights from ENTRY through the graph;
+5. count, per computation and weighted:
+   - FLOPs of every ``dot`` (2 * prod(out_shape) * contracted size, operand
+     shapes resolved through the instruction table),
+   - HBM traffic at fusion boundaries (operands + results of non-trivial
+     instructions — XLA has already fused elementwise chains, so fusion
+     parameters/results are exactly the tensors that cross HBM),
+   - collective bytes by opcode (all-reduce counted 2x; reduce-scatter
+     scaled by group size).
+
+Shapes in SPMD HLO are PER-DEVICE; *_global figures multiply by chip count.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.hw import TPU_V5E, TPUChip
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e3m4": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_COMP_HEADER = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s+\((.*)\)\s*->")
+# type part may be a tuple "(s32[], bf16[2,4]{1,0})" or a plain shape with a
+# layout "bf16[64,256]{1,0}"; opcode is the first bare word followed by "(".
+_INSTR = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\(")
+_SHAPE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OPERAND = re.compile(r"%([\w\.\-]+)")
+_CALL_ATTRS = re.compile(
+    r"(?:condition|body|to_apply|calls)=%?([\w\.\-]+)")
+_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONST_INT = re.compile(r"constant\((\d+)\)")
+_CONTRACT = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+# opcodes whose operands/results do NOT cross HBM (control / aliasing / glue).
+# `copy` is buffer-safety glue the CPU backend inserts around while-loop
+# carries; TPU buffer assignment elides it (aliased in-place).
+_FREE_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota", "while",
+    "conditional", "call", "custom-call", "get-dimension-size", "copy",
+    "copy-start", "copy-done", "optimization-barrier",
+}
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "ragged-all-to-all", "collective-permute")
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE.findall(type_str):
+        n = 1
+        for d in dims.split(","):
+            if d.strip():
+                n *= int(d)
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+def _shape_dims(type_str: str) -> List[int]:
+    m = _SHAPE.search(type_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d.strip()]
+
+
+@dataclass
+class _Instr:
+    name: str
+    type_str: str
+    opcode: str
+    line: str
+    operands: List[str]
+
+
+@dataclass
+class _Comp:
+    name: str
+    instrs: Dict[str, _Instr] = field(default_factory=dict)
+    order: List[str] = field(default_factory=list)
+    root: Optional[str] = None
+
+
+def _parse_computations(hlo_text: str) -> Tuple[Dict[str, _Comp], Optional[str]]:
+    comps: Dict[str, _Comp] = {}
+    entry: Optional[str] = None
+    cur: Optional[_Comp] = None
+    for raw in hlo_text.splitlines():
+        line = raw.rstrip()
+        stripped = line.strip()
+        if stripped.endswith("{") and ("->" in stripped or stripped.startswith("ENTRY")):
+            m = _COMP_HEADER.match(stripped)
+            if m:
+                cur = _Comp(m.group(1))
+                comps[cur.name] = cur
+                if stripped.startswith("ENTRY") or raw.startswith("ENTRY"):
+                    entry = cur.name
+                continue
+        if stripped == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        im = _INSTR.match(line)
+        if not im:
+            continue
+        name, type_str, opcode = im.groups()
+        paren = line[im.end():]
+        # operand list = up to the matching close paren (flat heuristic:
+        # operands come first, attrs after "),")
+        op_part = paren.split(")", 1)[0]
+        operands = _OPERAND.findall(op_part)
+        cur.instrs[name] = _Instr(name, type_str.strip(), opcode, line,
+                                  operands)
+        cur.order.append(name)
+        if stripped.startswith("ROOT"):
+            cur.root = name
+    return comps, entry
+
+
+def _trip_count(comps: Dict[str, _Comp], cond_name: str) -> int:
+    """Max integer constant in the loop condition (and its fusion callees)."""
+    best = 1
+    seen = set()
+    stack = [cond_name]
+    while stack:
+        cn = stack.pop()
+        if cn in seen or cn not in comps:
+            continue
+        seen.add(cn)
+        for iname in comps[cn].order:
+            ins = comps[cn].instrs[iname]
+            for c in _CONST_INT.findall(ins.line):
+                best = max(best, int(c))
+            if ins.opcode == "fusion":
+                stack.extend(_CALL_ATTRS.findall(ins.line))
+    return best
+
+
+def _call_edges(comps: Dict[str, _Comp]) -> Dict[str, List[Tuple[str, float]]]:
+    """caller -> [(callee, multiplier)]; while bodies weighted by trip count."""
+    edges: Dict[str, List[Tuple[str, float]]] = {c: [] for c in comps}
+    for cname, comp in comps.items():
+        for iname in comp.order:
+            ins = comp.instrs[iname]
+            if ins.opcode == "while":
+                mb = re.search(r"body=%?([\w\.\-]+)", ins.line)
+                mc = re.search(r"condition=%?([\w\.\-]+)", ins.line)
+                cond = mc.group(1) if mc else None
+                trip = _trip_count(comps, cond) if cond else 1
+                if mb and mb.group(1) in comps:
+                    edges[cname].append((mb.group(1), float(trip)))
+                if cond in comps:
+                    edges[cname].append((cond, float(trip)))
+            else:
+                callees = _CALL_ATTRS.findall(ins.line)
+                bm = _BRANCHES.search(ins.line)
+                if bm:
+                    callees += _OPERAND.findall(bm.group(1))
+                for cal in callees:
+                    if cal in comps:
+                        edges[cname].append((cal, 1.0))
+    return edges
+
+
+def _weights(comps: Dict[str, _Comp], entry: str) -> Dict[str, float]:
+    """Execution count per computation: topological accumulation over the
+    (acyclic) call graph, SUMMING over call sites, multiplying trip counts."""
+    edges = _call_edges(comps)
+    # Kahn topological order
+    indeg: Dict[str, int] = {c: 0 for c in comps}
+    for cname, outs in edges.items():
+        for cal, _ in outs:
+            indeg[cal] += 1
+    ready = [c for c, d in indeg.items() if d == 0]
+    order: List[str] = []
+    while ready:
+        c = ready.pop()
+        order.append(c)
+        for cal, _ in edges[c]:
+            indeg[cal] -= 1
+            if indeg[cal] == 0:
+                ready.append(cal)
+    weights: Dict[str, float] = {c: 0.0 for c in comps}
+    if entry in weights:
+        weights[entry] = 1.0
+    for c in order:
+        w = weights.get(c, 0.0)
+        if w <= 0.0:
+            continue
+        for cal, mult in edges[c]:
+            weights[cal] += w * mult
+    return weights
+
+
+# computations reachable only via fusion/reduce `calls=`/`to_apply=` hold no
+# HBM traffic of their own (their cost sits at the call site), but they DO
+# hold dot ops (XLA wraps dots in kOutput fusions on some backends).
+def _control_flow_reachable(comps, entry) -> set:
+    seen = set()
+    stack = [entry]
+    while stack:
+        cn = stack.pop()
+        if cn in seen or cn not in comps:
+            continue
+        seen.add(cn)
+        for iname in comps[cn].order:
+            ins = comps[cn].instrs[iname]
+            if ins.opcode in ("while", "conditional", "call"):
+                stack.extend(_CALL_ATTRS.findall(ins.line))
+                bm = _BRANCHES.search(ins.line)
+                if bm:
+                    stack.extend(_OPERAND.findall(bm.group(1)))
+    return seen
+
+
+@dataclass
+class HLOStats:
+    flops: float = 0.0                    # per-device, trip-weighted
+    hbm_bytes: float = 0.0                # per-device, fusion-boundary traffic
+    collective_bytes_by_op: Dict[str, float] = field(default_factory=dict)
+    collective_count_by_op: Dict[str, int] = field(default_factory=dict)
+    raw_cost_analysis: Dict[str, float] = field(default_factory=dict)
+    vmem_credited_bodies: int = 0         # while bodies under the VMEM rule
+
+    @property
+    def collective_bytes(self) -> float:
+        return sum(self.collective_bytes_by_op.values())
+
+
+def _update_bytes(comp: _Comp, ins: _Instr) -> int:
+    """dus/scatter: bytes of the update operand (in-place region)."""
+    if len(ins.operands) >= 2:
+        t = comp.instrs.get(ins.operands[1])
+        if t:
+            return _type_bytes(t.type_str)
+    return _type_bytes(ins.type_str)
+
+
+def _dus_fusion_bytes(comps: Dict[str, _Comp], comp: _Comp,
+                      ins: _Instr, credited: bool = False) -> Optional[float]:
+    """In-place-update bytes for a fusion whose root is (a tuple of)
+    dynamic-update-slice — the functional carry-and-update pattern XLA
+    emits for loop-state writes.  TPU buffer assignment updates the
+    aliased buffer in place, so traffic is the updated region (RMW),
+    not the whole buffer.  Returns None when the fusion is not
+    update-shaped."""
+    m = _CALL_ATTRS.search(ins.line)
+    fc = comps.get(m.group(1)) if m else None
+    if fc is None or fc.root is None:
+        return None
+
+    def strip_casts(r: Optional[_Instr]) -> Optional[_Instr]:
+        # CPU backend wraps the dus in bf16<->f32 converts; follow through
+        seen = 0
+        while r is not None and r.opcode in ("convert", "bitcast", "copy") \
+                and r.operands and seen < 8:
+            r = fc.instrs.get(r.operands[0])
+            seen += 1
+        return r
+
+    root = strip_casts(fc.instrs.get(fc.root))
+    if root is None:
+        return None
+    roots = [root]
+    if root.opcode == "tuple":
+        roots = [strip_casts(fc.instrs.get(o)) for o in root.operands]
+    if not roots or any(r is None or r.opcode != "dynamic-update-slice"
+                        for r in roots):
+        return None
+    total = 0.0
+    f = 1.0 if credited else 2.0
+    for r in roots:
+        scale = 1.0
+        if len(r.operands) >= 2:
+            scale = _semantic_dtype_scale(fc, r.operands[1])
+        total += f * _update_bytes(fc, r) * scale
+    if credited:
+        return total       # non-buffer operands are VMEM-resident
+    # external operands the fusion reads, except the aliased buffers
+    # (matched on element count — dtype may differ through converts)
+    def elems(type_str: str) -> int:
+        n = 0
+        for _, dims in _SHAPE.findall(type_str):
+            e = 1
+            for d in dims.split(","):
+                if d.strip():
+                    e *= int(d)
+            n += e
+        return n
+
+    buf_elems = {elems(r.type_str) for r in roots}
+    for opn in ins.operands:
+        t = comp.instrs.get(opn)
+        if t and elems(t.type_str) not in buf_elems:
+            total += _type_bytes(t.type_str)
+    return total
+
+
+def _while_bodies(comps: Dict[str, _Comp]) -> set:
+    bodies = set()
+    for comp in comps.values():
+        for iname in comp.order:
+            ins = comp.instrs[iname]
+            if ins.opcode == "while":
+                mb = re.search(r"body=%?([\w\.\-]+)", ins.line)
+                if mb:
+                    bodies.add(mb.group(1))
+    return bodies
+
+
+def _body_working_set(comps: Dict[str, _Comp], comp: _Comp) -> float:
+    """One-iteration working set: sum of non-free instruction outputs
+    (dus — bare or fusion-rooted — counts its in-place update region,
+    not the full aliased buffer)."""
+    ws = 0.0
+    for iname in comp.order:
+        ins = comp.instrs[iname]
+        if ins.opcode in _FREE_OPS:
+            continue
+        if ins.opcode in ("dynamic-update-slice", "scatter"):
+            ws += _update_bytes(comp, ins)
+            continue
+        if ins.opcode == "fusion":
+            ub = _dus_fusion_bytes(comps, comp, ins)
+            if ub is not None:
+                ws += ub
+                continue
+        ws += _type_bytes(ins.type_str)
+    return ws
+
+
+def _vmem_credited(comps: Dict[str, _Comp],
+                   budget: float) -> set:
+    """While bodies whose full iteration working set fits in VMEM.
+
+    TPU adaptation rule (DESIGN.md §2.2): a loop body whose entire
+    iteration working set fits in VMEM does not round-trip HBM for
+    intra-body intermediates — only its HBM block reads (dynamic-slice /
+    gather) and block writes (dynamic-update-slice / scatter) are real
+    traffic.  This is what a hand-written Pallas kernel achieves by
+    construction (BlockSpec streaming + VMEM scratch), and is the TPU
+    analogue of the paper's systolic-cell operand-reuse argument.  The rule
+    is applied uniformly: big XLA scan bodies (e.g. whole-batch blockwise
+    attention steps, 100+ MB) do NOT qualify; restructuring the loop so the
+    working set fits (what kernels/flash_attn.py does) is the optimization.
+    """
+    credited = set()
+    for bname in _while_bodies(comps):
+        comp = comps.get(bname)
+        if comp is not None and _body_working_set(comps, comp) <= budget:
+            credited.add(bname)
+    return credited
+
+
+def analyze_hlo(hlo_text: str,
+                vmem_credit_budget: Optional[float] = None) -> HLOStats:
+    comps, entry = _parse_computations(hlo_text)
+    stats = HLOStats()
+    if entry is None:
+        return stats
+    weights = _weights(comps, entry)
+    cf_comps = _control_flow_reachable(comps, entry)
+    if vmem_credit_budget is None:
+        vmem_credit_budget = TPU_V5E.vmem_bytes
+    credited = _vmem_credited(comps, vmem_credit_budget)
+    stats.vmem_credited_bodies = len(credited)
+
+    def lookup_type(comp: _Comp, name: str) -> Optional[str]:
+        ins = comp.instrs.get(name)
+        return ins.type_str if ins else None
+
+    for cname, comp in comps.items():
+        w = weights.get(cname, 0.0)
+        if w <= 0.0:
+            continue
+        in_cf = cname in cf_comps
+        is_credited = cname in credited
+        for iname in comp.order:
+            ins = comp.instrs[iname]
+            # ---- FLOPs: dots anywhere -----------------------------------
+            if ins.opcode == "dot":
+                out_elems = 1
+                for d in _shape_dims(ins.type_str):
+                    out_elems *= d
+                k = 1
+                cm = _CONTRACT.search(ins.line)
+                if cm and ins.operands:
+                    lhs_t = lookup_type(comp, ins.operands[0])
+                    if lhs_t:
+                        lhs_dims = _shape_dims(lhs_t)
+                        for ci in cm.group(1).split(","):
+                            if ci.strip() and int(ci) < len(lhs_dims):
+                                k *= lhs_dims[int(ci)]
+                stats.flops += w * 2.0 * out_elems * k
+            # ---- collectives ---------------------------------------------
+            if ins.opcode in _COLLECTIVES or \
+                    any(ins.opcode == c + "-start" for c in _COLLECTIVES):
+                op = ins.opcode.replace("-start", "")
+                size = _type_bytes(ins.type_str)
+                gs = 1
+                gm = re.search(r"replica_groups=\[(\d+),(\d+)\]", ins.line)
+                if gm:
+                    gs = int(gm.group(2))
+                else:
+                    gl = re.search(r"replica_groups=\{\{([^}]*)\}", ins.line)
+                    if gl:
+                        gs = len([x for x in gl.group(1).split(",")
+                                  if x.strip()])
+                if op == "all-reduce":
+                    size *= 2
+                elif op == "reduce-scatter":
+                    size *= gs
+                stats.collective_bytes_by_op[op] = \
+                    stats.collective_bytes_by_op.get(op, 0.0) + w * size
+                stats.collective_count_by_op[op] = \
+                    stats.collective_count_by_op.get(op, 0) + int(w)
+            # ---- HBM traffic at fusion boundaries ------------------------
+            if in_cf and ins.opcode not in _FREE_OPS:
+                stats.hbm_bytes += w * _instr_traffic(comps, comp, ins,
+                                                      is_credited)
+    return stats
+
+
+def _semantic_dtype_scale(comp: _Comp, name: str) -> float:
+    """CPU-excess-precision normalization: if `name` resolves to a convert
+    from a narrower dtype (bf16 -> f32 upcast the CPU backend inserts around
+    every region the TPU would keep in bf16), scale its bytes down to the
+    source width.  Applied to sliced/updated regions only."""
+    ins = comp.instrs.get(name)
+    if ins is None or ins.opcode != "convert" or not ins.operands:
+        return 1.0
+    src = comp.instrs.get(ins.operands[0])
+    if src is None:
+        return 1.0
+    out_dt = _SHAPE.search(ins.type_str)
+    src_dt = _SHAPE.search(src.type_str)
+    if not out_dt or not src_dt:
+        return 1.0
+    ob = _DTYPE_BYTES.get(out_dt.group(1), 4)
+    sb = _DTYPE_BYTES.get(src_dt.group(1), 4)
+    return sb / ob if 0 < sb < ob else 1.0
+
+
+def _instr_traffic(comps: Dict[str, _Comp], comp: _Comp, ins: _Instr,
+                   credited: bool) -> float:
+    """HBM bytes attributed to one instruction execution.
+
+    In a VMEM-credited while body, only block reads (ds/slice/gather) and
+    block writes (dus/scatter) touch HBM; everything else is VMEM-resident —
+    and those block transfers move once (the result lives in VMEM).  In an
+    uncredited body a slice result is also materialized back (read+write,
+    2x).  Fusions rooted in dynamic-update-slice count as in-place updates.
+    """
+    f = 1.0 if credited else 2.0
+    if ins.opcode in ("dynamic-slice", "slice", "gather"):
+        scale = _semantic_dtype_scale(comp, ins.operands[0]) \
+            if credited and ins.operands else 1.0
+        return f * _type_bytes(ins.type_str) * scale
+    if ins.opcode in ("dynamic-update-slice", "scatter"):
+        scale = 1.0
+        if credited and len(ins.operands) >= 2:
+            scale = _semantic_dtype_scale(comp, ins.operands[1])
+        return f * _update_bytes(comp, ins) * scale
+    if ins.opcode == "fusion":
+        ub = _dus_fusion_bytes(comps, comp, ins, credited)
+        if ub is not None:
+            return ub
+    if credited:
+        return 0.0
+    traffic = float(_type_bytes(ins.type_str))
+    for opn in ins.operands:
+        t = comp.instrs.get(opn)
+        if t:
+            traffic += _type_bytes(t.type_str)
+    return traffic
+
+
+# ---------------------------------------------------------------------------
+# roofline terms
+# ---------------------------------------------------------------------------
+
+@dataclass
+class RooflineTerms:
+    """All terms in SECONDS (per the assignment formulas)."""
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    hlo_flops_global: float
+    hlo_bytes_global: float
+    collective_bytes_global: float
+    chips: int
+    model_flops: float = 0.0
+    model_min_bytes: float = 0.0   # compulsory HBM traffic (global, bytes)
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        if self.hlo_flops_global <= 0:
+            return 0.0
+        return self.model_flops / self.hlo_flops_global
+
+    @property
+    def ideal_compute_s(self) -> float:
+        return self.model_flops / (self.chips * TPU_V5E.peak_bf16_flops)
+
+    @property
+    def ideal_memory_s(self) -> float:
+        return self.model_min_bytes / (self.chips * TPU_V5E.hbm_bw)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """time(MODEL_FLOPS at peak on all chips) / max(term) — MFU-style."""
+        if self.bound_s <= 0:
+            return 0.0
+        return self.ideal_compute_s / self.bound_s
+
+    @property
+    def memory_attainment(self) -> float:
+        """compulsory traffic / achieved traffic — how tight the memory term
+        is vs. its floor (the honest metric for memory-bound steps)."""
+        if self.memory_s <= 0:
+            return 0.0
+        return self.ideal_memory_s / self.memory_s
+
+    @property
+    def bound_attainment(self) -> float:
+        """max(ideal compute, compulsory memory) / max(term): the roofline
+        fraction that credits memory-bound steps (decode) with their
+        unavoidable weight/cache traffic instead of scoring them as MFU≈0."""
+        if self.bound_s <= 0:
+            return 0.0
+        return max(self.ideal_compute_s, self.ideal_memory_s) / self.bound_s
+
+    def to_dict(self) -> dict:
+        return {
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s, "dominant": self.dominant,
+            "hlo_flops_global": self.hlo_flops_global,
+            "hlo_bytes_global": self.hlo_bytes_global,
+            "collective_bytes_global": self.collective_bytes_global,
+            "chips": self.chips, "model_flops": self.model_flops,
+            "model_min_bytes": self.model_min_bytes,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "roofline_fraction": self.roofline_fraction,
+            "memory_attainment": self.memory_attainment,
+            "bound_attainment": self.bound_attainment,
+        }
+
+
+def roofline_from_stats(stats: HLOStats, chips: int, model_flops: float = 0.0,
+                        chip: TPUChip = TPU_V5E,
+                        model_min_bytes: float = 0.0) -> RooflineTerms:
+    return RooflineTerms(
+        compute_s=stats.flops / chip.peak_bf16_flops,
+        memory_s=stats.hbm_bytes / chip.hbm_bw,
+        collective_s=stats.collective_bytes / chip.ici_link_bw,
+        hlo_flops_global=stats.flops * chips,
+        hlo_bytes_global=stats.hbm_bytes * chips,
+        collective_bytes_global=stats.collective_bytes * chips,
+        chips=chips,
+        model_flops=model_flops,
+        model_min_bytes=model_min_bytes,
+    )
+
+
+def roofline_from_compiled(compiled, chips: int, model_flops: float = 0.0,
+                           chip: TPUChip = TPU_V5E,
+                           hlo_text: Optional[str] = None,
+                           model_min_bytes: float = 0.0
+                           ) -> Tuple[RooflineTerms, HLOStats]:
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    stats = analyze_hlo(text)
+    ca = compiled.cost_analysis() or {}
+    stats.raw_cost_analysis = {k: float(v) for k, v in ca.items()
+                               if isinstance(v, (int, float))}
+    return (roofline_from_stats(stats, chips, model_flops, chip,
+                                model_min_bytes), stats)
+
+
+# ---------------------------------------------------------------------------
+# profile: top HBM/FLOP contributors (the dry-run "profiler" for §Perf)
+# ---------------------------------------------------------------------------
+
+def profile_hlo(hlo_text: str, top: int = 25,
+                vmem_credit_budget: Optional[float] = None) -> List[dict]:
+    """Trip-weighted per-instruction traffic/FLOPs, sorted by HBM bytes.
+
+    Returns the top-k rows: computation, instruction name, opcode, output
+    type, weighted bytes, weighted flops.  This is the hypothesis generator
+    for the §Perf loop: 'which tensors cross HBM most?'.  Uses the same
+    VMEM-credit rule as analyze_hlo.
+    """
+    comps, entry = _parse_computations(hlo_text)
+    if entry is None:
+        return []
+    weights = _weights(comps, entry)
+    cf_comps = _control_flow_reachable(comps, entry)
+    if vmem_credit_budget is None:
+        vmem_credit_budget = TPU_V5E.vmem_bytes
+    credited = _vmem_credited(comps, vmem_credit_budget)
+    rows: List[dict] = []
+    for cname, comp in comps.items():
+        w = weights.get(cname, 0.0)
+        if w <= 0.0:
+            continue
+        in_cf = cname in cf_comps
+        is_credited = cname in credited
+        for iname in comp.order:
+            ins = comp.instrs[iname]
+            flops = 0.0
+            if ins.opcode == "dot":
+                out_elems = 1
+                for d in _shape_dims(ins.type_str):
+                    out_elems *= d
+                k = 1
+                cm = _CONTRACT.search(ins.line)
+                if cm and ins.operands:
+                    t = comp.instrs.get(ins.operands[0])
+                    if t:
+                        lhs_dims = _shape_dims(t.type_str)
+                        for ci in cm.group(1).split(","):
+                            if ci.strip() and int(ci) < len(lhs_dims):
+                                k *= lhs_dims[int(ci)]
+                flops = w * 2.0 * out_elems * k
+            traffic = 0.0
+            if in_cf and ins.opcode not in _FREE_OPS:
+                traffic = w * _instr_traffic(comps, comp, ins, is_credited)
+            if traffic > 0 or flops > 0:
+                rows.append({"comp": cname + ("*" if is_credited else ""),
+                             "instr": iname,
+                             "opcode": ins.opcode,
+                             "type": ins.type_str[:60],
+                             "weight": w, "bytes": traffic, "flops": flops})
+    rows.sort(key=lambda r: r["bytes"], reverse=True)
+    return rows[:top]
+
+
+def profile_by_opcode(hlo_text: str) -> List[dict]:
+    """Aggregate trip-weighted bytes/flops by opcode (whole-program view)."""
+    agg: Dict[str, dict] = {}
+    for r in profile_hlo(hlo_text, top=10 ** 9):
+        a = agg.setdefault(r["opcode"], {"opcode": r["opcode"], "bytes": 0.0,
+                                         "flops": 0.0, "count": 0})
+        a["bytes"] += r["bytes"]
+        a["flops"] += r["flops"]
+        a["count"] += 1
+    rows = sorted(agg.values(), key=lambda r: r["bytes"], reverse=True)
+    return rows

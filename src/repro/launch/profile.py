@@ -1,0 +1,115 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Dry-run profiler: lower+compile one (arch x shape x mesh) cell — with
+optional config overrides — and print the roofline terms plus the top HBM /
+FLOP contributors from the optimized HLO.  This is the 'profile' step of the
+§Perf hypothesis loop.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.profile --arch gemma-2b \
+      --shape train_4k [--multi-pod] [--top 30] \
+      [--set flash_causal_skip=True --set attn_chunk=256 ...]
+"""
+
+import argparse
+
+
+def parse_override(kv: str):
+    key, _, val = kv.partition("=")
+    try:
+        import ast
+        pval = ast.literal_eval(val)
+    except (ValueError, SyntaxError):
+        pval = val
+    return key, pval
+
+
+def apply_overrides(cfg, overrides):
+    """Apply {possibly.dotted.key: value} overrides to an ArchConfig."""
+    import dataclasses
+    nested = {}
+    flat = {}
+    for k, v in overrides.items():
+        if "." in k:
+            head, rest = k.split(".", 1)
+            nested.setdefault(head, {})[rest] = v
+        else:
+            flat[k] = v
+    for head, sub in nested.items():
+        child = getattr(cfg, head)
+        flat[head] = dataclasses.replace(child, **sub)
+    return cfg.replace(**flat)
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool, overrides: dict):
+    from repro.configs.registry import get_arch
+    from repro.configs.shapes import SHAPES
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.steps import (lower_for_cell, model_flops_estimate,
+                                    model_min_bytes_estimate)
+
+    cfg = apply_overrides(get_arch(arch), overrides)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    lowered, model, params_aval = lower_for_cell(cfg, mesh, shape)
+    mf = model_flops_estimate(cfg, params_aval, shape)
+    mb = model_min_bytes_estimate(cfg, params_aval, shape)
+    return lowered, int(mesh.devices.size), mf, mb, cfg
+
+
+def profile_cell(arch: str, shape_name: str, multi_pod: bool,
+                 overrides: dict, top: int = 25) -> dict:
+    import time
+
+    from repro.launch.hlo_analysis import profile_hlo, roofline_from_compiled
+
+    t0 = time.time()
+    lowered, chips, mf, mb, _ = lower_cell(arch, shape_name, multi_pod,
+                                           overrides)
+    compiled = lowered.compile()
+    t1 = time.time()
+    text = compiled.as_text()
+    terms, stats = roofline_from_compiled(compiled, chips, model_flops=mf,
+                                          model_min_bytes=mb, hlo_text=text)
+    rows = profile_hlo(text, top=top)
+    return {"terms": terms, "stats": stats, "rows": rows,
+            "compile_s": t1 - t0, "compiled": compiled}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--top", type=int, default=25)
+    ap.add_argument("--set", action="append", default=[],
+                    help="config override key=value (repeatable; dotted keys "
+                         "reach nested configs, e.g. moe.capacity_factor=1.0)")
+    args = ap.parse_args()
+
+    overrides = dict(parse_override(kv) for kv in args.set)
+    out = profile_cell(args.arch, args.shape, args.multi_pod, overrides,
+                       args.top)
+    terms, stats = out["terms"], out["stats"]
+    print(f"\n== {args.arch} x {args.shape} "
+          f"{'pod2' if args.multi_pod else 'pod1'}  overrides={overrides}")
+    print(f"compile {out['compile_s']:.1f}s  "
+          f"vmem-credited bodies: {stats.vmem_credited_bodies}")
+    print(f"compute_s={terms.compute_s:.4f}  memory_s={terms.memory_s:.4f}  "
+          f"collective_s={terms.collective_s:.4f}  dominant={terms.dominant}")
+    print(f"roofline_frac={terms.roofline_fraction:.4f}  "
+          f"mem_attain={terms.memory_attainment:.4f}  "
+          f"bound_attain={terms.bound_attainment:.4f}  "
+          f"useful_flops={terms.useful_flops_ratio:.3f}")
+    print(f"collectives: { {k: f'{v:.3e}' for k, v in stats.collective_bytes_by_op.items()} }")
+    print(f"\ntop-{args.top} HBM contributors (trip-weighted, per-device):")
+    print(f"{'bytes':>12} {'flops':>12} {'w':>7}  {'opcode':20} "
+          f"{'computation':40} type")
+    for r in out["rows"]:
+        print(f"{r['bytes']:12.3e} {r['flops']:12.3e} {r['weight']:7.0f}  "
+              f"{r['opcode']:20} {r['comp'][:40]:40} {r['type']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,283 @@
+"""Step builders: sharded train_step / prefill / serve(decode) closures.
+
+Each builder returns the pure step function plus the in/out sharding trees,
+ready for ``jax.jit(...).lower(...)`` in the dry-run, ``train.py`` and
+``serve.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.configs.shapes import ShapeSpec, cache_specs, input_specs
+from repro.models.api import Model, build_model
+from repro.models.moe import padded_num_experts
+from repro.optim.adamw import AdamW, AdamWState, apply_updates
+from repro.parallel.hints import use_mesh
+from repro.parallel.sharding import (batch_specs, cache_specs_tree,
+                                     param_specs, to_named)
+
+
+# ---------------------------------------------------------------------------
+# MODEL_FLOPS (the "useful work" denominator for §Roofline)
+# ---------------------------------------------------------------------------
+
+def _matmul_param_count(cfg: ArchConfig, params_aval) -> Tuple[float, float]:
+    """(N_total_matmul, N_active_matmul): params participating in matmuls.
+
+    Token-embedding gathers are excluded (untied); a tied table is counted
+    once (it runs as the unembed matmul).  MoE expert banks are scaled by
+    top-k/E for the active count.
+    """
+    import jax.tree_util as jtu
+    total = 0.0
+    routed = 0.0
+    for path, leaf in jtu.tree_flatten_with_path(params_aval)[0]:
+        ps = "/".join(str(getattr(p, "key", getattr(p, "name", p)))
+                      for p in path)
+        n = float(leaf.size)
+        if ps.endswith("embed") and not cfg.tie_embeddings:
+            continue
+        if "moe/w_" in ps or ("moe" in ps and ps.split("/")[-1].startswith("w_")
+                              and "shared" not in ps):
+            routed += n
+        total += n
+    active = total
+    if cfg.moe is not None and routed > 0:
+        e_pad = padded_num_experts(cfg)
+        frac = cfg.moe.experts_per_token / e_pad
+        active = total - routed + routed * frac
+    return total, active
+
+
+def _attention_flops(cfg: ArchConfig, B: int, S: int, kind: str) -> float:
+    """Score+value matmul FLOPs (not covered by 6ND)."""
+    H, hd = cfg.num_heads, cfg.head_dim
+    if cfg.attention_type == "none":
+        return 0.0
+    if cfg.attention_type == "mla":
+        m = cfg.mla
+        qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+        per_pair = 2 * H * (qk + m.v_head_dim)
+    else:
+        per_pair = 4 * H * hd
+    n_attn_layers = cfg.num_layers
+    if cfg.shared_attn_every:
+        n_attn_layers = cfg.num_layers // cfg.shared_attn_every
+    if kind == "decode":
+        # decoder self-attn: 1 query x S cached keys; encoder is NOT re-run,
+        # cross-attn reads the cached encoder output: 1 query x S_enc keys.
+        fwd = per_pair * B * S * n_attn_layers
+        if cfg.encoder_layers:
+            fwd += per_pair * B * S * cfg.num_layers        # cross-attn
+        return fwd
+    pairs = B * S * S / 2                                   # causal self
+    fwd = per_pair * pairs * n_attn_layers
+    if cfg.encoder_layers:
+        fwd += per_pair * B * S * S * cfg.encoder_layers    # bidirectional enc
+        fwd += per_pair * B * S * S * cfg.num_layers        # cross: S_dec x S_enc
+    return 3 * fwd if kind == "train" else fwd
+
+
+def _ssm_flops(cfg: ArchConfig, B: int, S: int, kind: str) -> float:
+    """Chunked-scan FLOPs of SSM blocks (not covered by 6ND): the intra-chunk
+    masked einsum + inter-chunk state update/readout of _ssd_chunked /
+    _wkv_chunked (models/ssm.py)."""
+    if cfg.ssm is None:
+        return 0.0
+    s = cfg.ssm
+    n_ssm = cfg.num_layers
+    if cfg.shared_attn_every:                 # hybrid: attn slots replace SSM
+        n_ssm -= cfg.num_layers // cfg.shared_attn_every
+    if s.kind == "mamba2":
+        d_inner = s.expand * cfg.d_model
+        H, P, N = (s.num_heads or d_inner // s.head_dim), s.head_dim, s.state_dim
+        lc = s.chunk
+        if kind == "decode":
+            per_tok = 4.0 * N * H * P                  # state rank-1 + readout
+        else:
+            #   G=C.B^T (2*lc*N) + intra apply (2*lc*H*P) + state in/out (4*N*H*P)
+            per_tok = 2.0 * lc * N + 2.0 * lc * H * P + 4.0 * N * H * P
+    else:                                              # rwkv6
+        d = cfg.d_model
+        hd = s.head_dim
+        lc = s.chunk
+        if kind == "decode":
+            per_tok = 4.0 * hd * d                     # S += k v^T; o = r^T S
+        else:
+            per_tok = 4.0 * hd * d + 2.0 * lc * d      # + intra-chunk matmul
+    tokens = B * (1 if kind == "decode" else S)
+    fwd = per_tok * tokens * n_ssm
+    return 3.0 * fwd if kind == "train" else fwd
+
+
+def model_flops_estimate(cfg: ArchConfig, params_aval, shape: ShapeSpec
+                         ) -> float:
+    """6*N_active*D (train) / 2*N_active*D (inference) + attention/SSM FLOPs."""
+    _, n_active = _matmul_param_count(cfg, params_aval)
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        tokens = B * S
+        base = 6.0 * n_active * tokens
+    elif shape.kind == "prefill":
+        tokens = B * S
+        base = 2.0 * n_active * tokens
+    else:
+        tokens = B * 1
+        base = 2.0 * n_active * tokens
+    return (base + _attention_flops(cfg, B, S, shape.kind)
+            + _ssm_flops(cfg, B, S, shape.kind))
+
+
+def model_min_bytes_estimate(cfg: ArchConfig, params_aval, shape: ShapeSpec
+                             ) -> float:
+    """Compulsory GLOBAL HBM traffic per step, in bytes — the floor for the
+    §Roofline memory term (memory_attainment = floor / achieved).
+
+    train   : params fwd-read + bwd-read + update-write (param dtype)
+              + grads write+read + AdamW m,v read+write (opt dtype)
+              + one residual checkpoint per layer write (fwd) + read (bwd)
+    prefill : params read once + KV-cache write + embeddings/logits touch
+    decode  : params read once + KV-cache read (+1-token write, negligible)
+    """
+    import jax.tree_util as jtu
+    leaves = jtu.tree_leaves(params_aval)
+    p_bytes = float(sum(l.size * jnp.dtype(l.dtype).itemsize for l in leaves))
+    p_count = float(sum(l.size for l in leaves))
+    B, S = shape.global_batch, shape.seq_len
+    act_b = jnp.dtype(cfg.compute_dtype).itemsize
+    L = cfg.num_layers + cfg.encoder_layers
+    d = cfg.d_model
+
+    if shape.kind == "train":
+        ob = jnp.dtype(cfg.opt_state_dtype).itemsize
+        traffic = p_bytes * 3.0            # fwd read, bwd read, update write
+        traffic += p_bytes * 2.0           # grads: write (bwd) + read (opt)
+        traffic += p_count * ob * 4.0      # m, v: read + write each
+        traffic += 2.0 * B * S * d * L * act_b   # residual ckpt: write + read
+        return traffic
+
+    cache_bytes = 0.0
+    try:
+        cache = cache_specs(cfg, shape)
+        cache_bytes = float(sum(l.size * jnp.dtype(l.dtype).itemsize
+                                for l in jtu.tree_leaves(cache)))
+    except Exception:
+        pass
+    if shape.kind == "prefill":
+        return p_bytes + cache_bytes + 2.0 * B * S * d * act_b
+    # decode: whole cache is read once per emitted token
+    return p_bytes + cache_bytes
+
+
+# ---------------------------------------------------------------------------
+# train step
+# ---------------------------------------------------------------------------
+
+def make_optimizer(cfg: ArchConfig, lr: float = 3e-4) -> AdamW:
+    return AdamW(lr=lr, state_dtype=cfg.opt_state_dtype)
+
+
+def build_train_step(cfg: ArchConfig, mesh, lr: float = 3e-4):
+    """Returns (step_fn, (params_sh, opt_sh, batch_sh), out_sh, abstract_args)."""
+    model = build_model(cfg)
+    opt = make_optimizer(cfg, lr)
+    params_aval = model.init_abstract()
+    opt_aval = jax.eval_shape(opt.init, params_aval)
+
+    p_specs = param_specs(params_aval, cfg, mesh)
+    o_specs = AdamWState(step=P(), m=p_specs, v=p_specs)
+    p_sh = to_named(p_specs, mesh)
+    o_sh = AdamWState(step=NamedSharding(mesh, P()),
+                      m=to_named(p_specs, mesh), v=to_named(p_specs, mesh))
+
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            model.loss, has_aux=True)(params, batch)
+        updates, opt_state, opt_metrics = opt.update(grads, opt_state, params)
+        params = apply_updates(params, updates)
+        metrics = {**metrics, **opt_metrics, "loss": loss}
+        return params, opt_state, metrics
+
+    return model, train_step, (params_aval, opt_aval), (p_sh, o_sh)
+
+
+def lower_train_step(cfg: ArchConfig, mesh, shape: ShapeSpec):
+    model, step, (params_aval, opt_aval), (p_sh, o_sh) = \
+        build_train_step(cfg, mesh)
+    specs = input_specs(cfg, shape)
+    b_sh = to_named(batch_specs(specs, mesh, cfg), mesh)
+    jitted = jax.jit(step,
+                     in_shardings=(p_sh, o_sh, b_sh),
+                     out_shardings=(p_sh, o_sh, None),
+                     donate_argnums=(0, 1))
+    with mesh:
+        with use_mesh(mesh, cfg.tp_strategy):
+            lowered = jitted.lower(params_aval, opt_aval, specs)
+    return lowered, model, params_aval
+
+
+# ---------------------------------------------------------------------------
+# serve steps
+# ---------------------------------------------------------------------------
+
+def build_serve_parts(cfg: ArchConfig, mesh, shape: ShapeSpec):
+    model = build_model(cfg)
+    params_aval = model.init_abstract()
+    p_sh = to_named(param_specs(params_aval, cfg, mesh), mesh)
+    cache_aval = cache_specs(cfg, shape)
+    c_sh = to_named(cache_specs_tree(cache_aval, cfg, mesh), mesh)
+    return model, params_aval, p_sh, cache_aval, c_sh
+
+
+def lower_decode_step(cfg: ArchConfig, mesh, shape: ShapeSpec):
+    """serve_step: one new token against a seq_len KV cache."""
+    model, params_aval, p_sh, cache_aval, c_sh = \
+        build_serve_parts(cfg, mesh, shape)
+    specs = input_specs(cfg, shape)
+    b_sh = to_named(batch_specs(specs, mesh), mesh)
+
+    def serve_step(params, tokens, cache):
+        return model.decode_step(params, tokens, cache)
+
+    jitted = jax.jit(serve_step,
+                     in_shardings=(p_sh, b_sh["tokens"], c_sh),
+                     out_shardings=(None, c_sh),
+                     donate_argnums=(2,))
+    with mesh, use_mesh(mesh, cfg.tp_strategy):
+        # decode against a FULL cache: pos = seq_len - 1 abstractly (the cache
+        # aval already has capacity seq_len; occupancy is a runtime value)
+        lowered = jitted.lower(params_aval, specs["tokens"], cache_aval)
+    return lowered, model, params_aval
+
+
+def lower_prefill_step(cfg: ArchConfig, mesh, shape: ShapeSpec):
+    model, params_aval, p_sh, cache_aval, c_sh = \
+        build_serve_parts(cfg, mesh, shape)
+    specs = input_specs(cfg, shape)
+    b_sh = to_named(batch_specs(specs, mesh), mesh)
+
+    def prefill_step(params, batch, cache):
+        return model.prefill(params, batch, cache)
+
+    jitted = jax.jit(prefill_step,
+                     in_shardings=(p_sh, b_sh, c_sh),
+                     out_shardings=(None, c_sh),
+                     donate_argnums=(2,))
+    with mesh, use_mesh(mesh, cfg.tp_strategy):
+        lowered = jitted.lower(params_aval, specs, cache_aval)
+    return lowered, model, params_aval
+
+
+def lower_for_cell(cfg: ArchConfig, mesh, shape: ShapeSpec):
+    if shape.kind == "train":
+        return lower_train_step(cfg, mesh, shape)
+    if shape.kind == "prefill":
+        return lower_prefill_step(cfg, mesh, shape)
+    return lower_decode_step(cfg, mesh, shape)

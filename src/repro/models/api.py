@@ -1,0 +1,57 @@
+"""Public model API: build a model object from an ArchConfig."""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import serving, transformer
+from repro.models.modules import param_count
+
+
+class Model:
+    """Functional model wrapper — all methods are pure and jit-friendly."""
+
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+
+    # ---- params -----------------------------------------------------------
+    def init(self, key) -> Dict[str, Any]:
+        return transformer.init_params(key, self.cfg)
+
+    def init_abstract(self) -> Dict[str, Any]:
+        """Parameter avals without allocation (for dry-run lowering)."""
+        return jax.eval_shape(
+            lambda k: transformer.init_params(k, self.cfg),
+            jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+    def num_params(self, params=None) -> int:
+        tree = params if params is not None else self.init_abstract()
+        return param_count(tree)
+
+    # ---- training ---------------------------------------------------------
+    def loss(self, params, batch) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+        return transformer.loss_fn(params, batch, self.cfg)
+
+    def logits(self, params, batch) -> jnp.ndarray:
+        return transformer.logits(params, batch, self.cfg)
+
+    def forward(self, params, batch):
+        return transformer.forward(params, batch, self.cfg)
+
+    # ---- serving ----------------------------------------------------------
+    def init_cache(self, batch: int, max_len: int, src_len: int = 0):
+        return serving.init_cache(self.cfg, batch, max_len, src_len)
+
+    def prefill(self, params, batch, cache):
+        return serving.prefill(params, batch, self.cfg, cache)
+
+    def decode_step(self, params, tokens, cache):
+        return serving.decode_step(params, tokens, self.cfg, cache)
+
+
+def build_model(cfg: ArchConfig) -> Model:
+    return Model(cfg)

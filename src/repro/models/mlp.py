@@ -1,0 +1,33 @@
+"""Gated feed-forward (SwiGLU / GeGLU) blocks."""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.modules import activation, dense, dense_init
+from repro.parallel.hints import hint
+
+Params = Dict[str, Any]
+
+
+def init_mlp(key, d_model: int, d_ff: int, cfg: ArchConfig) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    dt = cfg.param_dtype
+    return {
+        "w_gate": dense_init(k1, d_model, d_ff, dt),
+        "w_up": dense_init(k2, d_model, d_ff, dt),
+        "w_down": dense_init(k3, d_ff, d_model, dt,
+                             scale=1.0 / (d_ff ** 0.5 * (2 * cfg.num_layers) ** 0.5)),
+    }
+
+
+def mlp_apply(params: Params, x: jnp.ndarray, cfg: ArchConfig) -> jnp.ndarray:
+    cdt = jnp.dtype(cfg.compute_dtype)
+    act = activation(cfg.mlp_activation)
+    g = act(hint(dense(x, params["w_gate"], None, cdt), "B", None, "M"))
+    u = hint(dense(x, params["w_up"], None, cdt), "B", None, "M")
+    return hint(dense(g * u, params["w_down"], None, cdt), "B", None, None)

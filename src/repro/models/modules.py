@@ -1,0 +1,129 @@
+"""Functional parameter/module primitives.
+
+Params are plain nested dicts of jnp arrays; every module is an ``init``
+function (rng, shapes -> pytree) plus a pure ``apply`` function.  No framework
+dependency (flax is not available offline) — this keeps pjit/shard_map
+integration and checkpointing trivial: a checkpoint IS the pytree.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+
+def _dtype(name: str):
+    return jnp.dtype(name)
+
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, dtype="float32", *, scale: Optional[float] = None):
+    """Truncated-normal (fan-in) init, matching common LM practice."""
+    std = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    w = jax.random.truncated_normal(key, -2.0, 2.0, (d_in, d_out), jnp.float32) * std
+    return w.astype(_dtype(dtype))
+
+
+def embed_init(key, vocab: int, d: int, dtype="float32"):
+    w = jax.random.normal(key, (vocab, d), jnp.float32) * (1.0 / math.sqrt(d))
+    return w.astype(_dtype(dtype))
+
+
+def zeros_init(shape, dtype="float32"):
+    return jnp.zeros(shape, _dtype(dtype))
+
+
+def ones_init(shape, dtype="float32"):
+    return jnp.ones(shape, _dtype(dtype))
+
+
+# ---------------------------------------------------------------------------
+# ops
+# ---------------------------------------------------------------------------
+
+def dense(x: jnp.ndarray, w: jnp.ndarray, b: Optional[jnp.ndarray] = None,
+          compute_dtype=jnp.float32) -> jnp.ndarray:
+    y = jnp.einsum("...i,io->...o", x.astype(compute_dtype), w.astype(compute_dtype))
+    if b is not None:
+        y = y + b.astype(compute_dtype)
+    return y
+
+
+def rmsnorm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def layernorm(x, scale, bias, eps=1e-6):
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale + bias).astype(x.dtype)
+
+
+def activation(name: str):
+    if name == "silu":
+        return jax.nn.silu
+    if name == "gelu":
+        return lambda x: jax.nn.gelu(x, approximate=True)
+    if name == "relu":
+        return jax.nn.relu
+    raise ValueError(f"unknown activation {name}")
+
+
+def softcap(logits: jnp.ndarray, cap: float) -> jnp.ndarray:
+    if cap <= 0.0:
+        return logits
+    return jnp.tanh(logits / cap) * cap
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., S, heads, head_dim); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                     # (hd/2,)
+    ang = positions[..., :, None, None].astype(jnp.float32) * freqs  # (...,S,1,hd/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x32 = x.astype(jnp.float32)
+    x1, x2 = jnp.split(x32, 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# tree utilities
+# ---------------------------------------------------------------------------
+
+def param_count(tree) -> int:
+    return sum(int(x.size) for x in jax.tree_util.tree_leaves(tree))
+
+
+def param_bytes(tree) -> int:
+    return sum(int(x.size) * x.dtype.itemsize for x in jax.tree_util.tree_leaves(tree))
+
+
+def split_keys(key, n: int) -> Sequence[jax.Array]:
+    return jax.random.split(key, n)
+
+
+def stack_layer_params(layer_params: Sequence[Params]) -> Params:
+    """Stack per-layer pytrees along a leading axis for lax.scan."""
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs, axis=0), *layer_params)

@@ -1,0 +1,157 @@
+"""Mixture-of-Experts feed-forward with expert parallelism.
+
+Design (GShard/Switch-style, adapted for pjit-global semantics):
+
+- Routing is computed per *group* (= one batch row), so the top-k sort stays
+  local to the data shard that owns the row — no global sort collective.
+- Dispatch is sort-based (argsort of expert ids), not one-hot-einsum based:
+  memory is O(S·k) per row instead of O(S·E·C).
+- Expert buffers have shape (B, E, C, d): B sharded over `data`, E over
+  `model` (expert parallelism).  XLA lowers the (B-sharded -> B,E-sharded)
+  scatter into the all-to-all this dataflow implies.
+- Routed experts are padded up to a multiple of the EP axis so every device
+  owns the same number of experts; the router assigns padding experts -inf.
+- Capacity per row C = ceil(S·k/E_real · capacity_factor); overflow tokens are
+  dropped (their contribution is 0, residual carries them — standard).
+- Shared experts (qwen2-moe, deepseek-v3) are an always-on dense GLU applied
+  to every token and summed with the routed output.
+
+Aux losses: load-balance (Switch) + router-z, returned for logging.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.modules import activation, dense_init
+from repro.parallel.hints import hint
+
+Params = Dict[str, Any]
+
+
+def padded_num_experts(cfg: ArchConfig, ep_axis: int = 16) -> int:
+    e = cfg.moe.num_experts
+    return int(math.ceil(e / ep_axis) * ep_axis)
+
+
+def row_capacity(seq: int, cfg: ArchConfig) -> int:
+    m = cfg.moe
+    cap = int(math.ceil(seq * m.experts_per_token / m.num_experts
+                        * m.capacity_factor))
+    return max(cap, 4)
+
+
+def init_moe(key, cfg: ArchConfig, ep_axis: int = 16) -> Params:
+    m = cfg.moe
+    dt = cfg.param_dtype
+    E = padded_num_experts(cfg, ep_axis)
+    d, f = cfg.d_model, m.d_ff_expert
+    ks = jax.random.split(key, 5)
+
+    def expert_bank(k, d_in, d_out, scale=None):
+        keys = jax.random.split(k, E)
+        w = jnp.stack([dense_init(kk, d_in, d_out, dt, scale=scale) for kk in keys])
+        return w                                           # (E, d_in, d_out)
+
+    p = {
+        "router": dense_init(ks[0], d, E, "float32", scale=0.02),
+        "w_gate": expert_bank(ks[1], d, f),
+        "w_up": expert_bank(ks[2], d, f),
+        "w_down": expert_bank(ks[3], f, d,
+                              scale=1.0 / (f ** 0.5 * (2 * cfg.num_layers) ** 0.5)),
+    }
+    if m.num_shared_experts > 0:
+        fs = f * m.num_shared_experts
+        k1, k2, k3 = jax.random.split(ks[4], 3)
+        p["shared"] = {
+            "w_gate": dense_init(k1, d, fs, dt),
+            "w_up": dense_init(k2, d, fs, dt),
+            "w_down": dense_init(k3, fs, d,
+                                 scale=1.0 / (fs ** 0.5 * (2 * cfg.num_layers) ** 0.5)),
+        }
+    return p
+
+
+def moe_apply(params: Params, x: jnp.ndarray, cfg: ArchConfig
+              ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """x: (B, S, d) -> (B, S, d), aux metrics."""
+    m = cfg.moe
+    cdt = jnp.dtype(cfg.compute_dtype)
+    B, S, d = x.shape
+    E_pad = params["router"].shape[-1]
+    E = m.num_experts
+    k = m.experts_per_token
+    C = row_capacity(S, cfg)
+
+    # ---- routing (fp32 for stability) ------------------------------------
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32),
+                        params["router"].astype(jnp.float32))
+    logits = jnp.where(jnp.arange(E_pad)[None, None, :] < E, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, top_idx = jax.lax.top_k(probs, k)            # (B,S,k)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)   # renormalize top-k
+
+    # ---- sort-based dispatch, vmapped over rows ---------------------------
+    def dispatch_row(xr, idxr, gater):
+        # xr: (S,d); idxr: (S,k); gater: (S,k)
+        flat_e = idxr.reshape(-1)                            # (S*k,)
+        flat_g = gater.reshape(-1)
+        flat_tok = jnp.repeat(jnp.arange(S), k)
+        order = jnp.argsort(flat_e, stable=True)
+        se, sg, st = flat_e[order], flat_g[order], flat_tok[order]
+        # position within each expert's run
+        pos = jnp.arange(S * k) - jnp.searchsorted(se, se, side="left")
+        keep = pos < C
+        dest = jnp.where(keep, se * C + pos, E_pad * C)      # overflow -> dropped
+        buf = jnp.zeros((E_pad * C + 1, d), cdt)
+        buf = buf.at[dest].add(xr[st].astype(cdt) * keep[:, None].astype(cdt))
+        return buf[:-1].reshape(E_pad, C, d), dest, st, sg, keep
+
+    buf, dest, st, sg, keep = jax.vmap(dispatch_row)(x, top_idx, gate_vals)
+    buf = hint(buf, "B", "E", None, None)     # EP: experts over `model`
+    # buf: (B, E_pad, C, d)
+
+    # ---- expert computation (EP: E sharded over `model`) ------------------
+    act = activation(cfg.mlp_activation)
+    g = jnp.einsum("becd,edf->becf", buf, params["w_gate"].astype(cdt))
+    u = jnp.einsum("becd,edf->becf", buf, params["w_up"].astype(cdt))
+    h = act(g) * u
+    out_buf = hint(jnp.einsum("becf,efd->becd", h,
+                              params["w_down"].astype(cdt)),
+                   "B", "E", None, None)
+
+    # ---- combine back ------------------------------------------------------
+    def combine_row(out_b, dest_r, st_r, sg_r, keep_r):
+        flat = out_b.reshape(E_pad * C, d)
+        gathered = flat[jnp.minimum(dest_r, E_pad * C - 1)]
+        contrib = gathered * (sg_r * keep_r)[:, None].astype(cdt)
+        y = jnp.zeros((S, d), cdt).at[st_r].add(contrib)
+        return y
+
+    y = hint(jax.vmap(combine_row)(out_buf, dest, st, sg, keep),
+             "B", None, None)
+
+    # ---- shared experts ----------------------------------------------------
+    if "shared" in params:
+        sp = params["shared"]
+        gs = act(jnp.einsum("bsd,df->bsf", x.astype(cdt), sp["w_gate"].astype(cdt)))
+        us = jnp.einsum("bsd,df->bsf", x.astype(cdt), sp["w_up"].astype(cdt))
+        y = y + jnp.einsum("bsf,fd->bsd", gs * us, sp["w_down"].astype(cdt))
+
+    # ---- aux losses --------------------------------------------------------
+    # load-balance: E * sum_e f_e * p_e   (Switch), over real experts
+    me = jnp.mean(probs[..., :E].reshape(-1, E), axis=0)
+    one_hot_top1 = jax.nn.one_hot(top_idx[..., 0], E_pad)[..., :E]
+    fe = jnp.mean(one_hot_top1.reshape(-1, E), axis=0)
+    lb_loss = E * jnp.sum(me * fe)
+    z_loss = jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1)))
+    drop_frac = 1.0 - jnp.mean(keep.astype(jnp.float32))
+    aux = {"moe_lb_loss": lb_loss, "moe_z_loss": z_loss,
+           "moe_drop_frac": drop_frac}
+    return y.astype(x.dtype), aux

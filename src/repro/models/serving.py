@@ -1,0 +1,280 @@
+"""Prefill / decode with per-family caches.
+
+Cache layout (a plain pytree, so it shards/checkpoints like params):
+
+  dense/moe/vlm : {"pos", "layers": KVCache stacked (L, B, S_max, KVH, hd)}
+  ssm (rwkv6)   : {"pos", "layers": RWKVState stacked (L, ...)}   — O(1) in S
+  hybrid        : {"pos", "layers": MambaState stacked (n_mamba, ...),
+                   "attn": KVCache stacked (n_groups, B, S_max, KVH, hd)}
+  encdec        : {"pos", "layers": self-attn KVCache stacked,
+                   "cross_k"/"cross_v": (L, B, S_src, KVH, hd)}
+
+MLA caches store (c_kv, k_rope) — the compressed latent — via the absorbed
+decode path in attention.py.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import ssm as ssm_mod
+from repro.models.attention import (KVCache, cross_attention_kv,
+                                    init_gqa_cache, init_mla_cache)
+from repro.models.transformer import (_embed, _frontend_embed, _maybe_remat,
+                                      _scan_mamba_span, _unembed_weight,
+                                      decoder_layer_apply, hybrid_layout,
+                                      Params)
+from repro.models.modules import rmsnorm
+
+Cache = Dict[str, Any]
+
+
+def _stack_cache(proto, n: int):
+    return jax.tree_util.tree_map(
+        lambda a: jnp.broadcast_to(a, (n,) + a.shape).copy()
+        if hasattr(a, "shape") else a, proto)
+
+
+def _layer_kv_cache(cfg: ArchConfig, batch: int, max_len: int, dtype):
+    if cfg.attention_type == "mla":
+        return init_mla_cache(cfg, batch, max_len, dtype)
+    return init_gqa_cache(cfg, batch, max_len, dtype)
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int,
+               src_len: int = 0) -> Cache:
+    dt = jnp.dtype(cfg.compute_dtype)
+    fam = cfg.family
+    cache: Cache = {"pos": jnp.zeros((), jnp.int32)}
+    if fam in ("dense", "moe", "vlm", "encdec"):
+        proto = _layer_kv_cache(cfg, batch, max_len, dt)
+        cache["layers"] = jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a, (cfg.num_layers,) + a.shape).copy(),
+            proto)
+        if fam == "encdec":
+            kv_shape = (cfg.num_layers, batch, src_len, cfg.num_kv_heads,
+                        cfg.head_dim)
+            cache["cross_k"] = jnp.zeros(kv_shape, dt)
+            cache["cross_v"] = jnp.zeros(kv_shape, dt)
+    elif fam == "ssm":
+        proto = ssm_mod.init_rwkv_state(cfg, batch, dt)
+        cache["layers"] = jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a, (cfg.num_layers,) + a.shape).copy(),
+            proto)
+    elif fam == "hybrid":
+        n_m, n_groups, _, _ = hybrid_layout(cfg)
+        proto = ssm_mod.init_mamba_state(cfg, batch, dt)
+        cache["layers"] = jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a, (n_m,) + a.shape).copy(), proto)
+        a_proto = _layer_kv_cache(cfg, batch, max_len, dt)
+        cache["attn"] = jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a, (n_groups,) + a.shape).copy(),
+            a_proto)
+    else:
+        raise ValueError(fam)
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# decoder-stack step (shared by prefill and decode; S is the step width)
+# ---------------------------------------------------------------------------
+
+def _run_decoder_stack(params: Params, x, positions, cfg: ArchConfig, cache,
+                       cross=False):
+    """Scan decoder layers threading per-layer KV caches."""
+
+    def body(h, xs):
+        layer_p, layer_c = xs
+        if cross:
+            enc_kv = (layer_c["ck"], layer_c["cv"])
+            h, new_c, _ = decoder_layer_apply(
+                layer_p, h, positions, cfg, cache=layer_c["kv"], enc_kv=enc_kv)
+            return h, {"kv": new_c}
+        h, new_c, _ = decoder_layer_apply(layer_p, h, positions, cfg,
+                                          cache=layer_c)
+        return h, new_c
+
+    body = _maybe_remat(body, cfg)
+    if cross:
+        xs = (params["layers"], {"kv": cache["layers"],
+                                 "ck": cache["cross_k"],
+                                 "cv": cache["cross_v"]})
+        x, new = jax.lax.scan(body, x, xs)
+        return x, new["kv"]
+    layer_caches = cache["layers"]
+    if "dense_layers" in params:
+        # leading dense stack (deepseek-v3): split the homogeneous cache
+        nd = jax.tree_util.tree_leaves(params["dense_layers"])[0].shape[0]
+        head = jax.tree_util.tree_map(lambda a: a[:nd], layer_caches)
+        tail = jax.tree_util.tree_map(lambda a: a[nd:], layer_caches)
+        x, new_head = jax.lax.scan(body, x, (params["dense_layers"], head))
+        x, new_tail = jax.lax.scan(body, x, (params["layers"], tail))
+        new_layers = jax.tree_util.tree_map(
+            lambda a, b: jnp.concatenate([a, b], axis=0), new_head, new_tail)
+        return x, new_layers
+    x, new_layers = jax.lax.scan(body, x, (params["layers"], layer_caches))
+    return x, new_layers
+
+
+def _run_ssm_stack(params: Params, x, cfg: ArchConfig, states):
+    def body(h, xs):
+        layer_p, st = xs
+        hn = rmsnorm(h, layer_p["ln1"], cfg.norm_eps)
+        y, new_st = ssm_mod.rwkv_block_apply(layer_p["blk"], hn, cfg, st)
+        return h + y.astype(h.dtype), new_st
+
+    body = _maybe_remat(body, cfg)
+    return jax.lax.scan(body, x, (params["layers"], states))
+
+
+def _run_hybrid_stack(params: Params, x, positions, cfg: ArchConfig, cache):
+    n_m, n_groups, per_group, rem = hybrid_layout(cfg)
+    lp, states = params["layers"], cache["layers"]
+
+    def reshape_groups(tree):
+        return jax.tree_util.tree_map(
+            lambda a: a[:n_groups * per_group].reshape(
+                (n_groups, per_group) + a.shape[1:]), tree)
+
+    grouped_p = reshape_groups(lp)
+    grouped_s = reshape_groups(states)
+    shared_p = params["shared_attn"]
+
+    def body(h, xs):
+        g_params, g_states, a_cache = xs
+        h, new_g = _scan_mamba_span(g_params, h, cfg, g_states)
+        h, new_a, _ = decoder_layer_apply(shared_p, h, positions, cfg,
+                                          cache=a_cache)
+        return h, (new_g, new_a)
+
+    body = _maybe_remat(body, cfg)
+    x, (new_grouped, new_attn) = jax.lax.scan(
+        body, x, (grouped_p, grouped_s, cache["attn"]))
+    new_states = jax.tree_util.tree_map(
+        lambda a: a.reshape((n_groups * per_group,) + a.shape[2:]), new_grouped)
+    if rem:
+        rem_p = jax.tree_util.tree_map(lambda a: a[n_m - rem:], lp)
+        rem_s = jax.tree_util.tree_map(lambda a: a[n_m - rem:], states)
+        x, new_rem = _scan_mamba_span(rem_p, x, cfg, rem_s)
+        new_states = jax.tree_util.tree_map(
+            lambda a, b: jnp.concatenate([a, b], axis=0), new_states, new_rem)
+    return x, new_states, new_attn
+
+
+# ---------------------------------------------------------------------------
+# prefill / decode
+# ---------------------------------------------------------------------------
+
+def _lm_head(params, h_last, cfg: ArchConfig):
+    w = _unembed_weight(params, cfg)
+    return jnp.einsum("bd,dv->bv", h_last.astype(jnp.float32),
+                      w.astype(jnp.float32))
+
+
+def prefill(params: Params, batch: Dict[str, jnp.ndarray], cfg: ArchConfig,
+            cache: Cache) -> Tuple[jnp.ndarray, Cache]:
+    """Run the prompt through the model, filling `cache`.
+
+    Returns (logits for the last position (B, V), updated cache)."""
+    fam = cfg.family
+    tokens = batch["tokens"]
+    pos0 = cache["pos"]
+
+    if fam == "encdec":
+        # encoder pass + cross-kv capture
+        enc_in = _frontend_embed(params, batch["src_features"], cfg)
+        enc_pos = jnp.arange(enc_in.shape[1])[None, :]
+        from repro.models.attention import gqa_self_attention
+        from repro.models.mlp import mlp_apply
+
+        def enc_body(h, layer_p):
+            hn = rmsnorm(h, layer_p["ln1"], cfg.norm_eps)
+            a, _ = gqa_self_attention(layer_p["attn"], hn, enc_pos, cfg,
+                                      causal=False)
+            h = h + a.astype(h.dtype)
+            h2 = rmsnorm(h, layer_p["ln2"], cfg.norm_eps)
+            return h + mlp_apply(layer_p["mlp"], h2, cfg).astype(h.dtype), None
+
+        enc_out, _ = jax.lax.scan(_maybe_remat(enc_body, cfg), enc_in,
+                                  params["enc_layers"])
+        enc_out = rmsnorm(enc_out, params["ln_enc"], cfg.norm_eps)
+
+        def kv_body(_, layer_p):
+            k, v = cross_attention_kv(layer_p["cross"], enc_out, cfg)
+            return None, (k, v)
+
+        _, (ck, cv) = jax.lax.scan(kv_body, None, params["layers"])
+        cache = dict(cache)
+        cache["cross_k"] = ck.astype(cache["cross_k"].dtype)
+        cache["cross_v"] = cv.astype(cache["cross_v"].dtype)
+        x = _embed(params, tokens, cfg)
+        positions = pos0 + jnp.arange(tokens.shape[1])[None, :]
+        x, new_layers = _run_decoder_stack(params, x, positions, cfg, cache,
+                                           cross=True)
+    elif fam == "vlm":
+        img = _frontend_embed(params, batch["patch_embeds"], cfg)
+        txt = _embed(params, tokens, cfg)
+        x = jnp.concatenate([img, txt], axis=1)
+        positions = pos0 + jnp.arange(x.shape[1])[None, :]
+        x, new_layers = _run_decoder_stack(params, x, positions, cfg, cache)
+    elif fam in ("dense", "moe"):
+        x = _embed(params, tokens, cfg)
+        positions = pos0 + jnp.arange(tokens.shape[1])[None, :]
+        x, new_layers = _run_decoder_stack(params, x, positions, cfg, cache)
+    elif fam == "ssm":
+        x = _embed(params, tokens, cfg)
+        x, new_layers = _run_ssm_stack(params, x, cfg, cache["layers"])
+    elif fam == "hybrid":
+        x = _embed(params, tokens, cfg)
+        positions = pos0 + jnp.arange(tokens.shape[1])[None, :]
+        x, new_layers, new_attn = _run_hybrid_stack(params, x, positions,
+                                                    cfg, cache)
+    else:
+        raise ValueError(fam)
+
+    new_cache = dict(cache)
+    new_cache["layers"] = new_layers
+    if fam == "hybrid":
+        new_cache["attn"] = new_attn
+    step = tokens.shape[1] if fam != "vlm" else tokens.shape[1] + \
+        batch["patch_embeds"].shape[1]
+    new_cache["pos"] = pos0 + step
+    x = rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    return _lm_head(params, x[:, -1, :], cfg), new_cache
+
+
+def decode_step(params: Params, tokens: jnp.ndarray, cfg: ArchConfig,
+                cache: Cache) -> Tuple[jnp.ndarray, Cache]:
+    """One decode step.  tokens: (B, 1) int32.  Returns ((B, V) logits, cache)."""
+    fam = cfg.family
+    pos0 = cache["pos"]
+    x = _embed(params, tokens, cfg)
+    positions = pos0 + jnp.arange(tokens.shape[1])[None, :]
+
+    if fam in ("dense", "moe", "vlm"):
+        x, new_layers = _run_decoder_stack(params, x, positions, cfg, cache)
+        new_attn = None
+    elif fam == "encdec":
+        x, new_layers = _run_decoder_stack(params, x, positions, cfg, cache,
+                                           cross=True)
+        new_attn = None
+    elif fam == "ssm":
+        x, new_layers = _run_ssm_stack(params, x, cfg, cache["layers"])
+        new_attn = None
+    elif fam == "hybrid":
+        x, new_layers, new_attn = _run_hybrid_stack(params, x, positions,
+                                                    cfg, cache)
+    else:
+        raise ValueError(fam)
+
+    new_cache = dict(cache)
+    new_cache["layers"] = new_layers
+    if new_attn is not None:
+        new_cache["attn"] = new_attn
+    new_cache["pos"] = pos0 + tokens.shape[1]
+    x = rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    return _lm_head(params, x[:, -1, :], cfg), new_cache

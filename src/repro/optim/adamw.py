@@ -1,0 +1,120 @@
+"""AdamW + schedules + global-norm clipping (no optax offline).
+
+Optimizer state is a pytree shaped like params (moments inherit the
+parameter sharding => ZeRO-3 with FSDP param specs).  Moment dtype comes from
+ArchConfig.opt_state_dtype (bf16 for the 671B config — DESIGN.md §2.1).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    m: Any
+    v: Any
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree_util.tree_map(
+        lambda x: (x.astype(jnp.float32) * scale).astype(x.dtype), tree), norm
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int,
+                    min_ratio: float = 0.1) -> Callable:
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / jnp.maximum(1.0, warmup)
+        t = jnp.clip((step - warmup) / jnp.maximum(1.0, total - warmup), 0, 1)
+        cos = base_lr * (min_ratio + (1 - min_ratio) * 0.5 *
+                         (1 + jnp.cos(jnp.pi * t)))
+        return jnp.where(step < warmup, warm, cos)
+    return lr
+
+
+class AdamW:
+    def __init__(self, lr: Callable | float = 3e-4, b1: float = 0.9,
+                 b2: float = 0.95, eps: float = 1e-8,
+                 weight_decay: float = 0.1, clip_norm: float = 1.0,
+                 state_dtype: str = "float32"):
+        self.lr = lr if callable(lr) else (lambda _: jnp.float32(lr))
+        self.b1, self.b2, self.eps = b1, b2, eps
+        self.weight_decay = weight_decay
+        self.clip_norm = clip_norm
+        self.state_dtype = jnp.dtype(state_dtype)
+
+    def init(self, params) -> AdamWState:
+        zeros = lambda p: jnp.zeros(p.shape, self.state_dtype)
+        return AdamWState(
+            step=jnp.zeros((), jnp.int32),
+            m=jax.tree_util.tree_map(zeros, params),
+            v=jax.tree_util.tree_map(zeros, params))
+
+    def update(self, grads, state: AdamWState, params
+               ) -> Tuple[Any, AdamWState, Dict[str, jnp.ndarray]]:
+        step = state.step + 1
+        grads, gnorm = clip_by_global_norm(grads, self.clip_norm)
+        b1, b2 = self.b1, self.b2
+        sd = self.state_dtype
+
+        m_new = jax.tree_util.tree_map(
+            lambda g, m: (b1 * m.astype(jnp.float32) +
+                          (1 - b1) * g.astype(jnp.float32)).astype(sd),
+            grads, state.m)
+        v_new = jax.tree_util.tree_map(
+            lambda g, v: (b2 * v.astype(jnp.float32) +
+                          (1 - b2) * jnp.square(g.astype(jnp.float32))
+                          ).astype(sd),
+            grads, state.v)
+
+        lr = self.lr(step)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def delta(p, m, v):
+            mhat = m.astype(jnp.float32) / bc1
+            vhat = v.astype(jnp.float32) / bc2
+            d = mhat / (jnp.sqrt(vhat) + self.eps)
+            if p.ndim >= 2:      # decoupled weight decay on matrices only
+                d = d + self.weight_decay * p.astype(jnp.float32)
+            return (-lr * d).astype(p.dtype)
+
+        updates = jax.tree_util.tree_map(delta, params, m_new, v_new)
+        new_state = AdamWState(step=step, m=m_new, v=v_new)
+        return updates, new_state, {"grad_norm": gnorm, "lr": lr}
+
+
+def apply_updates(params, updates):
+    return jax.tree_util.tree_map(lambda p, u: p + u.astype(p.dtype),
+                                  params, updates)
+
+
+def sgd_momentum(lr: float = 0.1, momentum: float = 0.9):
+    """Tiny SGD for the ADAPTNET trainers/tests."""
+
+    class SGD:
+        def init(self, params):
+            return AdamWState(
+                step=jnp.zeros((), jnp.int32),
+                m=jax.tree_util.tree_map(lambda p: jnp.zeros_like(p), params),
+                v=None)
+
+        def update(self, grads, state, params):
+            m = jax.tree_util.tree_map(
+                lambda g, m_: momentum * m_ + g, grads, state.m)
+            updates = jax.tree_util.tree_map(lambda m_: -lr * m_, m)
+            return updates, AdamWState(state.step + 1, m, None), {}
+
+    return SGD()

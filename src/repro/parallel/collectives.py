@@ -1,0 +1,81 @@
+"""Distributed-optimization collectives: int8-compressed gradient reduction.
+
+``quantized_psum`` halves (vs bf16) / quarters (vs f32) the bytes a gradient
+all-reduce moves across ICI:
+
+  1. agree on a global scale:      psum-max of |x|        (scalar)
+  2. quantize to int8 shards + all_to_all   (1 B/elem on the wire)
+  3. dequantize + reduce locally in f32
+  4. re-quantize the reduced shard + all_gather (1 B/elem)
+
+Equivalent bytes: ~2 x 1 B/elem vs. 2 x 2 B/elem for a bf16 ring
+all-reduce.  Quantization error is bounded by the error-feedback residual
+(returned to the caller; add it to the next step's gradient — ZeRO-style EF).
+
+Used by the compressed-DP train-step variant (flag) and §Perf hillclimb.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def _quant(x: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+
+
+def _dequant(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def quantized_psum(x: jnp.ndarray, axis_name: str, axis_size: int
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Inside shard_map: sum x over `axis_name` with int8 wire format.
+
+    x: (..., D) with D % axis_size == 0 (caller pads).
+    Returns (summed x (f32), local error-feedback residual)."""
+    orig_shape = x.shape
+    x = x.astype(jnp.float32).reshape(-1)
+    n = x.shape[0]
+    pad = (-n) % axis_size
+    if pad:
+        x = jnp.pad(x, (0, pad))
+
+    amax = jax.lax.pmax(jnp.max(jnp.abs(x)), axis_name)
+    scale = jnp.maximum(amax, 1e-20) / 127.0
+
+    q = _quant(x, scale)
+    err = x - _dequant(q, scale)                       # error feedback
+
+    # reduce-scatter in int8: all_to_all my shards, reduce locally in f32
+    qs = q.reshape(axis_size, -1)
+    qs = jax.lax.all_to_all(qs[None], axis_name, split_axis=1,
+                            concat_axis=0, tiled=False)[..., 0, :]
+    # qs: (axis_size, chunk) — one int8 shard from each peer
+    local_sum = jnp.sum(_dequant(qs, scale), axis=0)   # (chunk,) f32
+
+    # re-quantize the reduced shard and all-gather it
+    amax2 = jax.lax.pmax(jnp.max(jnp.abs(local_sum)), axis_name)
+    scale2 = jnp.maximum(amax2, 1e-20) / 127.0
+    q2 = _quant(local_sum, scale2)
+    gathered = jax.lax.all_gather(q2, axis_name, tiled=True)
+    out = _dequant(gathered, scale2)[:n].reshape(orig_shape)
+    err = err[:n].reshape(orig_shape)
+    return out, err
+
+
+def quantized_psum_tree(grads, axis_name: str, axis_size: int):
+    """Apply quantized_psum per leaf; returns (summed grads, error tree)."""
+    flat, treedef = jax.tree_util.tree_flatten(grads)
+    outs, errs = [], []
+    for leaf in flat:
+        o, e = quantized_psum(leaf, axis_name, axis_size)
+        outs.append(o.astype(leaf.dtype))
+        errs.append(e.astype(leaf.dtype))
+    return (jax.tree_util.tree_unflatten(treedef, outs),
+            jax.tree_util.tree_unflatten(treedef, errs))

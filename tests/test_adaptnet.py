@@ -1,0 +1,67 @@
+"""ADAPTNET learning quality (scaled-down, fast): learns the config space,
+beats the classical baselines, near-oracle relative performance."""
+
+import numpy as np
+import pytest
+
+from repro.core import adaptnet as A
+from repro.core import baselines as B
+from repro.core import dataset as D
+from repro.core.rsa import SAGAR_INSTANCE
+
+N_TRAIN = 60_000
+EPOCHS = 8
+
+
+@pytest.fixture(scope="module")
+def data():
+    ds = D.generate(N_TRAIN, seed=11)
+    return ds.split()
+
+
+@pytest.fixture(scope="module")
+def trained(data):
+    tr, te = data
+    return A.train(tr, te, epochs=EPOCHS, log=False)
+
+
+def test_dataset_properties(data):
+    tr, te = data
+    assert tr.num_classes == 108
+    assert tr.features.min() >= 1 and tr.features.max() <= 10_000
+    assert len(np.unique(tr.labels)) >= 10     # non-degenerate space
+    # labels are reproducible
+    ds2 = D.generate(2_000, seed=11)
+    ds1 = D.generate(2_000, seed=11)
+    assert np.array_equal(ds1.labels, ds2.labels)
+
+
+def test_adaptnet_accuracy(trained):
+    """At 1/7 of the default dataset and 8 epochs, >= 80% — full-scale run
+    (benchmarks/fig8) reaches the ~90%+ regime like the paper's 95%."""
+    assert trained.test_accuracy >= 0.80
+
+
+def test_adaptnet_near_oracle_performance(trained, data):
+    """Paper Fig. 9c: GeoMean 99.93% of oracle; we require >= 98% at the
+    scaled-down training budget (median misprediction is an exact tie —
+    the paper's 'benign mispredictions'); full-scale numbers in
+    benchmarks/fig8_adaptnet."""
+    _, te = data
+    pred = A.predict(trained.params, te.features)
+    geo = D.geomean_relative(SAGAR_INSTANCE, te.features, pred, "edp")
+    assert geo <= 1.02
+    rel = D.relative_performance(SAGAR_INSTANCE, te.features, pred, "edp")
+    assert np.percentile(rel, 50) <= 1.001   # median misprediction benign
+
+
+def test_adaptnet_beats_linear_baseline(trained, data):
+    tr, te = data
+    lr = B.logistic_regression(tr, te)
+    assert trained.test_accuracy > lr.accuracy + 0.05
+
+
+def test_training_monotone_improvement(trained):
+    first = trained.history[0][2]
+    last = trained.history[-1][2]
+    assert last > first

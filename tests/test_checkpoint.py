@@ -1,0 +1,92 @@
+"""Checkpoint manager: roundtrip, atomicity, GC, async, elastic restore."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+
+
+def _tree(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {"a": jax.random.normal(k, (8, 16)),
+            "nested": {"b": jnp.arange(10, dtype=jnp.int32),
+                       "c": jnp.float32(3.5)}}
+
+
+def test_roundtrip(tmp_path):
+    mgr = CheckpointManager(tmp_path)
+    t = _tree()
+    mgr.save(5, t, metadata={"loss": 1.25})
+    step, restored, meta = mgr.restore(jax.eval_shape(lambda: t))
+    assert step == 5 and meta["loss"] == 1.25
+    for a, b in zip(jax.tree_util.tree_leaves(t),
+                    jax.tree_util.tree_leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_latest_and_gc(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=2)
+    for s in (1, 2, 3, 4):
+        mgr.save(s, _tree(s))
+    assert mgr.latest_step() == 4
+    assert mgr.steps() == [3, 4]        # GC keeps last 2
+
+
+def test_async_save_then_restore(tmp_path):
+    mgr = CheckpointManager(tmp_path)
+    t = _tree(7)
+    mgr.save(9, t, blocking=False)
+    mgr.wait()
+    step, restored, _ = mgr.restore(jax.eval_shape(lambda: t))
+    assert step == 9
+    np.testing.assert_array_equal(np.asarray(t["a"]),
+                                  np.asarray(restored["a"]))
+
+
+def test_no_partial_checkpoint_visible(tmp_path):
+    """A crash mid-save must not surface a corrupt step: temp dirs are
+    invisible to steps()."""
+    mgr = CheckpointManager(tmp_path)
+    mgr.save(1, _tree())
+    tmp = mgr.dir / ".tmp_step_00000002_999"
+    tmp.mkdir()
+    (tmp / "data.npz").write_bytes(b"garbage")
+    assert mgr.steps() == [1]
+    assert mgr.latest_step() == 1
+
+
+def test_restore_missing_key_raises(tmp_path):
+    mgr = CheckpointManager(tmp_path)
+    mgr.save(1, {"a": jnp.zeros((2,))})
+    with pytest.raises(KeyError):
+        mgr.restore({"a": jnp.zeros((2,)), "b": jnp.zeros((3,))})
+
+
+def test_dtype_cast_on_restore(tmp_path):
+    mgr = CheckpointManager(tmp_path)
+    mgr.save(1, {"a": jnp.ones((4,), jnp.float32)})
+    _, restored, _ = mgr.restore(
+        {"a": jax.ShapeDtypeStruct((4,), jnp.bfloat16)})
+    assert restored["a"].dtype == jnp.bfloat16
+
+
+def test_elastic_restore_new_sharding(tmp_path):
+    """Save unsharded, restore with an explicit (1,1)-mesh sharding — the
+    single-device stand-in for the re-mesh path (multi-device covered by
+    test_sharding.py subprocess)."""
+    from jax.sharding import PartitionSpec as P
+    from repro.launch.mesh import make_host_mesh
+    from repro.parallel.sharding import to_named
+    mgr = CheckpointManager(tmp_path)
+    t = {"w": jnp.arange(32, dtype=jnp.float32).reshape(4, 8)}
+    mgr.save(3, t)
+    mesh = make_host_mesh(1, 1)
+    sh = to_named({"w": P(None, None)}, mesh)
+    step, restored, _ = mgr.restore(jax.eval_shape(lambda: t), shardings=sh)
+    np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                  np.asarray(t["w"]))

@@ -1,0 +1,125 @@
+"""Cost-model unit + property tests: the paper's Fig. 3 claims and the
+structural invariants of the SCALE-Sim-equivalent closed forms."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import costmodel as cm
+from repro.core.hw import IS, OS, WS
+from repro.core.rsa import SAGAR_INSTANCE, enumerate_configs
+
+
+# ---------------------------------------------------------------------------
+# paper Fig. 3 (motivating experiment): 256x64 @ 64x256
+# ---------------------------------------------------------------------------
+
+class TestFig3:
+    M, K, N = 256, 64, 256
+
+    def test_monolithic_reference(self):
+        mono = cm.monolithic_cost(self.M, self.K, self.N, 128, 128, OS)
+        assert float(mono.runtime) == 1784.0
+        assert float(mono.sram_reads) == 65536.0
+
+    def test_distributed_32x32_is_optimal_and_2x(self):
+        """Paper: the 32x32 distributed config is the most performant,
+        beating monolithic by about 2x."""
+        mono = cm.monolithic_cost(self.M, self.K, self.N, 128, 128, OS)
+        runtimes = {}
+        for units, dim in [(4, 64), (16, 32), (64, 16), (256, 8), (1024, 4)]:
+            d = cm.distributed_cost(self.M, self.K, self.N, dim, dim,
+                                    units, OS)
+            runtimes[dim] = float(d.runtime)
+        assert min(runtimes, key=runtimes.get) == 32
+        speedup = float(mono.runtime) / runtimes[32]
+        assert 1.8 <= speedup <= 2.3          # paper: "about 2x"
+
+    def test_distributed_32x32_4x_reads(self):
+        """Paper: the 32x32 config performs about 4x more SRAM reads."""
+        mono = cm.monolithic_cost(self.M, self.K, self.N, 128, 128, OS)
+        d = cm.distributed_cost(self.M, self.K, self.N, 32, 32, 16, OS)
+        assert float(d.sram_reads / mono.sram_reads) == pytest.approx(4.0)
+
+    def test_rsa_preserves_monolithic_reads(self):
+        """The RSA headline: distributed-level runtime at monolithic-level
+        reads (unified SRAM + multicast collation)."""
+        mono = cm.monolithic_cost(self.M, self.K, self.N, 128, 128, OS)
+        rsa = cm.gemm_cost(self.M, self.K, self.N, 32, 32, 4, 4, OS,
+                           system=cm.RSA)
+        assert float(rsa.sram_reads) == float(mono.sram_reads)
+        assert float(rsa.runtime) < float(mono.runtime)
+
+    def test_rsa_beats_both_baselines(self):
+        mono = cm.monolithic_cost(self.M, self.K, self.N, 128, 128, OS)
+        dist = cm.distributed_cost(self.M, self.K, self.N, 32, 32, 16, OS)
+        best_rsa = cm.oracle_runtime(SAGAR_INSTANCE,
+                                     [self.M], [self.K], [self.N])[0]
+        assert best_rsa <= float(dist.runtime)
+        assert best_rsa < float(mono.runtime)
+
+
+# ---------------------------------------------------------------------------
+# property tests (hypothesis)
+# ---------------------------------------------------------------------------
+
+dims = st.integers(min_value=1, max_value=8192)
+
+
+@settings(max_examples=60, deadline=None)
+@given(M=dims, K=dims, N=dims)
+def test_runtime_at_least_theoretical_min(M, K, N):
+    cost = cm.sweep_configs(SAGAR_INSTANCE, [M], [K], [N])
+    assert np.all(cost.runtime >= cost.theoretical_min_cycles - 1e-9)
+
+
+@settings(max_examples=60, deadline=None)
+@given(M=dims, K=dims, N=dims)
+def test_reads_at_least_compulsory(M, K, N):
+    cost = cm.sweep_configs(SAGAR_INSTANCE, [M], [K], [N])
+    # every config must read each operand element at least once
+    assert np.all(cost.sram_reads >= cost.theoretical_min_reads - 1e-9)
+
+
+@settings(max_examples=40, deadline=None)
+@given(M=dims, K=dims, N=dims)
+def test_distributed_reads_dominate_rsa(M, K, N):
+    rsa = cm.sweep_configs(SAGAR_INSTANCE, [M], [K], [N], system=cm.RSA)
+    dist = cm.sweep_configs(SAGAR_INSTANCE, [M], [K], [N],
+                            system=cm.DISTRIBUTED)
+    assert np.all(dist.sram_reads >= rsa.sram_reads - 1e-9)
+
+
+@settings(max_examples=40, deadline=None)
+@given(M=dims, K=dims, N=dims, df=st.sampled_from([OS, WS, IS]))
+def test_runtime_monotone_in_dims(M, K, N, df):
+    base = cm.gemm_cost(M, K, N, 32, 32, 4, 4, df, system=cm.RSA)
+    bigger = cm.gemm_cost(M + 64, K + 64, N + 64, 32, 32, 4, 4, df,
+                          system=cm.RSA)
+    assert float(bigger.runtime) >= float(base.runtime)
+    assert float(bigger.sram_reads) >= float(base.sram_reads)
+
+
+@settings(max_examples=30, deadline=None)
+@given(M=dims, K=dims, N=dims)
+def test_energy_positive_and_edp_consistent(M, K, N):
+    cost = cm.sweep_configs(SAGAR_INSTANCE, [M], [K], [N])
+    assert np.all(cost.energy_pj > 0)
+    assert np.allclose(cost.edp, cost.energy_pj * cost.runtime)
+
+
+def test_best_config_deterministic():
+    M = np.array([100, 2000, 64])
+    K = np.array([64, 512, 4096])
+    N = np.array([256, 2000, 64])
+    a = cm.best_config(SAGAR_INSTANCE, M, K, N)
+    b = cm.best_config(SAGAR_INSTANCE, M, K, N)
+    assert np.array_equal(a, b)
+
+
+def test_oracle_no_worse_than_any_fixed_config():
+    rng = np.random.default_rng(3)
+    M, K, N = (rng.integers(1, 4096, 50) for _ in range(3))
+    cost = cm.sweep_configs(SAGAR_INSTANCE, M, K, N)
+    best = cm.oracle_runtime(SAGAR_INSTANCE, M, K, N)
+    assert np.all(best <= cost.runtime.min(axis=-1) + 1e-9)

@@ -1,0 +1,96 @@
+"""MoE dispatch/combine properties: EP padding, capacity, drop behavior."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ArchConfig, MoEConfig
+from repro.models.moe import (init_moe, moe_apply, padded_num_experts,
+                              row_capacity)
+
+
+def _cfg(E=8, k=2, cap=4.0, shared=0):
+    return ArchConfig(
+        name="t", family="moe", num_layers=2, d_model=32, num_heads=4,
+        num_kv_heads=2, head_dim=8, d_ff=64, vocab_size=128,
+        moe=MoEConfig(num_experts=E, num_shared_experts=shared,
+                      experts_per_token=k, d_ff_expert=16,
+                      capacity_factor=cap))
+
+
+def test_expert_padding_to_ep_axis():
+    cfg = _cfg(E=60)
+    assert padded_num_experts(cfg, 16) == 64
+    params = init_moe(jax.random.PRNGKey(0), cfg)
+    assert params["router"].shape[-1] == 64
+    assert params["w_gate"].shape[0] == 64
+
+
+def test_router_never_selects_padding_experts():
+    cfg = _cfg(E=6, k=3)      # padded to 16
+    params = init_moe(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 64, cfg.d_model))
+    logits = jnp.einsum("bsd,de->bse", x, params["router"])
+    logits = jnp.where(jnp.arange(16)[None, None, :] < 6, logits, -1e30)
+    _, idx = jax.lax.top_k(jax.nn.softmax(logits, -1), 3)
+    assert int(jnp.max(idx)) < 6
+
+
+def test_no_drops_at_high_capacity():
+    cfg = _cfg(E=8, k=2, cap=4.0)
+    params = init_moe(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 40, cfg.d_model))
+    y, aux = moe_apply(params, x, cfg)
+    assert float(aux["moe_drop_frac"]) == 0.0
+    assert y.shape == x.shape
+    assert bool(jnp.all(jnp.isfinite(y)))
+
+
+def test_drops_under_tight_capacity():
+    cfg = _cfg(E=8, k=2, cap=0.3)
+    params = init_moe(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 64, cfg.d_model))
+    y, aux = moe_apply(params, x, cfg)
+    assert 0.0 < float(aux["moe_drop_frac"]) < 1.0
+    assert bool(jnp.all(jnp.isfinite(y)))
+
+
+def test_row_capacity_formula():
+    cfg = _cfg(E=8, k=2, cap=1.25)
+    assert row_capacity(64, cfg) == int(np.ceil(64 * 2 / 8 * 1.25))
+    assert row_capacity(1, cfg) == 4       # floor
+
+
+def test_shared_experts_add_dense_path():
+    cfg0 = _cfg(shared=0)
+    cfg1 = _cfg(shared=2)
+    p1 = init_moe(jax.random.PRNGKey(0), cfg1)
+    assert "shared" in p1
+    assert p1["shared"]["w_gate"].shape == (cfg1.d_model, 2 * 16)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 8, cfg1.d_model))
+    y, _ = moe_apply(p1, x, cfg1)
+    assert bool(jnp.all(jnp.isfinite(y)))
+
+
+def test_moe_gradients_flow_to_all_parts():
+    cfg = _cfg(E=8, k=2, cap=4.0, shared=1)
+    params = init_moe(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 32, cfg.d_model))
+
+    def loss(p):
+        y, aux = moe_apply(p, x, cfg)
+        return jnp.sum(y ** 2) + aux["moe_lb_loss"]
+
+    g = jax.grad(loss)(params)
+    for name in ("router", "w_gate", "w_down"):
+        assert float(jnp.sum(jnp.abs(g[name]))) > 0.0, name
+
+
+def test_load_balance_loss_range():
+    cfg = _cfg(E=8, k=2)
+    params = init_moe(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 64, cfg.d_model))
+    _, aux = moe_apply(params, x, cfg)
+    # E * sum(f*p) is ~1 for balanced routing, > 1 when skewed
+    assert 0.5 < float(aux["moe_lb_loss"]) < 8.0

@@ -1,0 +1,47 @@
+"""RSA configuration-space enumeration invariants."""
+
+import numpy as np
+
+from repro.core.rsa import (CELL, RSAInstance, SAGAR_INSTANCE, config_table,
+                            enumerate_configs, make_instance)
+
+
+def test_space_sizes():
+    assert len(enumerate_configs(SAGAR_INSTANCE)) == 108      # 2^14 MACs
+    assert len(enumerate_configs(make_instance(2 ** 13))) == 90
+    assert len(enumerate_configs(make_instance(2 ** 12))) == 75
+
+
+def test_even_tiling():
+    for cfg in enumerate_configs(SAGAR_INSTANCE):
+        assert cfg.sub_rows % CELL == 0 and cfg.sub_cols % CELL == 0
+        assert cfg.part_rows * cfg.sub_rows == SAGAR_INSTANCE.rows
+        assert cfg.part_cols * cfg.sub_cols == SAGAR_INSTANCE.cols
+        # every config uses the full MAC budget
+        assert (cfg.sub_rows * cfg.sub_cols * cfg.num_partitions
+                == SAGAR_INSTANCE.num_macs)
+
+
+def test_class_ids_stable_and_dense():
+    cfgs = enumerate_configs(SAGAR_INSTANCE)
+    assert [c.class_id for c in cfgs] == list(range(len(cfgs)))
+
+
+def test_monolithic_and_finest_present():
+    cfgs = enumerate_configs(SAGAR_INSTANCE)
+    shapes = {(c.sub_rows, c.sub_cols, c.num_partitions) for c in cfgs}
+    assert (128, 128, 1) in shapes          # fully monolithic
+    assert (4, 4, 1024) in shapes           # fully distributed
+
+
+def test_config_table_matches_enumeration():
+    tab = config_table(SAGAR_INSTANCE)
+    cfgs = tab["configs"]
+    assert np.array_equal(tab["R"], [c.sub_rows for c in cfgs])
+    assert np.array_equal(tab["p"], [c.part_rows for c in cfgs])
+
+
+def test_make_instance_mac_budget():
+    for p in (12, 13, 14, 16):
+        inst = make_instance(2 ** p)
+        assert inst.num_macs == 2 ** p

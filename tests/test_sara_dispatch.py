@@ -1,0 +1,78 @@
+"""SARA dispatcher: recommendations are feasible + execution is exact."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import tpu_costmodel as tcm
+from repro.core.hw import TPU_V5E
+from repro.core.sara import SaraDispatcher
+
+
+def test_tile_space_enumeration():
+    assert tcm.NUM_TILE_CLASSES == len(tcm.TILE_CONFIGS) == 3 * 3 * 5 * 3
+
+
+def test_recommendations_feasible():
+    d = SaraDispatcher()
+    for M, K, N in [(128, 128, 128), (4096, 4096, 4096), (37, 9000, 222)]:
+        cfg = d.recommend(M, K, N)
+        vmem = (cfg.block_m * cfg.block_k + cfg.block_k * cfg.block_n
+                + cfg.block_m * cfg.block_n) * 2 * tcm.DTYPE_BYTES
+        assert vmem <= TPU_V5E.vmem_bytes
+
+
+def test_recommendation_cached_constant_time():
+    d = SaraDispatcher()
+    c1 = d.recommend(512, 512, 512)
+    c2 = d.recommend(512, 512, 512)
+    assert c1 is c2
+
+
+def test_oracle_beats_fixed_config_on_average():
+    rng = np.random.default_rng(0)
+    M, K, N = (rng.integers(64, 8192, 200) for _ in range(3))
+    costs = tcm.tile_cost_seconds(M, K, N)
+    best = costs.min(-1)
+    fixed = costs[:, 0]
+    assert np.mean(best / fixed) < 1.0
+
+
+def test_dispatcher_gemm_matches_einsum():
+    d = SaraDispatcher(use_pallas=False)
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 96, 64))
+    w = jax.random.normal(jax.random.PRNGKey(1), (64, 48))
+    np.testing.assert_allclose(np.asarray(d.gemm(x, w)),
+                               np.asarray(jnp.einsum("bmk,kn->bmn", x, w)),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_dispatcher_gemm_pallas_path():
+    d = SaraDispatcher(use_pallas=True)
+    x = jax.random.normal(jax.random.PRNGKey(0), (160, 192))
+    w = jax.random.normal(jax.random.PRNGKey(1), (192, 130))
+    np.testing.assert_allclose(np.asarray(d.gemm(x, w)),
+                               np.asarray(x @ w), rtol=2e-4, atol=2e-4)
+
+
+def test_sharding_planner_sensible():
+    # huge square GEMM -> use the whole mesh (2d)
+    assert tcm.plan_gemm_sharding(8192, 8192, 8192).name in ("2d",)
+    # tiny GEMM -> replicated beats paying collectives
+    assert tcm.plan_gemm_sharding(64, 64, 64).name in ("replicated", "row_dp")
+    # M indivisible by data -> no row sharding chosen
+    p = tcm.plan_gemm_sharding(63, 4096, 4096)
+    assert p.x_spec[0] != "data"
+
+
+def test_adaptnet_tpu_learns_tile_space():
+    """Scaled-down training run on the (harder, 135-class) TPU tile space;
+    the full-scale numbers live in benchmarks/bench_sara_tpu."""
+    from repro.core.sara import train_adaptnet_tpu
+    params, acc, geo = train_adaptnet_tpu(n_samples=40_000, epochs=8)
+    assert acc >= 0.5
+    assert geo <= 1.15
+    d = SaraDispatcher(mode="adaptnet", adaptnet_params=params)
+    cfg = d.recommend(1024, 1024, 1024)
+    assert cfg in tcm.TILE_CONFIGS

@@ -1,0 +1,81 @@
+"""End-to-end behaviour of the full system (deliverable c, integration)."""
+
+import jax
+import numpy as np
+import pytest
+
+
+def test_train_e2e_loss_decreases(tmp_path):
+    """Full substrate loop (pipeline -> sharded step -> optimizer ->
+    checkpoints -> driver): loss must fall well below the start."""
+    from repro.launch.train import train_main
+    params, history, driver = train_main(
+        arch="llama3.2-1b", preset="reduced", steps=25, global_batch=8,
+        seq_len=64, checkpoint_dir=str(tmp_path / "ckpt"),
+        checkpoint_every=10, log_every=0)
+    losses = [h["loss"] for h in history]
+    assert losses[-1] < losses[0] * 0.85
+    assert driver.restarts == 0
+    assert driver.ckpt.latest_step() is not None
+
+
+def test_train_e2e_with_injected_failure(tmp_path):
+    """A mid-run crash restores from checkpoint and still converges."""
+    from repro.launch.train import train_main
+    fired = []
+
+    def injector(step):
+        if step == 12 and not fired:
+            fired.append(step)
+            raise RuntimeError("simulated preemption")
+
+    params, history, driver = train_main(
+        arch="llama3.2-1b", preset="reduced", steps=24, global_batch=8,
+        seq_len=64, checkpoint_dir=str(tmp_path / "ckpt2"),
+        checkpoint_every=6, log_every=0, fail_injector=injector)
+    assert driver.restarts == 1
+    losses = [h["loss"] for h in history]
+    assert losses[-1] < losses[0] * 0.9
+
+
+def test_serve_e2e_all_families():
+    """Wave serving runs for one arch per family; greedy decode is
+    deterministic."""
+    from repro.launch.serve import serve_waves
+    for arch in ("gemma-2b", "qwen2-moe-a2.7b", "rwkv6-1.6b",
+                 "seamless-m4t-medium", "internvl2-76b", "zamba2-7b"):
+        outputs, stats = serve_waves(arch=arch, batch=2, prompt_len=8,
+                                     gen=4, waves=1, temperature=0.0,
+                                     log=False)
+        assert outputs[0].shape == (2, 4)
+        assert stats["decode_tokens"] > 0
+
+    o1, _ = serve_waves(arch="gemma-2b", batch=2, prompt_len=8, gen=4,
+                        waves=1, temperature=0.0, seed=3, log=False)
+    o2, _ = serve_waves(arch="gemma-2b", batch=2, prompt_len=8, gen=4,
+                        waves=1, temperature=0.0, seed=3, log=False)
+    np.testing.assert_array_equal(o1[0], o2[0])
+
+
+def test_data_pipeline_determinism_and_restart():
+    from repro.data.pipeline import DataConfig, Loader, _batch
+    cfg = DataConfig(vocab_size=101, seq_len=16, global_batch=4, seed=7)
+    b1 = _batch(cfg, step=3)
+    b2 = _batch(cfg, step=3)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    # loader resumes mid-stream identically
+    l = Loader(cfg, start_step=3)
+    b3 = next(l)
+    l.close()
+    np.testing.assert_array_equal(b3["tokens"], b1["tokens"])
+
+
+def test_data_is_learnable_structure():
+    """The synthetic stream must be predictable (else e2e loss tests are
+    vacuous): the affine-bigram rule covers 95% of transitions."""
+    from repro.data.pipeline import DataConfig, _batch
+    cfg = DataConfig(vocab_size=101, seq_len=256, global_batch=2, seed=1)
+    t = _batch(cfg, 0)["tokens"]
+    pred = (31 % 101 * t[:, :-1].astype(np.int64) + 17) % 101
+    match = np.mean(pred == t[:, 1:])
+    assert match > 0.9

@@ -1,0 +1,107 @@
+"""Fig. 11 workload trends, Fig. 13 PPA ratios, Fig. 14 SIGMA comparison."""
+
+import numpy as np
+import pytest
+
+from repro.core import costmodel as cm
+from repro.core import ppa, sigma, workloads as W
+from repro.core.hw import OS
+from repro.core.rsa import SAGAR_INSTANCE
+
+
+@pytest.mark.parametrize("net", ["alphagozero", "deepspeech2", "fasterrcnn"])
+class TestFig11:
+    def _costs(self, net):
+        M, K, N = W.layer_dims(W.WORKLOADS[net]())
+        mono = cm.best_dataflow_cost(
+            lambda m, k, n, df: cm.monolithic_cost(m, k, n, 128, 128, df),
+            M, K, N)
+        dist = cm.best_dataflow_cost(
+            lambda m, k, n, df: cm.distributed_cost(m, k, n, 4, 4, 1024, df),
+            M, K, N)
+        # SAGAR runs the config ADAPTNET deploys (EDP objective —
+        # runtime/reads balanced, DESIGN.md §2.1)
+        best = cm.best_config(SAGAR_INSTANCE, M, K, N, objective="edp")
+        sagar_cost = cm.sweep_configs(SAGAR_INSTANCE, M, K, N)
+        take = lambda a: np.take_along_axis(a, best[:, None], -1)[:, 0]
+        sagar = {"runtime": take(sagar_cost.runtime),
+                 "sram_reads": take(sagar_cost.sram_reads),
+                 "energy_pj": take(sagar_cost.energy_pj),
+                 "edp": take(sagar_cost.edp)}
+        return mono, dist, sagar
+
+    def test_sagar_fastest_total(self, net):
+        """Paper Fig 11a: SAGAR's aggregate runtime <= both baselines."""
+        mono, dist, sagar = self._costs(net)
+        assert sagar["runtime"].sum() <= mono["runtime"].sum() * 1.001
+        assert sagar["runtime"].sum() <= dist["runtime"].sum() * 1.05
+
+    def test_sagar_reads_near_monolithic(self, net):
+        """Paper Fig 11b: SAGAR reads ~ monolithic, far below distributed."""
+        mono, dist, sagar = self._costs(net)
+        assert sagar["sram_reads"].sum() <= 1.5 * mono["sram_reads"].sum()
+        assert sagar["sram_reads"].sum() < 0.5 * dist["sram_reads"].sum()
+
+    def test_sagar_edp_beats_monolithic(self, net):
+        """Paper Fig 11e: SAGAR EDP is 80-92% below monolithic."""
+        mono, dist, sagar = self._costs(net)
+        assert sagar["edp"].sum() < mono["edp"].sum()
+
+
+def test_fig12_histogram_spread():
+    """Paper Fig 12a: distribution of favorable array sizes for a 16384-MAC
+    DISTRIBUTED system (paper caption) — no single size wins everywhere."""
+    M, K, N = W.layer_dims(W.synthetic_g())
+    best = cm.best_config(SAGAR_INSTANCE, M, K, N, objective="runtime",
+                          system=cm.DISTRIBUTED)
+    assert len(np.unique(best)) >= 3
+
+
+def test_fig13_ppa_headline_ratios():
+    r = ppa.headline_ratios()
+    assert r["density_vs_distributed"] == pytest.approx(3.2, rel=0.01)
+    assert r["power_eff_vs_distributed"] == pytest.approx(3.5, rel=0.01)
+    assert r["area_overhead_vs_monolithic"] == pytest.approx(0.08, abs=0.02)
+    assert r["power_overhead_vs_monolithic"] == pytest.approx(0.50, abs=0.02)
+    assert r["adaptnetx_area_frac"] == pytest.approx(0.0865)
+    assert r["adaptnetx_power_frac"] == pytest.approx(0.0136)
+    assert r["sigma_compute_eq_power_saving"] == pytest.approx(0.43, abs=0.02)
+    assert r["sigma_compute_eq_area_saving"] == pytest.approx(0.30, abs=0.02)
+
+
+class TestFig14Sigma:
+    def test_sigma_c_outperforms_sagar_dense(self):
+        """Paper: compute-normalized SIGMA beats SAGAR on dense workloads
+        (operands stream directly over the Benes network)."""
+        M, K, N = W.layer_dims(W.synthetic_g())
+        sig = sigma.sigma_c_runtime(M, K, N)
+        sag = cm.oracle_runtime(SAGAR_INSTANCE, M, K, N)
+        assert sig.sum() < sag.sum()
+
+    def test_sigma_a_loses_to_sagar_dense(self):
+        """Paper: area-normalized SIGMA is ~an order of magnitude slower."""
+        M, K, N = W.layer_dims(W.synthetic_g())
+        sig = sigma.sigma_a_runtime(M, K, N)
+        sag = cm.oracle_runtime(SAGAR_INSTANCE, M, K, N)
+        assert sig.sum() > sag.sum()
+
+    def test_sigma_a_wins_only_at_high_sparsity(self):
+        """Paper Fig 14d: SIGMA_A surpasses SAGAR above ~70% sparsity."""
+        M, K, N = W.layer_dims(W.deepspeech2())
+        sag = cm.oracle_runtime(SAGAR_INSTANCE, M, K, N).sum()
+        dense = sigma.sigma_a_runtime(M, K, N, density=1.0).sum()
+        sparse = sigma.sigma_a_runtime(M, K, N, density=0.1).sum()
+        assert dense > sag          # loses dense
+        assert sparse < dense       # sparsity monotonically helps SIGMA
+
+
+def test_adaptnetx_cycle_model():
+    """Fig. 9a shape: ADAPTNETX is far faster than borrowed systolic cells
+    and in the sub-1000-cycle class the paper reports."""
+    from repro.core.adaptnetx_model import (cycles_on_adaptnetx,
+                                            cycles_on_systolic_cells)
+    for classes in (108, 858):
+        sc = cycles_on_systolic_cells(1024, classes)
+        ax = cycles_on_adaptnetx(512, classes)
+        assert ax < sc / 2
+        assert ax < 1200        # same order as the paper's 576 @ 858 classes
