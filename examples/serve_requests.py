@@ -1,42 +1,64 @@
 """END-TO-END DRIVER (the paper is a GEMM-inference accelerator, so the
-e2e deliverable is batched serving): serve a small LM with batched request
-waves through the full stack — prefill, KV-cached decode, sampling,
-throughput accounting.
+e2e deliverable is serving): serve a mixed-length request trace through the
+continuous-batching engine — per-step admission, paged KV pool, SARA-routed
+GEMM dispatch, TTFT/latency/throughput telemetry.
 
-  PYTHONPATH=src python examples/serve_requests.py [--waves 3 --batch 8]
+  PYTHONPATH=src python examples/serve_requests.py [--requests 12 --slots 4]
 """
 import sys, pathlib, argparse
 sys.path.insert(0, str(pathlib.Path(__file__).parent.parent / "src"))
 
+import numpy as np
+
 from repro.configs.registry import get_arch
-from repro.launch.serve import serve_waves
+from repro.serving import EngineConfig, Request, ServingEngine
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama3.2-1b")
-    ap.add_argument("--waves", type=int, default=3)
-    ap.add_argument("--batch", type=int, default=8)
-    ap.add_argument("--prompt-len", type=int, default=48)
-    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-prompt", type=int, default=48)
+    ap.add_argument("--max-gen", type=int, default=32)
     ap.add_argument("--d-model", type=int, default=256,
                     help="width of the served model (reduced family)")
     ap.add_argument("--layers", type=int, default=4)
+    ap.add_argument("--temperature", type=float, default=0.8)
+    ap.add_argument("--seed", type=int, default=0)
     a = ap.parse_args()
 
     cfg = get_arch(a.arch).reduced().replace(
         d_model=a.d_model, head_dim=a.d_model // 4,
         d_ff=4 * a.d_model, num_layers=a.layers, vocab_size=4096)
-    n_params = None
     from repro.models.api import build_model
     n_params = build_model(cfg).num_params()
-    print(f"serving {cfg.name} (~{n_params/1e6:.1f}M params), "
-          f"{a.waves} waves x {a.batch} requests, "
-          f"{a.prompt_len}-token prompts, {a.gen}-token generations")
-    outputs, stats = serve_waves(
-        override_cfg=cfg, preset="as-is", batch=a.batch,
-        prompt_len=a.prompt_len, gen=a.gen, waves=a.waves)
-    print(f"served {sum(o.size for o in outputs)} tokens total")
+
+    rng = np.random.default_rng(a.seed)
+    reqs = []
+    for i in range(a.requests):
+        plen = int(rng.integers(8, a.max_prompt + 1))
+        gen = int(rng.integers(4, a.max_gen + 1))
+        reqs.append(Request(
+            rid=f"req-{i}",
+            prompt=rng.integers(0, cfg.vocab_size, plen).astype(np.int32),
+            max_new_tokens=gen,
+            arrival_time=float(i // 2)))      # two arrivals per step
+    print(f"serving {cfg.name} (~{n_params/1e6:.1f}M params): "
+          f"{a.requests} mixed-length requests "
+          f"(prompts 8-{a.max_prompt}, gens 4-{a.max_gen}) "
+          f"on {a.slots} slots")
+
+    engine = ServingEngine(cfg, EngineConfig(
+        num_slots=a.slots, max_len=a.max_prompt + a.max_gen + 1,
+        temperature=a.temperature, top_k=40, seed=a.seed,
+        max_prefills_per_step=2))
+    outputs = engine.run(reqs)
+    total = sum(len(v) for v in outputs.values())
+    print(f"served {total} tokens total")
+    print(engine.metrics.report(engine.dispatcher.cache_info()))
+    print(f"  gemm plan changes      {engine.plan_changes}")
+    print(f"  current gemm plan      {engine.gemm_plan}")
 
 
 if __name__ == "__main__":

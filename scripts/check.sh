@@ -1,0 +1,15 @@
+#!/usr/bin/env bash
+# CI gate: tier-1 tests + a fast serving smoke.
+#   bash scripts/check.sh
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1 tests =="
+python -m pytest -x -q
+
+echo "== serving smoke =="
+python -m repro.launch.serve --arch llama3.2-1b --smoke
+
+echo "check.sh: all green"

@@ -19,7 +19,7 @@ recommended sharding plan.
 from __future__ import annotations
 
 import functools
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Dict, Optional
 
 import jax
@@ -35,16 +35,17 @@ class SaraDispatcher:
     mode: str = "oracle"                   # "oracle" | "adaptnet"
     adaptnet_params: Optional[Dict] = None
     use_pallas: bool = False
-    _cache: Dict = None
-
-    def __post_init__(self):
-        self._cache = {}
+    _cache: Dict = field(default_factory=dict)
+    _hits: int = 0
+    _misses: int = 0
 
     # -- recommendation ------------------------------------------------------
     def recommend(self, M: int, K: int, N: int) -> tcm.TPUTileConfig:
         key = (M, K, N)
         if key in self._cache:
+            self._hits += 1
             return self._cache[key]
+        self._misses += 1
         if self.mode == "adaptnet" and self.adaptnet_params is not None:
             feats = jnp.array([[M, K, N]], jnp.int32)
             cid = int(jnp.argmax(logits_fn(self.adaptnet_params, feats), -1)[0])
@@ -53,6 +54,17 @@ class SaraDispatcher:
         cfg = tcm.TILE_CONFIGS[cid]
         self._cache[key] = cfg
         return cfg
+
+    def cache_info(self) -> Dict[str, int]:
+        """Recommendation-cache statistics (the serving engine reports the
+        hit rate: a high rate means shape diversity stayed inside the O(1)
+        lookup path)."""
+        return {"hits": self._hits, "misses": self._misses,
+                "size": len(self._cache)}
+
+    def cache_clear(self) -> None:
+        self._cache.clear()
+        self._hits = self._misses = 0
 
     def recommend_sharding(self, M: int, K: int, N: int,
                            data: int = 16, model: int = 16) -> tcm.ShardPlan:

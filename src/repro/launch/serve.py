@@ -1,43 +1,36 @@
-"""Batched serving launcher.
+"""Serving launcher — thin CLI over the continuous-batching ServingEngine.
 
   PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b \
-      --batch 4 --prompt-len 32 --gen 32
+      --requests 8 --prompt-len 32 --gen 32
 
-Slot-based batched serving: a wave of `batch` requests is prefilled
-together, then decoded step-by-step with temperature / top-k sampling;
-finished sequences (EOS or budget) retire and a new wave begins.  Reports
-prefill tokens/s and decode tokens/s.  The decode step is the same jitted
-``serve_step`` the dry-run lowers at production shapes.
+  PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --smoke
+
+``serve_waves`` is kept as the wave-based compatibility path (a whole batch
+prefills together and decodes until the longest member finishes): it is the
+reference the engine's greedy outputs are tested against, and the baseline
+``benchmarks/bench_serving.py`` compares continuous batching to.
+
+``sample_logits`` now lives in ``repro.serving.engine``; the re-export here
+keeps existing imports working.
 """
 
 from __future__ import annotations
 
 import argparse
 import time
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-
-def sample_logits(key, logits: jnp.ndarray, temperature: float = 1.0,
-                  top_k: int = 0) -> jnp.ndarray:
-    """logits: (B, V) -> (B,) int32."""
-    if temperature <= 0.0:
-        return jnp.argmax(logits, -1).astype(jnp.int32)
-    logits = logits / temperature
-    if top_k > 0:
-        vals, _ = jax.lax.top_k(logits, top_k)
-        thresh = vals[:, -1:]
-        logits = jnp.where(logits < thresh, -1e30, logits)
-    return jax.random.categorical(key, logits, -1).astype(jnp.int32)
+from repro.serving.engine import sample_logits  # noqa: F401  (compat re-export)
 
 
 def serve_waves(arch: str = "llama3.2-1b", preset: str = "reduced",
                 batch: int = 4, prompt_len: int = 32, gen: int = 32,
                 waves: int = 2, temperature: float = 0.8, top_k: int = 40,
                 seed: int = 0, override_cfg=None, log: bool = True):
+    """Wave-based batched serving (compatibility / baseline path)."""
     from repro.configs.registry import get_arch
     from repro.models.api import build_model
 
@@ -105,17 +98,74 @@ def serve_waves(arch: str = "llama3.2-1b", preset: str = "reduced",
     return outputs, stats
 
 
+def serve_continuous(arch: str = "llama3.2-1b", preset: str = "reduced",
+                     num_requests: int = 8, num_slots: int = 4,
+                     prompt_len: int = 32, gen: int = 32,
+                     temperature: float = 0.8, top_k: int = 40,
+                     seed: int = 0, override_cfg=None, log: bool = True):
+    """Serve a request set through the continuous-batching engine."""
+    from repro.configs.registry import get_arch
+    from repro.serving import EngineConfig, Request, ServingEngine
+
+    cfg = override_cfg if override_cfg is not None else get_arch(arch)
+    if preset == "reduced":
+        cfg = cfg.reduced()
+    rng = np.random.default_rng(seed)
+    engine = ServingEngine(cfg, EngineConfig(
+        num_slots=num_slots, max_len=prompt_len + gen + 1,
+        temperature=temperature, top_k=top_k, seed=seed,
+        src_len=prompt_len if cfg.family == "encdec" else 0))
+    reqs = []
+    for i in range(num_requests):
+        p = rng.integers(0, cfg.vocab_size, prompt_len).astype(np.int32)
+        extras = None
+        if cfg.family == "encdec":
+            extras = {"src_features": rng.standard_normal(
+                (1, prompt_len, cfg.frontend.feature_dim)).astype(np.float32)}
+        reqs.append(Request(rid=f"req-{i}", prompt=p, max_new_tokens=gen,
+                            extras=extras))
+    t0 = time.time()
+    outputs = engine.run(reqs)
+    if log:
+        total = sum(len(v) for v in outputs.values())
+        print(f"served {len(reqs)} requests / {total} tokens "
+              f"in {time.time() - t0:.2f}s on {num_slots} slots")
+        print(engine.metrics.report(engine.dispatcher.cache_info()))
+    return outputs, engine
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama3.2-1b")
     ap.add_argument("--preset", default="reduced")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=32)
-    ap.add_argument("--waves", type=int, default=2)
+    ap.add_argument("--temperature", type=float, default=0.8)
+    ap.add_argument("--top-k", type=int, default=40)
+    ap.add_argument("--waves", type=int, default=0,
+                    help=">0: run the legacy wave-based path instead")
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast CI smoke: tiny trace, assert completion")
     a = ap.parse_args()
-    serve_waves(arch=a.arch, preset=a.preset, batch=a.batch,
-                prompt_len=a.prompt_len, gen=a.gen, waves=a.waves)
+    if a.smoke:
+        outputs, engine = serve_continuous(
+            arch=a.arch, num_requests=3, num_slots=2, prompt_len=12, gen=6,
+            temperature=0.0)
+        assert all(len(v) == 6 for v in outputs.values()), outputs
+        engine.pool.check()
+        assert engine.pool.num_free == engine.pool.num_blocks
+        print("serving smoke OK")
+        return
+    if a.waves > 0:
+        serve_waves(arch=a.arch, preset=a.preset, batch=a.slots,
+                    prompt_len=a.prompt_len, gen=a.gen, waves=a.waves,
+                    temperature=a.temperature, top_k=a.top_k)
+        return
+    serve_continuous(arch=a.arch, preset=a.preset, num_requests=a.requests,
+                     num_slots=a.slots, prompt_len=a.prompt_len, gen=a.gen,
+                     temperature=a.temperature, top_k=a.top_k)
 
 
 if __name__ == "__main__":

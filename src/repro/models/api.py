@@ -46,8 +46,8 @@ class Model:
     def init_cache(self, batch: int, max_len: int, src_len: int = 0):
         return serving.init_cache(self.cfg, batch, max_len, src_len)
 
-    def prefill(self, params, batch, cache):
-        return serving.prefill(params, batch, self.cfg, cache)
+    def prefill(self, params, batch, cache, length=None):
+        return serving.prefill(params, batch, self.cfg, cache, length)
 
     def decode_step(self, params, tokens, cache):
         return serving.decode_step(params, tokens, self.cfg, cache)

@@ -176,13 +176,27 @@ def _lm_head(params, h_last, cfg: ArchConfig):
 
 
 def prefill(params: Params, batch: Dict[str, jnp.ndarray], cfg: ArchConfig,
-            cache: Cache) -> Tuple[jnp.ndarray, Cache]:
+            cache: Cache, length=None) -> Tuple[jnp.ndarray, Cache]:
     """Run the prompt through the model, filling `cache`.
 
-    Returns (logits for the last position (B, V), updated cache)."""
+    Returns (logits for the last position (B, V), updated cache).
+
+    ``length`` (scalar int, may be traced) marks the number of valid prompt
+    tokens when ``batch["tokens"]`` is right-padded to a bucket shape: logits
+    come from position ``length - 1``, the cache position advances by
+    ``length``, and every KV-cache length is corrected so later decode steps
+    never attend to the padded keys (causal masking already hides them from
+    the real prompt positions during prefill).  One compilation per bucket
+    shape serves every prompt length in the bucket.  Attention families only:
+    ssm/hybrid recurrent state integrates every input token, so padded
+    prefill would corrupt it — callers must pass exact-length prompts there.
+    """
     fam = cfg.family
     tokens = batch["tokens"]
     pos0 = cache["pos"]
+    if length is None:
+        length = tokens.shape[1]
+    pad = tokens.shape[1] - length
 
     if fam == "encdec":
         # encoder pass + cross-kv capture
@@ -238,13 +252,19 @@ def prefill(params: Params, batch: Dict[str, jnp.ndarray], cfg: ArchConfig,
 
     new_cache = dict(cache)
     new_cache["layers"] = new_layers
-    if fam == "hybrid":
-        new_cache["attn"] = new_attn
-    step = tokens.shape[1] if fam != "vlm" else tokens.shape[1] + \
+    # the stack counted the padded width into every KVCache length
+    if fam in ("dense", "moe", "vlm", "encdec"):
+        new_cache["layers"] = new_layers._replace(
+            length=new_layers.length - pad)
+    elif fam == "hybrid":
+        new_cache["attn"] = new_attn._replace(length=new_attn.length - pad)
+    step = length if fam != "vlm" else length + \
         batch["patch_embeds"].shape[1]
     new_cache["pos"] = pos0 + step
     x = rmsnorm(x, params["ln_f"], cfg.norm_eps)
-    return _lm_head(params, x[:, -1, :], cfg), new_cache
+    last = step - 1
+    h_last = jax.lax.dynamic_slice_in_dim(x, last, 1, axis=1)[:, 0, :]
+    return _lm_head(params, h_last, cfg), new_cache
 
 
 def decode_step(params: Params, tokens: jnp.ndarray, cfg: ArchConfig,

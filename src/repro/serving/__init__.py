@@ -1,0 +1,19 @@
+"""Continuous-batching serving subsystem (ROADMAP north-star: production
+serving of shape-diverse traffic — the serving-side analogue of the paper's
+utilization argument).
+
+  kv_pool    paged KV-cache block pool: fixed-size blocks, per-request block
+             tables, alloc/extend/free/defrag, admission accounting
+  scheduler  request queue + continuous batching into fixed decode slots
+  engine     ServingEngine: jitted bucketed prefill + vmapped slot decode,
+             every GEMM site routed through SaraDispatcher.recommend
+  metrics    TTFT / latency percentiles / tokens-per-second / slot utilization
+"""
+
+from repro.serving.engine import EngineConfig, ServingEngine, sample_logits
+from repro.serving.kv_pool import KVBlockPool
+from repro.serving.metrics import ServingMetrics
+from repro.serving.scheduler import ContinuousScheduler, Request
+
+__all__ = ["EngineConfig", "ServingEngine", "sample_logits", "KVBlockPool",
+           "ServingMetrics", "ContinuousScheduler", "Request"]

@@ -1,0 +1,344 @@
+"""ServingEngine: continuous-batching inference over the repro model stack.
+
+Execution model
+---------------
+* ``num_slots`` fixed decode lanes.  Each slot owns a batch=1 cache pytree
+  (``models/serving.py``); the engine stacks them on a leading slot axis and
+  decodes every step with one ``jit(vmap(decode_step))`` — per-slot scalar
+  positions/lengths become per-lane under vmap, so heterogeneous sequence
+  lengths coexist in one batched step with no model changes.
+* Prefill runs per admitted request at a small set of padded *bucket*
+  shapes (one XLA compilation per bucket): the prompt is right-padded and
+  the true ``length`` is passed as a traced scalar, which
+  ``serving.prefill`` uses to pick the real last-token logits and correct
+  the cache lengths.  SSM/hybrid families use exact-length prefill (their
+  recurrent state integrates every input token).
+* Every GEMM site's (M, K, N) — which changes with the live token count —
+  is routed through ``SaraDispatcher.recommend`` before each prefill and
+  each decode round, so the recommended tile configuration adapts as the
+  batch composition shifts (the paper's runtime-reconfiguration loop, at
+  serving granularity).  ``SaraDispatcher.cache_info()`` feeds the
+  recommendation-cache hit rate into the metrics.
+* The ``KVBlockPool`` meters admission over *text* tokens (the vlm
+  frontend adds a constant per-slot overhead outside the budget).
+  ``reserve="full"`` can never stall; ``reserve="incremental"`` packs
+  denser: a lane whose block-table extension fails is rolled back to its
+  pre-step cache and stalls until blocks free up, and if every lane stalls
+  the newest request is preempted (recompute-on-readmit: it re-enters the
+  queue and re-prefills prompt+generated at its next admission).
+
+The clock is either ``"wall"`` (live serving) or ``"steps"`` (virtual time
+in engine-step units — deterministic, used by tests and trace benchmarks).
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core.sara import SaraDispatcher
+from repro.serving.kv_pool import KVBlockPool
+from repro.serving.metrics import ServingMetrics
+from repro.serving.scheduler import ContinuousScheduler, Request
+
+
+def sample_logits(key, logits: jnp.ndarray, temperature: float = 1.0,
+                  top_k: int = 0) -> jnp.ndarray:
+    """logits: (B, V) -> (B,) int32.  temperature<=0 is greedy argmax;
+    top_k>0 masks everything below the k-th logit before sampling."""
+    if temperature <= 0.0:
+        return jnp.argmax(logits, -1).astype(jnp.int32)
+    logits = logits / temperature
+    if top_k > 0:
+        vals, _ = jax.lax.top_k(logits, top_k)
+        thresh = vals[:, -1:]
+        logits = jnp.where(logits < thresh, -1e30, logits)
+    return jax.random.categorical(key, logits, -1).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# GEMM-site enumeration (what the dispatcher is consulted about)
+# ---------------------------------------------------------------------------
+
+def gemm_sites(cfg: ArchConfig, m_tokens: int) -> List[Tuple[str, int, int, int]]:
+    """The (M, K, N) of each distinct GEMM the model runs on ``m_tokens``
+    rows this step (MoE expert GEMMs use the expected routed-row count)."""
+    m = max(int(m_tokens), 1)
+    d = cfg.d_model
+    sites: List[Tuple[str, int, int, int]] = []
+    if cfg.attention_type == "gqa":
+        sites += [("attn_qkv", m, d, cfg.q_dim + 2 * cfg.kv_dim),
+                  ("attn_out", m, cfg.q_dim, d)]
+    elif cfg.attention_type == "mla":
+        a = cfg.mla
+        sites += [("mla_down", m, d,
+                   a.q_lora_rank + a.kv_lora_rank + a.qk_rope_head_dim),
+                  ("mla_out", m, cfg.num_heads * a.v_head_dim, d)]
+    if cfg.moe is not None:
+        sites += [("moe_expert",
+                   max(m * cfg.moe.experts_per_token, 1), d,
+                   2 * cfg.moe.d_ff_expert),
+                  ("moe_router", m, d, cfg.moe.num_experts)]
+    else:
+        sites += [("mlp_up", m, d, 2 * cfg.d_ff),
+                  ("mlp_down", m, cfg.d_ff, d)]
+    if cfg.ssm is not None:
+        sites += [("ssm_proj", m, d, 2 * cfg.ssm.expand * d)]
+    sites += [("lm_head", m, d, cfg.vocab_size)]
+    return sites
+
+
+# ---------------------------------------------------------------------------
+# engine
+# ---------------------------------------------------------------------------
+
+@dataclass
+class EngineConfig:
+    num_slots: int = 4
+    max_len: int = 96                 # per-slot token capacity (prompt+gen+1)
+    block_size: int = 16              # KV pool page size (tokens)
+    num_blocks: Optional[int] = None  # KV budget; None = full slot capacity
+    buckets: Optional[Sequence[int]] = None   # prefill shapes; None = pow2
+    max_prefills_per_step: int = 1
+    reserve: str = "full"             # "full" | "incremental"
+    temperature: float = 0.0
+    top_k: int = 0
+    seed: int = 0
+    eos_id: Optional[int] = None
+    clock: str = "steps"              # "steps" | "wall"
+    src_len: int = 0                  # encdec: shared encoder length
+
+
+class ServingEngine:
+    def __init__(self, cfg: ArchConfig, engine: EngineConfig = None,
+                 params=None, dispatcher: Optional[SaraDispatcher] = None):
+        from repro.models.api import build_model
+
+        self.cfg = cfg
+        self.ecfg = engine or EngineConfig()
+        self.model = build_model(cfg)
+        self.params = params if params is not None \
+            else self.model.init(jax.random.PRNGKey(self.ecfg.seed))
+        self.dispatcher = dispatcher or SaraDispatcher()
+        self.metrics = ServingMetrics()
+
+        e = self.ecfg
+        blocks_per_slot = -(-e.max_len // e.block_size)
+        num_blocks = (e.num_blocks if e.num_blocks is not None
+                      else e.num_slots * blocks_per_slot)
+        self.pool = KVBlockPool(num_blocks, e.block_size)
+        self.sched = ContinuousScheduler(
+            e.num_slots, self.pool,
+            max_prefills_per_step=e.max_prefills_per_step, reserve=e.reserve)
+
+        # stacked per-slot caches: leading axis = slot, each lane batch=1
+        self._cache_len = e.max_len + (cfg.frontend.num_tokens
+                                       if cfg.family == "vlm" else 0)
+        proto = self.model.init_cache(1, self._cache_len, src_len=e.src_len)
+        self._cache = jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(
+                a, (e.num_slots,) + a.shape).copy(), proto)
+        self._last_tok = np.zeros((e.num_slots, 1), np.int32)
+
+        self._prefill = jax.jit(self.model.prefill)
+        self._decode = jax.jit(jax.vmap(self.model.decode_step,
+                                        in_axes=(None, 0, 0)))
+        self._key = jax.random.PRNGKey(e.seed + 1)
+        self._vtime = 0.0
+        self._t0 = time.time()
+        self.gemm_plan: Dict[str, str] = {}
+        self.plan_changes = 0
+
+    # -- time -----------------------------------------------------------------
+    def now(self) -> float:
+        if self.ecfg.clock == "steps":
+            return self._vtime
+        return time.time() - self._t0
+
+    # -- SARA dispatch --------------------------------------------------------
+    def _dispatch(self, m_tokens: int) -> None:
+        plan = {}
+        for name, M, K, N in gemm_sites(self.cfg, m_tokens):
+            plan[name] = self.dispatcher.recommend(M, K, N).describe()
+        if plan != self.gemm_plan:
+            self.plan_changes += 1
+            self.gemm_plan = plan
+
+    # -- buckets --------------------------------------------------------------
+    def bucket_for(self, n: int) -> int:
+        if self.cfg.family in ("ssm", "hybrid"):
+            return n                   # recurrent state: no padded prefill
+        b = None
+        if self.ecfg.buckets:
+            fits = [x for x in sorted(self.ecfg.buckets) if x >= n]
+            if fits:
+                b = fits[0]
+        if b is None:
+            b = 16
+            while b < n:
+                b *= 2
+        # prefill writes `bucket` KV rows, so never pad past the slot arena
+        # (submit() guarantees n itself fits)
+        return max(n, min(b, self.ecfg.max_len))
+
+    # -- request lifecycle ----------------------------------------------------
+    def submit(self, req: Request) -> None:
+        if req.max_new_tokens < 1:
+            raise ValueError(f"request {req.rid}: max_new_tokens must be >= 1 "
+                             "(prefill always yields the first token)")
+        need = req.prompt_len + req.max_new_tokens + 1
+        if need > self.ecfg.max_len:
+            raise ValueError(f"request {req.rid} needs {need} tokens > "
+                             f"max_len {self.ecfg.max_len}")
+        if self.pool.blocks_for(need) > self.pool.num_blocks:
+            raise ValueError(
+                f"request {req.rid} needs {self.pool.blocks_for(need)} KV "
+                f"blocks > pool total {self.pool.num_blocks}; it could never "
+                "be admitted")
+        if req.eos_id is None:
+            req.eos_id = self.ecfg.eos_id
+        self.sched.submit(req)
+
+    def _slot_snapshot(self, slot: int):
+        return jax.tree_util.tree_map(lambda a: a[slot], self._cache)
+
+    def _slot_restore(self, slot: int, snap) -> None:
+        self._cache = jax.tree_util.tree_map(
+            lambda big, one: big.at[slot].set(one), self._cache, snap)
+
+    def _do_prefill(self, req: Request) -> None:
+        e, cfg = self.ecfg, self.cfg
+        context = np.concatenate(
+            [req.prompt, np.asarray(req.generated, np.int32)]) \
+            if req.generated else req.prompt
+        n = int(context.shape[0])
+        bucket = self.bucket_for(n)
+        toks = np.zeros((1, bucket), np.int32)
+        toks[0, :n] = context
+        batch = {"tokens": jnp.asarray(toks)}
+        if cfg.family == "vlm":
+            batch["patch_embeds"] = jnp.asarray(
+                (req.extras or {}).get(
+                    "patch_embeds",
+                    np.zeros((1, cfg.frontend.num_tokens,
+                              cfg.frontend.feature_dim), np.float32)),
+                jnp.dtype(cfg.compute_dtype))
+        if cfg.family == "encdec":
+            batch["src_features"] = jnp.asarray(
+                (req.extras or {}).get(
+                    "src_features",
+                    np.zeros((1, e.src_len, cfg.frontend.feature_dim),
+                             np.float32)),
+                jnp.dtype(cfg.compute_dtype))
+
+        self._dispatch(bucket)
+        fresh = self.model.init_cache(1, self._cache_len, src_len=e.src_len)
+        t0 = time.time()
+        logits, new_cache = jax.block_until_ready(self._prefill(
+            self.params, batch, fresh, jnp.int32(n)))
+        self.metrics.on_prefill(n, time.time() - t0)
+        self._slot_restore(req.slot, new_cache)
+
+        self._key, k = jax.random.split(self._key)
+        tok = int(np.asarray(sample_logits(
+            k, logits, e.temperature, e.top_k))[0])
+        first = not req.generated
+        req.generated.append(tok)
+        self._last_tok[req.slot, 0] = tok
+        if first and req.t_first_token < 0:
+            req.t_first_token = self.now()
+            self.metrics.on_first_token(req.arrival_time, req.t_first_token)
+
+    def _retire(self, req: Request) -> None:
+        self.sched.retire(req, self.now())
+        self.metrics.on_retire(req.arrival_time, req.t_admit, req.t_done)
+
+    def _preempt_newest(self) -> None:
+        """Every lane is stalled: preempt the newest request so the rest can
+        make progress.  Its blocks free immediately; it re-enters the queue
+        head and re-prefills prompt+generated at the next admission."""
+        victim = max(self.sched.active.values(), key=lambda r: r.t_admit)
+        slot = victim.slot
+        self.sched.retire(victim, self.now())
+        victim.stalled = False
+        self._last_tok[slot, 0] = 0
+        self.sched.waiting.appendleft(victim)
+
+    # -- main loop ------------------------------------------------------------
+    def step(self) -> bool:
+        """One engine step: admissions+prefills, then one batched decode.
+        Returns False when there is nothing left to do."""
+        if self.sched.idle():
+            return False
+        plan = self.sched.plan(self.now())
+        for req in plan.prefills:
+            self._do_prefill(req)
+            if req.done():
+                self._retire(req)
+
+        # a request can finish at prefill (first token == budget/EOS), so
+        # re-check the planned decode slots against the live set
+        active = {s: self.sched.active[s] for s in plan.decode_slots
+                  if s in self.sched.active}
+        if active:
+            # decide stalls BEFORE decoding: the coming step writes the KV of
+            # each lane's pending token, so its block table must cover
+            # prompt + generated tokens
+            snaps = {}
+            for slot, req in active.items():
+                if not self.sched.grow(req,
+                                       req.prompt_len + len(req.generated)):
+                    self.metrics.stalls += 1
+                    snaps[slot] = self._slot_snapshot(slot)
+            self._dispatch(len(active))
+            toks = jnp.asarray(self._last_tok)[:, :, None]   # (S, 1, 1)
+            t0 = time.time()
+            logits, self._cache = jax.block_until_ready(self._decode(
+                self.params, toks, self._cache))
+            dt = time.time() - t0
+            self._key, k = jax.random.split(self._key)
+            sampled = np.asarray(sample_logits(
+                k, logits[:, 0, :], self.ecfg.temperature, self.ecfg.top_k))
+            committed = 0
+            for slot, req in sorted(active.items()):
+                if req.stalled:
+                    # roll the lane back; it replays this token once the
+                    # pool can cover it
+                    self._slot_restore(slot, snaps[slot])
+                    continue
+                req.generated.append(int(sampled[slot]))
+                self._last_tok[slot, 0] = req.generated[-1]
+                committed += 1
+                if req.t_first_token < 0:
+                    req.t_first_token = self.now()
+                    self.metrics.on_first_token(req.arrival_time,
+                                                req.t_first_token)
+                if req.done():
+                    self._retire(req)
+            self.metrics.on_decode_step(len(active), self.ecfg.num_slots,
+                                        committed, dt)
+            if self.sched.active and \
+                    all(r.stalled for r in self.sched.active.values()):
+                self._preempt_newest()
+        self._vtime += 1.0
+        return True
+
+    def run(self, requests: Sequence[Request]) -> Dict[str, np.ndarray]:
+        """Serve a request set to completion; returns {rid: generated}."""
+        for r in requests:
+            self.submit(r)
+        while self.step():
+            pass
+        return {r.rid: np.asarray(r.generated, np.int32) for r in requests}
+
+    def summary(self) -> Dict[str, float]:
+        s = self.metrics.summary(self.dispatcher.cache_info())
+        s["gemm_plan_changes"] = self.plan_changes
+        s["kv_peak_blocks"] = self.pool.peak_in_use
+        return s

@@ -1,0 +1,175 @@
+"""Paged KV-cache block pool.
+
+The pool divides the KV-cache budget into fixed-size blocks of
+``block_size`` tokens and hands them out to requests on demand — the
+admission-control half of continuous batching (cf. the paged backends in
+vLLM/flashinfer).  Each live request owns a *block table*: the ordered list
+of physical block ids backing its logical token range.  Blocks are
+allocated lazily as a request's sequence crosses block boundaries and all
+return to the free list when the request retires, so short requests stop
+holding memory the moment they finish instead of at the end of a wave.
+
+Physical layout: the engine's per-slot caches (``models/serving.py``
+pytrees) are contiguous arenas; one slot spans ``slot_capacity //
+block_size`` consecutive logical pages, so allocation never fails from
+fragmentation and no data ever moves.  ``defrag()`` computes the
+{old: new} remapping that compacts live block tables to the front — a
+physically paged arena (the flashinfer-style layout ROADMAP names as a
+follow-up) would mirror those moves in storage; today it is pool-level
+bookkeeping only and the engine does not call it.
+"""
+
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+
+class PoolError(RuntimeError):
+    pass
+
+
+@dataclass
+class BlockTable:
+    """Ordered physical block ids backing one request's token range."""
+
+    request_id: str
+    blocks: List[int] = field(default_factory=list)
+    num_tokens: int = 0
+
+    def capacity(self, block_size: int) -> int:
+        return len(self.blocks) * block_size
+
+
+class KVBlockPool:
+    """Fixed-size-block KV allocator with per-request block tables."""
+
+    def __init__(self, num_blocks: int, block_size: int):
+        if num_blocks <= 0 or block_size <= 0:
+            raise ValueError("num_blocks and block_size must be positive")
+        self.num_blocks = num_blocks
+        self.block_size = block_size
+        self._free: deque = deque(range(num_blocks))
+        self._owner: List[Optional[str]] = [None] * num_blocks
+        self._tables: Dict[str, BlockTable] = {}
+        self.peak_in_use = 0
+
+    # -- accounting ----------------------------------------------------------
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def num_in_use(self) -> int:
+        return self.num_blocks - len(self._free)
+
+    def blocks_for(self, num_tokens: int) -> int:
+        return -(-max(num_tokens, 0) // self.block_size)
+
+    def can_alloc(self, num_tokens: int) -> bool:
+        return self.blocks_for(num_tokens) <= self.num_free
+
+    def utilization(self) -> float:
+        return self.num_in_use / self.num_blocks
+
+    def fragmentation(self) -> float:
+        """Fraction of live block-table adjacencies that are physically
+        non-contiguous (0.0 = fully compact)."""
+        pairs = jumps = 0
+        for t in self._tables.values():
+            for a, b in zip(t.blocks, t.blocks[1:]):
+                pairs += 1
+                jumps += b != a + 1
+        return jumps / pairs if pairs else 0.0
+
+    def table(self, request_id: str) -> BlockTable:
+        return self._tables[request_id]
+
+    def live_requests(self) -> List[str]:
+        return list(self._tables)
+
+    # -- alloc / extend / free ----------------------------------------------
+    def _take_block(self, request_id: str) -> int:
+        bid = self._free.popleft()
+        if self._owner[bid] is not None:
+            raise PoolError(f"block {bid} double-allocated "
+                            f"({self._owner[bid]} -> {request_id})")
+        self._owner[bid] = request_id
+        return bid
+
+    def alloc(self, request_id: str, num_tokens: int) -> BlockTable:
+        """Reserve blocks covering ``num_tokens`` for a new request."""
+        if request_id in self._tables:
+            raise PoolError(f"request {request_id} already has a block table")
+        need = self.blocks_for(num_tokens)
+        if need > self.num_free:
+            raise PoolError(f"OOM: need {need} blocks, {self.num_free} free")
+        t = BlockTable(request_id)
+        for _ in range(need):
+            t.blocks.append(self._take_block(request_id))
+        t.num_tokens = num_tokens
+        self._tables[request_id] = t
+        self.peak_in_use = max(self.peak_in_use, self.num_in_use)
+        return t
+
+    def extend(self, request_id: str, num_tokens: int) -> List[int]:
+        """Grow a request's table to cover ``num_tokens`` total; returns the
+        newly allocated block ids (empty if capacity already suffices)."""
+        t = self._tables[request_id]
+        if num_tokens < t.num_tokens:
+            raise PoolError("extend cannot shrink a table")
+        need = self.blocks_for(num_tokens) - len(t.blocks)
+        if need > self.num_free:
+            raise PoolError(f"OOM: need {need} blocks, {self.num_free} free")
+        new = [self._take_block(request_id) for _ in range(need)]
+        t.blocks.extend(new)
+        t.num_tokens = num_tokens
+        self.peak_in_use = max(self.peak_in_use, self.num_in_use)
+        return new
+
+    def free(self, request_id: str) -> int:
+        """Return every block owned by the request; returns the count."""
+        t = self._tables.pop(request_id)
+        for bid in t.blocks:
+            if self._owner[bid] != request_id:
+                raise PoolError(f"block {bid} not owned by {request_id}")
+            self._owner[bid] = None
+            self._free.append(bid)
+        return len(t.blocks)
+
+    # -- defrag --------------------------------------------------------------
+    def defrag(self) -> Dict[int, int]:
+        """Compact live blocks to the lowest physical ids (stable order:
+        table order within request, requests by first block).  Returns the
+        {old_id: new_id} moves a physically paged arena would mirror in
+        storage."""
+        order = sorted(self._tables.values(),
+                       key=lambda t: t.blocks[0] if t.blocks else 0)
+        moves: Dict[int, int] = {}
+        nxt = 0
+        new_owner: List[Optional[str]] = [None] * self.num_blocks
+        for t in order:
+            for i, bid in enumerate(t.blocks):
+                if bid != nxt:
+                    moves[bid] = nxt
+                t.blocks[i] = nxt
+                new_owner[nxt] = t.request_id
+                nxt += 1
+        self._owner = new_owner
+        self._free = deque(range(nxt, self.num_blocks))
+        return moves
+
+    # -- invariant check (tests / debug) -------------------------------------
+    def check(self) -> None:
+        seen: Dict[int, str] = {}
+        for t in self._tables.values():
+            for bid in t.blocks:
+                if bid in seen:
+                    raise PoolError(f"block {bid} owned by both "
+                                    f"{seen[bid]} and {t.request_id}")
+                if self._owner[bid] != t.request_id:
+                    raise PoolError(f"owner mismatch for block {bid}")
+                seen[bid] = t.request_id
+        if len(seen) + len(self._free) != self.num_blocks:
+            raise PoolError("free list + live tables do not cover the pool")

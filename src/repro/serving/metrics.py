@@ -1,0 +1,82 @@
+"""Serving telemetry: TTFT, per-request latency percentiles, decode
+throughput, slot utilization, and SARA recommendation-cache hit rate.
+
+All timestamps are whatever clock the engine passes in (wall seconds for
+live serving, virtual step time for simulated traces) — the math only needs
+them to be consistent.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List
+
+import numpy as np
+
+
+def percentile(xs: List[float], q: float) -> float:
+    return float(np.percentile(np.asarray(xs, np.float64), q)) if xs else 0.0
+
+
+@dataclass
+class ServingMetrics:
+    ttft: List[float] = field(default_factory=list)         # first token - arrival
+    latency: List[float] = field(default_factory=list)      # done - arrival
+    queue_delay: List[float] = field(default_factory=list)  # admit - arrival
+    decode_steps: int = 0
+    decode_tokens: int = 0
+    decode_s: float = 0.0
+    prefill_tokens: int = 0
+    prefill_s: float = 0.0
+    slot_occupancy: List[float] = field(default_factory=list)  # active/slots per step
+    completed: int = 0
+    stalls: int = 0
+
+    # -- recording ------------------------------------------------------------
+    def on_first_token(self, arrival: float, t: float) -> None:
+        self.ttft.append(t - arrival)
+
+    def on_retire(self, arrival: float, admit: float, t: float) -> None:
+        self.latency.append(t - arrival)
+        self.queue_delay.append(admit - arrival)
+        self.completed += 1
+
+    def on_prefill(self, tokens: int, seconds: float) -> None:
+        self.prefill_tokens += tokens
+        self.prefill_s += seconds
+
+    def on_decode_step(self, active: int, slots: int, tokens: int,
+                       seconds: float) -> None:
+        self.decode_steps += 1
+        self.decode_tokens += tokens
+        self.decode_s += seconds
+        self.slot_occupancy.append(active / slots if slots else 0.0)
+
+    # -- summary --------------------------------------------------------------
+    def summary(self, sara_cache: Dict = None) -> Dict[str, float]:
+        out = {
+            "completed": self.completed,
+            "decode_steps": self.decode_steps,
+            "ttft_p50_s": percentile(self.ttft, 50),
+            "ttft_p99_s": percentile(self.ttft, 99),
+            "latency_p50_s": percentile(self.latency, 50),
+            "latency_p99_s": percentile(self.latency, 99),
+            "queue_delay_p50_s": percentile(self.queue_delay, 50),
+            "decode_tok_s": self.decode_tokens / max(self.decode_s, 1e-9),
+            "prefill_tok_s": self.prefill_tokens / max(self.prefill_s, 1e-9),
+            "slot_utilization": (float(np.mean(self.slot_occupancy))
+                                 if self.slot_occupancy else 0.0),
+            "stalls": self.stalls,
+        }
+        if sara_cache:
+            hits = sara_cache.get("hits", 0)
+            total = hits + sara_cache.get("misses", 0)
+            out["sara_cache_hit_rate"] = hits / total if total else 0.0
+            out["sara_cache_size"] = sara_cache.get("size", 0)
+        return out
+
+    def report(self, sara_cache: Dict = None) -> str:
+        s = self.summary(sara_cache)
+        lines = [f"  {k:<22} {v:.4g}" if isinstance(v, float)
+                 else f"  {k:<22} {v}" for k, v in s.items()]
+        return "\n".join(lines)

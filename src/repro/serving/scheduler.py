@@ -1,0 +1,148 @@
+"""Continuous-batching request scheduler.
+
+Wave-based serving (``launch/serve.py::serve_waves``) admits a whole batch,
+decodes until the *longest* member finishes, then starts over — short
+requests pad out the wave and the array idles, the serving-side analogue of
+the shape-diversity/utilization problem SARA targets.  This scheduler
+instead re-plans every decode step: finished requests retire immediately,
+their KV blocks return to the pool, and queued requests are admitted into
+the freed slots mid-flight.
+
+The engine owns the model math; the scheduler owns admission:
+
+  submit()  enqueue a Request (FCFS by arrival time)
+  plan(now) -> StepPlan: which queued requests to prefill into which free
+              slots this step (bounded by ``max_prefills_per_step`` and the
+              KV pool budget), plus the set of slots to decode
+  grow()    per-token block-table extension (incremental mode)
+  retire()  free the slot + every KV block of a finished request
+
+Admission control: ``reserve="full"`` reserves blocks for the worst case
+(prompt + max_new + 1) at admit time, so a decode can never OOM;
+``reserve="incremental"`` admits on prompt-size blocks only and extends
+block-by-block during decode — denser packing, and a slot whose extension
+fails simply stalls (skips sampling) until another request retires.
+"""
+
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.serving.kv_pool import KVBlockPool, PoolError
+
+
+@dataclass
+class Request:
+    rid: str
+    prompt: np.ndarray                  # (prompt_len,) int32
+    max_new_tokens: int
+    arrival_time: float = 0.0
+    eos_id: Optional[int] = None
+    extras: Optional[Dict] = None       # per-request vlm/encdec inputs (B=1)
+
+    # runtime state (engine-owned)
+    generated: List[int] = field(default_factory=list)
+    slot: int = -1
+    stalled: bool = False
+    t_admit: float = -1.0
+    t_first_token: float = -1.0
+    t_done: float = -1.0
+
+    @property
+    def prompt_len(self) -> int:
+        return int(self.prompt.shape[0])
+
+    @property
+    def context_len(self) -> int:
+        """Tokens a (re-)prefill must cover: prompt plus anything already
+        generated before a preemption."""
+        return self.prompt_len + len(self.generated)
+
+    def done(self) -> bool:
+        if len(self.generated) >= self.max_new_tokens:
+            return True
+        return (self.eos_id is not None and len(self.generated) > 0
+                and self.generated[-1] == self.eos_id)
+
+
+@dataclass
+class StepPlan:
+    prefills: List[Request]             # admitted this step (slot assigned)
+    decode_slots: List[int]             # slots active after the prefills
+
+
+class ContinuousScheduler:
+    def __init__(self, num_slots: int, pool: KVBlockPool,
+                 max_prefills_per_step: int = 1, reserve: str = "full"):
+        if reserve not in ("full", "incremental"):
+            raise ValueError(reserve)
+        self.num_slots = num_slots
+        self.pool = pool
+        self.max_prefills_per_step = max_prefills_per_step
+        self.reserve = reserve
+        self.waiting: deque = deque()
+        self.active: Dict[int, Request] = {}
+        self._free_slots = list(range(num_slots - 1, -1, -1))
+
+    # -- queue ----------------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        self.waiting.append(req)
+
+    def pending(self) -> int:
+        return len(self.waiting)
+
+    def idle(self) -> bool:
+        return not self.waiting and not self.active
+
+    # -- planning -------------------------------------------------------------
+    def _reservation(self, req: Request) -> int:
+        if self.reserve == "full":
+            return req.prompt_len + req.max_new_tokens + 1
+        return req.context_len + 1
+
+    def plan(self, now: float = float("inf")) -> StepPlan:
+        """Admit up to ``max_prefills_per_step`` arrived requests into free
+        slots, KV budget permitting, then decode every active slot."""
+        prefills: List[Request] = []
+        while (len(prefills) < self.max_prefills_per_step
+               and self._free_slots and self.waiting
+               and self.waiting[0].arrival_time <= now):
+            req = self.waiting[0]
+            if not self.pool.can_alloc(self._reservation(req)):
+                break                    # FCFS: don't starve the head
+            self.waiting.popleft()
+            req.slot = self._free_slots.pop()
+            req.t_admit = now if now != float("inf") else req.arrival_time
+            self.pool.alloc(req.rid, self._reservation(req))
+            self.active[req.slot] = req
+            prefills.append(req)
+        return StepPlan(prefills, sorted(self.active))
+
+    # -- per-token growth (incremental mode) ----------------------------------
+    def grow(self, req: Request, total_tokens: int) -> bool:
+        """Ensure the request's block table covers ``total_tokens``; returns
+        False (stall) when the pool cannot extend."""
+        table = self.pool.table(req.rid)
+        if table.capacity(self.pool.block_size) >= total_tokens:
+            table.num_tokens = max(table.num_tokens, total_tokens)
+            req.stalled = False
+            return True
+        try:
+            self.pool.extend(req.rid, total_tokens)
+            req.stalled = False
+            return True
+        except PoolError:
+            req.stalled = True
+            return False
+
+    # -- retirement -----------------------------------------------------------
+    def retire(self, req: Request, now: float = 0.0) -> None:
+        del self.active[req.slot]
+        self.pool.free(req.rid)
+        self._free_slots.append(req.slot)
+        req.t_done = now
+        req.slot = -1

@@ -3,6 +3,7 @@ structural invariants of the SCALE-Sim-equivalent closed forms."""
 
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # optional dep: skip, don't crash collection
 from hypothesis import given, settings, strategies as st
 
 from repro.core import costmodel as cm

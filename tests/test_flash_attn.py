@@ -10,6 +10,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # optional dep: skip, don't crash collection
 from hypothesis import given, settings, strategies as st
 
 from repro.kernels.flash_attn import _pairs

@@ -1,0 +1,68 @@
+"""Behavior lock for ``sample_logits`` (moved from launch/serve.py into the
+serving engine): greedy at temperature<=0, top-k threshold masking, and
+dtype/shape invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.serving.engine import sample_logits
+
+
+@pytest.fixture
+def logits(rng):
+    return jnp.asarray(rng.standard_normal((5, 64)).astype(np.float32))
+
+
+def test_greedy_at_nonpositive_temperature(logits):
+    key = jax.random.PRNGKey(0)
+    expect = np.argmax(np.asarray(logits), -1)
+    for t in (0.0, -1.0):
+        got = sample_logits(key, logits, temperature=t, top_k=3)
+        assert got.dtype == jnp.int32
+        assert got.shape == (logits.shape[0],)
+        np.testing.assert_array_equal(np.asarray(got), expect)
+    # greedy ignores the key entirely
+    got2 = sample_logits(jax.random.PRNGKey(7), logits, temperature=0.0)
+    np.testing.assert_array_equal(np.asarray(got2), expect)
+
+
+def test_top_k_masks_below_threshold(logits):
+    # with top_k=1 sampling collapses to argmax at any temperature
+    got = sample_logits(jax.random.PRNGKey(3), logits, temperature=2.0,
+                        top_k=1)
+    np.testing.assert_array_equal(np.asarray(got),
+                                  np.argmax(np.asarray(logits), -1))
+    # every sampled id must sit inside the per-row top-k set
+    k = 5
+    top = np.argsort(np.asarray(logits), -1)[:, -k:]
+    for seed in range(10):
+        got = np.asarray(sample_logits(jax.random.PRNGKey(seed), logits,
+                                       temperature=1.0, top_k=k))
+        for b in range(logits.shape[0]):
+            assert got[b] in top[b]
+
+
+def test_shape_dtype_invariants(logits):
+    for t, k in [(1.0, 0), (0.5, 4), (0.0, 0)]:
+        got = sample_logits(jax.random.PRNGKey(1), logits, t, k)
+        assert got.shape == (logits.shape[0],)
+        assert got.dtype == jnp.int32
+        assert np.all((np.asarray(got) >= 0)
+                      & (np.asarray(got) < logits.shape[1]))
+
+
+def test_temperature_sharpens_distribution(rng):
+    # a clearly-peaked row: low temperature must pick the peak (almost) always
+    row = np.zeros((1, 16), np.float32)
+    row[0, 3] = 4.0
+    logits = jnp.asarray(row)
+    picks = [int(sample_logits(jax.random.PRNGKey(s), logits,
+                               temperature=0.05)[0]) for s in range(20)]
+    assert picks.count(3) == 20
+
+
+def test_compat_reexport_from_launch_serve():
+    from repro.launch.serve import sample_logits as legacy
+    assert legacy is sample_logits

@@ -1,0 +1,237 @@
+"""Continuous-batching serving engine acceptance tests.
+
+- engine greedy outputs == wave-based serve_waves outputs (same seeded
+  requests), both at an exact bucket shape and through the padded-prefill
+  path
+- KVBlockPool never double-allocates, frees everything on retire, and
+  defrag compacts tables consistently
+- on a mixed-length trace the engine finishes in fewer decode steps than
+  the wave schedule
+- padded prefill (length arg) is numerically faithful to exact prefill
+- SaraDispatcher cache bookkeeping (per-instance cache + hit counters)
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_arch
+from repro.core.sara import SaraDispatcher
+from repro.launch.serve import serve_waves
+from repro.serving import (ContinuousScheduler, EngineConfig, KVBlockPool,
+                           Request, ServingEngine)
+from repro.serving.kv_pool import PoolError
+
+ARCH = "llama3.2-1b"
+
+
+def _cfg():
+    return get_arch(ARCH).reduced()
+
+
+def _wave_prompts(cfg, batch, prompt_len, seed=0):
+    """Replicates the prompt stream serve_waves generates internally."""
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, cfg.vocab_size, (batch, prompt_len)).astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# engine == wave (greedy)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("prompt_len", [16, 12])  # 16 = exact bucket, 12 = padded
+def test_engine_matches_wave_greedy(prompt_len):
+    cfg = _cfg()
+    B, G = 3, 8
+    outs, _ = serve_waves(arch=ARCH, batch=B, prompt_len=prompt_len, gen=G,
+                          waves=1, temperature=0.0, top_k=0, seed=0, log=False)
+    prompts = _wave_prompts(cfg, B, prompt_len)
+    eng = ServingEngine(cfg, EngineConfig(
+        num_slots=B, max_len=prompt_len + G + 1, max_prefills_per_step=B,
+        temperature=0.0, seed=0))
+    res = eng.run([Request(f"r{i}", prompts[i], G) for i in range(B)])
+    for i in range(B):
+        np.testing.assert_array_equal(res[f"r{i}"], outs[0][i])
+    # every block returned on retire
+    eng.pool.check()
+    assert eng.pool.num_free == eng.pool.num_blocks
+
+
+def test_padded_prefill_matches_exact():
+    cfg = _cfg()
+    from repro.models.api import build_model
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    n, bucket = 11, 16
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, n), 0,
+                              cfg.vocab_size)
+    padded = np.zeros((1, bucket), np.int32)
+    padded[0, :n] = np.asarray(toks)
+
+    exact_logits, exact_cache = model.prefill(
+        params, {"tokens": toks}, model.init_cache(1, 32))
+    pad_logits, pad_cache = model.prefill(
+        params, {"tokens": jax.numpy.asarray(padded)},
+        model.init_cache(1, 32), length=n)
+    np.testing.assert_allclose(np.asarray(pad_logits),
+                               np.asarray(exact_logits), rtol=1e-5, atol=1e-5)
+    assert int(pad_cache["pos"]) == n
+    assert int(np.asarray(pad_cache["layers"].length)[0]) == n
+    # decode continues identically from either cache
+    nxt = jax.numpy.asarray([[3]], jax.numpy.int32)
+    d1, _ = model.decode_step(params, nxt, exact_cache)
+    d2, _ = model.decode_step(params, nxt, pad_cache)
+    np.testing.assert_allclose(np.asarray(d1), np.asarray(d2),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# KV block pool
+# ---------------------------------------------------------------------------
+
+def test_pool_alloc_extend_free_invariants():
+    pool = KVBlockPool(num_blocks=8, block_size=4)
+    t1 = pool.alloc("a", 9)            # 3 blocks
+    assert len(t1.blocks) == 3 and pool.num_free == 5
+    pool.alloc("b", 4)                 # 1 block
+    pool.check()
+    with pytest.raises(PoolError):
+        pool.alloc("a", 4)             # duplicate request id
+    new = pool.extend("a", 13)         # 9->13 tokens: one more block
+    assert len(new) == 1 and len(pool.table("a").blocks) == 4
+    with pytest.raises(PoolError):
+        pool.extend("b", 100)          # over budget
+    assert pool.free("a") == 4
+    assert pool.free("b") == 1
+    assert pool.num_free == pool.num_blocks
+    pool.check()
+
+
+def test_pool_never_double_allocates_under_churn():
+    rng = np.random.default_rng(0)
+    pool = KVBlockPool(num_blocks=16, block_size=4)
+    live = {}
+    for i in range(200):
+        if live and (rng.random() < 0.4 or pool.num_free < 2):
+            rid = rng.choice(list(live))
+            pool.free(rid)
+            del live[rid]
+        else:
+            rid = f"r{i}"
+            n = int(rng.integers(1, 9))
+            if pool.can_alloc(n):
+                pool.alloc(rid, n)
+                live[rid] = n
+        pool.check()                   # raises on any double-ownership
+    for rid in list(live):
+        pool.free(rid)
+    assert pool.num_free == pool.num_blocks
+
+
+def test_pool_defrag_compacts():
+    pool = KVBlockPool(num_blocks=12, block_size=2)
+    for i in range(6):
+        pool.alloc(f"r{i}", 4)         # 2 blocks each
+    for i in (0, 2, 4):
+        pool.free(f"r{i}")
+    assert pool.fragmentation() >= 0.0
+    moves = pool.defrag()
+    pool.check()
+    used = sorted(b for rid in pool.live_requests()
+                  for b in pool.table(rid).blocks)
+    assert used == list(range(len(used)))      # compacted to the front
+    assert all(new < old for old, new in moves.items())
+
+
+# ---------------------------------------------------------------------------
+# scheduling
+# ---------------------------------------------------------------------------
+
+def test_mixed_trace_fewer_decode_steps_than_waves():
+    cfg = _cfg()
+    slots, P = 2, 8
+    gens = [2, 12, 2, 12, 2, 12]
+    rng = np.random.default_rng(1)
+    reqs = [Request(f"r{i}", rng.integers(0, cfg.vocab_size, P).astype(np.int32),
+                    g) for i, g in enumerate(gens)]
+    eng = ServingEngine(cfg, EngineConfig(
+        num_slots=slots, max_len=P + max(gens) + 1,
+        max_prefills_per_step=slots, temperature=0.0))
+    res = eng.run(reqs)
+    assert all(len(res[f"r{i}"]) == g for i, g in enumerate(gens))
+    # the wave schedule decodes every FCFS wave to its longest member
+    wave_steps = sum(max(gens[w:w + slots]) - 1
+                     for w in range(0, len(gens), slots))
+    assert eng.metrics.decode_steps < wave_steps
+    assert eng.pool.num_free == eng.pool.num_blocks
+
+
+def test_scheduler_admission_respects_pool_budget():
+    pool = KVBlockPool(num_blocks=4, block_size=8)
+    sched = ContinuousScheduler(num_slots=4, pool=pool,
+                                max_prefills_per_step=4, reserve="full")
+    for i in range(3):
+        sched.submit(Request(f"r{i}", np.zeros(8, np.int32), 15))  # 3 blocks
+    plan = sched.plan(0.0)
+    assert len(plan.prefills) == 1             # 2nd admission would exceed 4 blocks
+    assert sched.pending() == 2
+    sched.retire(plan.prefills[0], 1.0)
+    assert len(sched.plan(1.0).prefills) == 1  # freed budget re-admits
+
+
+def test_arrival_times_gate_admission():
+    pool = KVBlockPool(num_blocks=8, block_size=8)
+    sched = ContinuousScheduler(num_slots=2, pool=pool)
+    sched.submit(Request("late", np.zeros(4, np.int32), 2, arrival_time=5.0))
+    assert sched.plan(0.0).prefills == []
+    assert len(sched.plan(5.0).prefills) == 1
+
+
+def test_incremental_reserve_completes_under_tight_budget():
+    cfg = _cfg()
+    eng = ServingEngine(cfg, EngineConfig(
+        num_slots=3, max_len=40, block_size=8, num_blocks=8,
+        reserve="incremental", max_prefills_per_step=3, temperature=0.0))
+    rng = np.random.default_rng(2)
+    reqs = [Request(f"r{i}", rng.integers(0, cfg.vocab_size, 10).astype(np.int32),
+                    10) for i in range(5)]
+    res = eng.run(reqs)
+    assert all(len(v) == 10 for v in res.values())
+    eng.pool.check()
+    assert eng.pool.num_free == eng.pool.num_blocks
+
+
+# ---------------------------------------------------------------------------
+# SARA dispatch integration
+# ---------------------------------------------------------------------------
+
+def test_dispatcher_cache_is_per_instance_with_counters():
+    d1, d2 = SaraDispatcher(), SaraDispatcher()
+    d1.recommend(128, 128, 128)
+    assert d1.cache_info() == {"hits": 0, "misses": 1, "size": 1}
+    assert d2.cache_info() == {"hits": 0, "misses": 0, "size": 0}
+    d1.recommend(128, 128, 128)
+    assert d1.cache_info()["hits"] == 1
+    d1.cache_clear()
+    assert d1.cache_info() == {"hits": 0, "misses": 0, "size": 0}
+
+
+def test_engine_routes_gemm_sites_through_sara():
+    cfg = _cfg()
+    disp = SaraDispatcher()
+    eng = ServingEngine(cfg, EngineConfig(
+        num_slots=2, max_len=24, max_prefills_per_step=2, temperature=0.0),
+        dispatcher=disp)
+    rng = np.random.default_rng(3)
+    eng.run([Request(f"r{i}", rng.integers(0, cfg.vocab_size, 7).astype(np.int32),
+                     4) for i in range(3)])
+    info = disp.cache_info()
+    assert info["misses"] > 0                     # consulted on live shapes
+    assert info["hits"] > info["misses"]          # shape reuse hits the cache
+    assert "lm_head" in eng.gemm_plan             # plan covers the GEMM sites
+    from repro.serving.engine import gemm_sites
+    n_sites = len(gemm_sites(cfg, 1))
+    assert info["size"] > n_sites                 # distinct prefill/decode M
+    assert eng.plan_changes >= 1
+    s = eng.summary()
+    assert 0.0 < s["sara_cache_hit_rate"] <= 1.0

@@ -4,6 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # optional dep: skip, don't crash collection
 from hypothesis import given, settings, strategies as st
 
 from repro.models.ssm import _ssd_chunked, _wkv_chunked
