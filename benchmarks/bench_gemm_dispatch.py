@@ -1,0 +1,114 @@
+"""GEMM dispatch bench: executed per-site plan, XLA vs Pallas.
+
+For a sweep of live-token counts m, every GEMM site of the model (the
+``gemm_sites`` analytic enumeration) executes through the dispatch layer
+under both backends:
+
+  xla     — jnp.einsum (the baseline the parity suite checks against)
+  pallas  — the RSA kernel with the SARA-recommended tiling.  Off-TPU this
+            runs in interpret mode (a *validation* wall-clock, not a TPU
+            number); on TPU the same call compiles.  The analytic column
+            (TPU tile cost model) is the roofline-relevant number.
+
+Also reports the recommendation-cache plan hit-rate and the number of
+plan reconfigurations across the m sweep (how often the executed plan
+actually changes as batch composition shifts — the quantity the serving
+engine's ``plan_changes`` tracks).
+
+``--smoke`` runs a tiny sweep and asserts xla/pallas parity per site
+(the CI dispatch-parity smoke in scripts/check.sh).
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro import dispatch
+from repro.configs.registry import get_arch
+from repro.core import tpu_costmodel as tcm
+from repro.core.sara import SaraDispatcher
+from repro.dispatch import SiteRegistry
+from repro.serving.engine import gemm_sites
+
+
+def _timed(fn, a, b, reps):
+    jax.block_until_ready(fn(a, b))          # warm (compile/trace)
+    t0 = time.time()
+    for _ in range(reps):
+        out = fn(a, b)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / reps
+
+
+def run(smoke: bool = False, arch: str = "llama3.2-1b"):
+    rows = []
+    cfg = get_arch(arch).reduced()
+    disp = SaraDispatcher()
+    reg = SiteRegistry()
+    m_sweep = (1, 16) if smoke else (1, 16, 64, 256)
+    reps = 1 if smoke else 3
+
+    prev_plan, reconfigs = None, 0
+    max_err = 0.0
+    for m in m_sweep:
+        sites = gemm_sites(cfg, m)
+        t_backend = {"xla": 0.0, "pallas": 0.0}
+        analytic = 0.0
+        scope = f"m{m}"
+        for name, M, K, N in sites:
+            rng = np.random.default_rng(hash((name, m)) % 2 ** 31)
+            a = jnp.asarray(rng.standard_normal((M, K)), jnp.float32)
+            b = jnp.asarray(rng.standard_normal((K, N)), jnp.float32)
+            outs = {}
+            for backend in ("xla", "pallas"):
+                with dispatch.use(disp, execute=backend, registry=reg), \
+                        reg.scope(scope if backend == "pallas" else "_ref"):
+                    f = jax.jit(lambda x, w, s=name: dispatch.gemm(x, w,
+                                                                   site=s))
+                    t_backend[backend] += _timed(f, a, b, reps)
+                    outs[backend] = np.asarray(f(a, b))
+            max_err = max(max_err, float(np.max(np.abs(
+                outs["pallas"] - outs["xla"]))))
+            c = disp.recommend(M, K, N)
+            analytic += float(tcm.tile_cost_seconds([M], [K], [N])
+                              [0, c.class_id])
+        plan = reg.plan(scope)
+        if plan != prev_plan and prev_plan is not None:
+            reconfigs += 1
+        prev_plan = plan
+        rows.append({"name": f"dispatch.m{m}.xla_ms",
+                     "value": round(t_backend["xla"] * 1e3, 3),
+                     "derived": f"{len(sites)} sites"})
+        rows.append({"name": f"dispatch.m{m}.pallas_ms",
+                     "value": round(t_backend["pallas"] * 1e3, 3),
+                     "derived": "interpret mode off-TPU (validation, "
+                                "not a TPU number)"})
+        rows.append({"name": f"dispatch.m{m}.analytic_tpu_us",
+                     "value": round(analytic * 1e6, 3),
+                     "derived": "TPU tile cost model, executed plan"})
+
+    info = disp.cache_info()
+    total = info["hits"] + info["misses"]
+    rows.append({"name": "dispatch.plan_hit_rate",
+                 "value": round(info["hits"] / total, 4) if total else 0.0,
+                 "derived": f"{info['size']} distinct shapes"})
+    rows.append({"name": "dispatch.reconfigurations",
+                 "value": reconfigs,
+                 "derived": f"plan changes across m sweep {list(m_sweep)}"})
+    rows.append({"name": "dispatch.parity_max_err",
+                 "value": max_err, "derived": "pallas vs xla, all sites"})
+    if smoke:
+        assert max_err < 1e-4, f"dispatch parity broke: {max_err}"
+        print(f"# dispatch smoke OK (max err {max_err:.2e})")
+    return emit(rows, "gemm_dispatch")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--arch", default="llama3.2-1b")
+    a = ap.parse_args()
+    run(smoke=a.smoke, arch=a.arch)

@@ -56,9 +56,11 @@ def main():
     outputs = engine.run(reqs)
     total = sum(len(v) for v in outputs.values())
     print(f"served {total} tokens total")
-    print(engine.metrics.report(engine.dispatcher.cache_info()))
-    print(f"  gemm plan changes      {engine.plan_changes}")
-    print(f"  current gemm plan      {engine.gemm_plan}")
+    print(engine.metrics.report(engine.dispatcher.cache_info(),
+                                engine.dispatch_stats()))
+    print(f"  executed gemm plan (registry-backed, last step):")
+    for site, desc in engine.gemm_plan.items():
+        print(f"    {site:<24} {desc}")
 
 
 if __name__ == "__main__":

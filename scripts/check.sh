@@ -1,5 +1,5 @@
 #!/usr/bin/env bash
-# CI gate: tier-1 tests + a fast serving smoke.
+# CI gate: tier-1 tests + a fast serving smoke + dispatch-parity smoke.
 #   bash scripts/check.sh
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -11,5 +11,8 @@ python -m pytest -x -q
 
 echo "== serving smoke =="
 python -m repro.launch.serve --arch llama3.2-1b --smoke
+
+echo "== dispatch-parity smoke (xla vs pallas per-site plan) =="
+python -m benchmarks.bench_gemm_dispatch --smoke
 
 echo "check.sh: all green"

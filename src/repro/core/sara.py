@@ -11,9 +11,13 @@ site can ask it for a configuration.  Two recommendation paths:
     search at equal quality — is validated in tests/benchmarks by comparing
     the two paths.
 
-``sara_gemm`` executes the GEMM with the recommended config through the
-Pallas RSA kernel (kernels/rsa_gemm.py) or, off-TPU, through XLA with the
-recommended sharding plan.
+Execution lives in the dispatch layer (``repro.dispatch``): every model
+GEMM site calls ``dispatch.gemm(x, w, site=...)``, which resolves the
+configuration through the *active* dispatcher (installed with
+``dispatch.use(dispatcher, execute="pallas"|"xla"|"auto")``) and runs the
+Pallas RSA kernel or XLA accordingly.  ``SaraDispatcher.gemm`` is a
+convenience wrapper over that layer; the old module-level ``_GLOBAL``
+singleton is gone — policy is explicit, scoped context.
 """
 
 from __future__ import annotations
@@ -71,20 +75,15 @@ class SaraDispatcher:
         return tcm.plan_gemm_sharding(M, K, N, data=data, model=model)
 
     # -- execution -----------------------------------------------------------
-    def gemm(self, x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
-        """Self-adaptive GEMM: (..., M, K) @ (K, N)."""
-        M = int(np.prod(x.shape[:-1]))
-        K = int(x.shape[-1])
-        N = int(w.shape[-1])
-        cfg = self.recommend(M, K, N)
-        if self.use_pallas:
-            from repro.kernels import ops
-            x2 = x.reshape(M, K)
-            out = ops.rsa_gemm(x2, w, block_m=cfg.block_m,
-                               block_n=cfg.block_n, block_k=cfg.block_k,
-                               mode=cfg.mode)
-            return out.reshape(x.shape[:-1] + (N,))
-        return jnp.einsum("...k,kn->...n", x, w)
+    def gemm(self, x: jnp.ndarray, w: jnp.ndarray, *,
+             site: str = "sara.gemm") -> jnp.ndarray:
+        """Self-adaptive GEMM: (..., M, K) @ (K, N), through the dispatch
+        layer with this dispatcher active (``use_pallas`` selects the RSA
+        Pallas kernel; otherwise XLA)."""
+        from repro import dispatch
+        with dispatch.use(self,
+                          execute="pallas" if self.use_pallas else "xla"):
+            return dispatch.gemm(x, w, site=site)
 
 
 def train_adaptnet_tpu(n_samples: int = 150_000, epochs: int = 10,
@@ -107,17 +106,3 @@ def train_adaptnet_tpu(n_samples: int = 150_000, epochs: int = 10,
     rel = chosen / cost.min(-1)
     geomean = float(np.exp(np.mean(np.log(np.clip(rel, 1.0, None)))))
     return res.params, res.test_accuracy, geomean
-
-
-_GLOBAL: Optional[SaraDispatcher] = None
-
-
-def global_dispatcher() -> SaraDispatcher:
-    global _GLOBAL
-    if _GLOBAL is None:
-        _GLOBAL = SaraDispatcher()
-    return _GLOBAL
-
-
-def sara_gemm(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
-    return global_dispatcher().gemm(x, w)

@@ -1,0 +1,179 @@
+"""The GEMM executor: recommendation -> executed kernel.
+
+``gemm(x, w, site=...)`` is the single seam every dense GEMM in the
+model stack goes through.  Shapes are static at trace time, so the
+recommendation (a Python-side ``SaraDispatcher.recommend``) and the
+backend choice are resolved while tracing and baked into the compiled
+executable; the executed configuration is recorded in the active
+``SiteRegistry`` under the current scope.
+
+Backends:
+  pallas — ``kernels/ops.rsa_gemm`` with the recommended
+           block_m/block_n/block_k + residency mode (OS/WS/IS).  Blocks
+           are clamped to the 128-aligned operand extent so a 64-wide K
+           never pads to a 2048-wide block.  A custom VJP expresses both
+           gradient GEMMs (dx = dy @ w^T, dw = x^T @ dy) through the
+           same RSA kernel with their own recommended configs, so the
+           dispatch layer is load-bearing for training too.
+  xla    — ``jnp.einsum`` (+ the recommended mesh-level sharding hint
+           when a mesh is active and the policy enables shard_hints).
+
+Expert banks (w of shape (E, K, N) against x (..., E, C, K)) execute as
+a vmap of the 2D path over E — the MoE expert GEMMs see the same
+recommendation machinery as every other site.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+ALIGN = 128                    # MXU tile edge: block clamp granularity
+
+
+def _round_up(n: int, mult: int) -> int:
+    return max(mult, ((int(n) + mult - 1) // mult) * mult)
+
+
+def _clamped_blocks(cfg, m: int, k: int, n: int) -> Tuple[int, int, int]:
+    """Shrink recommended blocks that exceed the 128-aligned operand extent
+    (pure padding waste); never grows a block past the recommendation."""
+    return (min(cfg.block_m, _round_up(m, ALIGN)),
+            min(cfg.block_n, _round_up(n, ALIGN)),
+            min(cfg.block_k, _round_up(k, ALIGN)))
+
+
+def _run_rsa(a, b, tile: Tuple[int, int, int, int],
+             interpret: Optional[bool]):
+    """tile = (block_m, block_n, block_k, mode)."""
+    from repro.kernels import ops
+    return ops.rsa_gemm(a, b, block_m=tile[0], block_n=tile[1],
+                        block_k=tile[2], mode=tile[3], interpret=interpret)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5))
+def _pallas_gemm2d(x2, w, tile, dx_tile, dw_tile, interpret):
+    """(M, K) @ (K, N) through the RSA Pallas kernel, differentiable.
+    Each of tile/dx_tile/dw_tile is that GEMM's own recommended
+    (block_m, block_n, block_k, mode)."""
+    return _run_rsa(x2, w, tile, interpret)
+
+
+def _pallas_gemm2d_fwd(x2, w, tile, dx_tile, dw_tile, interpret):
+    return _run_rsa(x2, w, tile, interpret), (x2, w)
+
+
+def _pallas_gemm2d_bwd(tile, dx_tile, dw_tile, interpret, res, dy):
+    x2, w = res
+    dx = _run_rsa(dy, w.T, dx_tile, interpret)
+    dw = _run_rsa(x2.T, dy, dw_tile, interpret)
+    return dx.astype(x2.dtype), dw.astype(w.dtype)
+
+
+_pallas_gemm2d.defvjp(_pallas_gemm2d_fwd, _pallas_gemm2d_bwd)
+
+
+def _resolved_tile(policy, m: int, k: int, n: int):
+    """(recommended cfg, executed (bm, bn, bk, mode)) for an (m,k,n) GEMM."""
+    cfg = policy.dispatcher.recommend(m, k, n)
+    return cfg, _clamped_blocks(cfg, m, k, n) + (cfg.mode,)
+
+
+def _shard_plan_name(policy, M: int, K: int, N: int
+                     ) -> Tuple[str, Optional[object]]:
+    """Mesh-level recommendation: ("", None) when meshless, else
+    (plan name, ShardPlan).  Recorded always; applied under shard_hints."""
+    from repro.parallel.hints import current_mesh
+    mesh = current_mesh()
+    if mesh is None:
+        return "", None
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    data = sizes.get("data", 1) * sizes.get("pod", 1)
+    model = sizes.get("model", 1)
+    plan = policy.dispatcher.recommend_sharding(M, K, N, data=data,
+                                                model=model)
+    return plan.name, plan
+
+
+def gemm(x: jnp.ndarray, w: jnp.ndarray, *, site: str = "dense",
+         backend: Optional[str] = None) -> jnp.ndarray:
+    """Self-adaptive GEMM.
+
+    w 2D:  (..., M', K) @ (K, N) -> (..., M', N), M = prod of leading dims.
+    w 3D:  expert bank — x (..., E, C, K) @ w (E, K, N) -> (..., E, C, N),
+           one GEMM per expert, recommended at M = rows-per-expert.
+
+    ``backend`` pins this site regardless of policy ("xla" for sites whose
+    downstream decisions must be bit-stable across backends, e.g. the MoE
+    router top-k).
+    """
+    from repro.dispatch.context import active
+    policy = active()
+    exec_backend = backend or policy.backend()
+
+    if w.ndim == 3:
+        return _gemm_experts(x, w, site, exec_backend, policy)
+    if w.ndim != 2:
+        raise ValueError(f"gemm weight must be 2D or 3D (expert bank), "
+                         f"got {w.shape}")
+
+    M = int(np.prod(x.shape[:-1])) if x.ndim > 1 else 1
+    K, N = int(x.shape[-1]), int(w.shape[-1])
+    cfg, tile = _resolved_tile(policy, M, K, N)
+    shard_name, shard_plan = _shard_plan_name(policy, M, K, N)
+    if policy.registry is not None:
+        policy.registry.record(site, M, K, N, cfg, *tile, exec_backend,
+                               shard_name)
+
+    if exec_backend == "pallas":
+        # the gradient GEMMs carry their own recommendations: dx is an
+        # (M,N)x(N,K) GEMM, dw a (K,M)x(M,N) one
+        _, dx_tile = _resolved_tile(policy, M, N, K)
+        _, dw_tile = _resolved_tile(policy, K, M, N)
+        x2 = x.reshape(M, K)
+        out = _pallas_gemm2d(x2, w, tile, dx_tile, dw_tile,
+                             policy.interpret)
+        return out.reshape(x.shape[:-1] + (N,))
+
+    y = jnp.einsum("...k,kn->...n", x, w)
+    if policy.shard_hints and shard_plan is not None:
+        from repro.parallel.hints import hint
+        axes = [None] * y.ndim
+        if y.ndim >= 2:
+            axes[0] = shard_plan.out_spec[0]
+        axes[-1] = shard_plan.out_spec[1]
+        y = hint(y, *axes)
+    return y
+
+
+def _gemm_experts(x, w, site: str, exec_backend: str, policy):
+    """x: (..., E, C, K) @ w: (E, K, N) -> (..., E, C, N)."""
+    E, K, N = (int(s) for s in w.shape)
+    if x.ndim < 3 or x.shape[-3] != E or int(x.shape[-1]) != K:
+        raise ValueError(f"expert gemm shape mismatch: x {x.shape} vs "
+                         f"w {w.shape}")
+    C = int(x.shape[-2])
+    lead = x.shape[:-3]
+    B = int(np.prod(lead)) if lead else 1
+    M = B * C                                # rows per expert GEMM
+    cfg, tile = _resolved_tile(policy, M, K, N)
+    shard_name, _ = _shard_plan_name(policy, M, K, N)
+    if policy.registry is not None:
+        policy.registry.record(site, M, K, N, cfg, *tile, exec_backend,
+                               shard_name)
+
+    if exec_backend == "pallas":
+        _, dx_tile = _resolved_tile(policy, M, N, K)
+        _, dw_tile = _resolved_tile(policy, K, M, N)
+        xe = jnp.moveaxis(x.reshape((B,) + x.shape[-3:]), 1, 0)  # (E,B,C,K)
+        xe = xe.reshape(E, M, K)
+        out = jax.vmap(lambda a, b: _pallas_gemm2d(
+            a, b, tile, dx_tile, dw_tile,
+            policy.interpret))(xe, w)                            # (E,M,N)
+        out = jnp.moveaxis(out.reshape(E, B, C, N), 0, 1)        # (B,E,C,N)
+        return out.reshape(lead + (E, C, N))
+    return jnp.einsum("...eck,ekn->...ecn", x, w)

@@ -1,0 +1,105 @@
+"""Per-trace site registry: which GEMM sites executed with which config.
+
+``dispatch.gemm`` records one ``SiteRecord`` per site at *trace* time —
+the moment the tile configuration is baked into the executable.  Records
+are grouped into named *scopes* (one scope per traced entry point, e.g.
+``prefill:m16`` or ``decode``), so a caller can read back the plan that a
+given compiled function actually executes.  Because jit caches traces,
+a scope is populated exactly once per compilation: re-reading it on later
+steps is how the serving engine derives its executed ``gemm_plan``
+without re-running any recommendation sweep.
+"""
+
+from __future__ import annotations
+
+import contextlib
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.hw import DATAFLOW_NAMES
+from repro.core.tpu_costmodel import TPUTileConfig
+
+
+@dataclass(frozen=True)
+class SiteRecord:
+    site: str
+    m: int
+    k: int
+    n: int
+    cfg: TPUTileConfig         # the dispatcher's recommendation
+    block_m: int               # executed blocks (clamped to the padded shape)
+    block_n: int
+    block_k: int
+    mode: int
+    backend: str               # "pallas" | "xla"
+    shard_plan: str = ""       # mesh-level plan name ("" when meshless)
+
+    def describe(self) -> str:
+        s = (f"bm={self.block_m} bn={self.block_n} bk={self.block_k} "
+             f"{DATAFLOW_NAMES[self.mode]} @{self.backend}")
+        if self.shard_plan:
+            s += f" shard={self.shard_plan}"
+        return s
+
+
+class SiteRegistry:
+    """Scope -> site-name -> SiteRecord, insertion-ordered."""
+
+    def __init__(self) -> None:
+        self._scopes: Dict[str, Dict[str, SiteRecord]] = {}
+        self._stack: List[str] = []
+        self.records: int = 0          # total record() calls (trace events)
+
+    # -- scoping -------------------------------------------------------------
+    @contextlib.contextmanager
+    def scope(self, name: str):
+        self._stack.append(name)
+        try:
+            yield self
+        finally:
+            self._stack.pop()
+
+    def current_scope(self) -> str:
+        return self._stack[-1] if self._stack else "_"
+
+    # -- recording (called by dispatch.gemm at trace time) -------------------
+    def record(self, site: str, m: int, k: int, n: int, cfg: TPUTileConfig,
+               block_m: int, block_n: int, block_k: int, mode: int,
+               backend: str, shard_plan: str = "") -> SiteRecord:
+        rec = SiteRecord(site, m, k, n, cfg, block_m, block_n, block_k,
+                         mode, backend, shard_plan)
+        scope = self._scopes.setdefault(self.current_scope(), {})
+        key = site
+        if key in scope and (scope[key].m, scope[key].k, scope[key].n) != \
+                (m, k, n):
+            # same site traced at a second shape inside one scope (e.g. the
+            # encoder and decoder MLP stacks sharing "layer.mlp.*" names)
+            key = f"{site}[{m}x{k}x{n}]"
+        scope[key] = rec
+        self.records += 1
+        return rec
+
+    # -- read-back -----------------------------------------------------------
+    def scopes(self) -> Tuple[str, ...]:
+        return tuple(self._scopes)
+
+    def sites(self, scope: Optional[str] = None) -> Dict[str, SiteRecord]:
+        return dict(self._scopes.get(scope or self.current_scope(), {}))
+
+    def plan(self, scope: Optional[str] = None) -> Dict[str, str]:
+        """The executed plan of a traced scope: site -> config description."""
+        return {name: rec.describe()
+                for name, rec in self._scopes.get(scope or
+                                                  self.current_scope(),
+                                                  {}).items()}
+
+    def backends(self, scope: Optional[str] = None) -> Dict[str, int]:
+        out: Dict[str, int] = {}
+        for rec in self._scopes.get(scope or self.current_scope(),
+                                    {}).values():
+            out[rec.backend] = out.get(rec.backend, 0) + 1
+        return out
+
+    def clear(self) -> None:
+        self._scopes.clear()
+        self.records = 0

@@ -1,13 +1,16 @@
 """Public jit'd wrappers for the Pallas kernels.
 
-Pad-to-block handling, dtype plumbing, and the interpret switch live here:
-``interpret=True`` (default) executes the kernel bodies in Python on CPU for
-validation; on real TPU hardware pass ``interpret=False``.
+Pad-to-block handling, dtype plumbing, and the interpret switch live here.
+The interpret default is backend-aware: ``interpret=None`` resolves to
+compiled execution on TPU and Python interpret mode everywhere else, so
+the same call sites run the real kernel on TPU with no flag plumbing.
+Pass an explicit bool to override.
 """
 
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -17,6 +20,15 @@ from repro.kernels.adaptnetx import adaptnetx_pallas
 from repro.kernels.flash_attn import flash_attention_pallas
 from repro.kernels.linear_attn import linear_attn_pallas
 from repro.kernels.rsa_gemm import rsa_gemm_pallas
+
+
+def default_interpret() -> bool:
+    """Compiled Pallas on TPU; interpret mode on every other backend."""
+    return jax.default_backend() != "tpu"
+
+
+def _interpret(flag: Optional[bool]) -> bool:
+    return default_interpret() if flag is None else flag
 
 
 def _pad_to(x: jnp.ndarray, axis: int, mult: int) -> jnp.ndarray:
@@ -33,30 +45,31 @@ def _pad_to(x: jnp.ndarray, axis: int, mult: int) -> jnp.ndarray:
                                              "mode", "interpret"))
 def rsa_gemm(a: jnp.ndarray, b: jnp.ndarray, *, block_m: int = 128,
              block_n: int = 128, block_k: int = 256, mode: int = OS,
-             interpret: bool = True) -> jnp.ndarray:
+             interpret: Optional[bool] = None) -> jnp.ndarray:
     """(M, K) @ (K, N) with SARA-configurable tiling; arbitrary shapes."""
     M, N = a.shape[0], b.shape[1]
     a2 = _pad_to(_pad_to(a, 0, block_m), 1, block_k)
     b2 = _pad_to(_pad_to(b, 0, block_k), 1, block_n)
     out = rsa_gemm_pallas(a2, b2, block_m=block_m, block_n=block_n,
-                          block_k=block_k, mode=mode, interpret=interpret)
+                          block_k=block_k, mode=mode,
+                          interpret=_interpret(interpret))
     return out[:M, :N]
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def adaptnetx_recommend(ids: jnp.ndarray, params: dict, *,
-                        interpret: bool = True) -> jnp.ndarray:
+                        interpret: Optional[bool] = None) -> jnp.ndarray:
     """One fused recommendation query.  ids: (3,) int32 -> logits."""
     return adaptnetx_pallas(
         ids, params["emb_m"], params["emb_k"], params["emb_n"],
         params["w1"], params["b1"], params["w2"], params["b2"],
-        interpret=interpret)
+        interpret=_interpret(interpret))
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
                                              "interpret"))
 def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 512,
-                    block_k: int = 512, interpret: bool = True):
+                    block_k: int = 512, interpret: Optional[bool] = None):
     """Flash attention with arbitrary Sq/Skv (pads to block multiples).
 
     q: (B, Sq, H, hd); k: (B, Skv, KVH, hd); v: (B, Skv, KVH, hd_v)
@@ -71,13 +84,13 @@ def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 512,
     k2 = _pad_to(k, 1, bk)
     v2 = _pad_to(v, 1, bk)
     o = flash_attention_pallas(q2, k2, v2, causal, scale, Skv, bq, bk,
-                               interpret)
+                               _interpret(interpret))
     return o[:, :Sq]
 
 
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
 def linear_attn(r, k, v, logw, u, *, chunk: int = 64,
-                interpret: bool = True):
+                interpret: Optional[bool] = None):
     """Chunked linear attention; pads S to the chunk multiple.
 
     r,k,logw: (BH, S, K); v: (BH, S, V); u: (BH, K) -> (BH, S, V).
@@ -88,13 +101,13 @@ def linear_attn(r, k, v, logw, u, *, chunk: int = 64,
     vv = _pad_to(v, 1, chunk)
     ww = _pad_to(logw, 1, chunk)
     o = linear_attn_pallas(rr, kk, vv, ww, u, chunk=chunk,
-                           interpret=interpret)
+                           interpret=_interpret(interpret))
     return o[:, :S]
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(6, 7))
 def wkv_attention(r, k, v, logw, u, state0, chunk: int = 64,
-                  interpret: bool = True):
+                  interpret: Optional[bool] = None):
     """RWKV6/GLA chunked linear attention, Pallas fwd + reference-VJP bwd.
 
     r, k, logw: (B, S, H, K); v: (B, S, H, V); u: (H, K);
@@ -114,7 +127,7 @@ def _wkv_fwd_impl(r, k, v, logw, u, state0, chunk, interpret):
     vv = _pad_to(v, 1, chunk)
     ww = _pad_to(logw, 1, chunk)
     o, sf = linear_attn_bshk_pallas(rr, kk, vv, ww, u, state0, chunk=chunk,
-                                    interpret=interpret)
+                                    interpret=_interpret(interpret))
     return o[:, :S], sf
 
 

@@ -29,6 +29,10 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.hw import IS, OS, WS
 
+# jax<0.5 ships the class as TPUCompilerParams; newer as CompilerParams
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or \
+    pltpu.TPUCompilerParams
+
 
 def _kernel_os(a_ref, b_ref, o_ref, acc_ref, *, n_k: int):
     @pl.when(pl.program_id(2) == 0)
@@ -82,7 +86,7 @@ def rsa_gemm_pallas(a: jnp.ndarray, b: jnp.ndarray, *, block_m: int,
                                    lambda m, n, k: (m, n)),
             out_shape=out_shape,
             scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
-            compiler_params=pltpu.CompilerParams(
+            compiler_params=_CompilerParams(
                 dimension_semantics=("parallel", "parallel", "arbitrary")),
             interpret=interpret,
         )(a, b)
@@ -99,7 +103,7 @@ def rsa_gemm_pallas(a: jnp.ndarray, b: jnp.ndarray, *, block_m: int,
             out_specs=pl.BlockSpec((block_m, block_n),
                                    lambda n, k, m: (m, n)),
             out_shape=out_shape,
-            compiler_params=pltpu.CompilerParams(
+            compiler_params=_CompilerParams(
                 dimension_semantics=("parallel", "arbitrary", "arbitrary")),
             interpret=interpret,
         )(a, b)
@@ -116,7 +120,7 @@ def rsa_gemm_pallas(a: jnp.ndarray, b: jnp.ndarray, *, block_m: int,
             out_specs=pl.BlockSpec((block_m, block_n),
                                    lambda m, k, n: (m, n)),
             out_shape=out_shape,
-            compiler_params=pltpu.CompilerParams(
+            compiler_params=_CompilerParams(
                 dimension_semantics=("parallel", "arbitrary", "arbitrary")),
             interpret=interpret,
         )(a, b)

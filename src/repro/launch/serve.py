@@ -102,8 +102,14 @@ def serve_continuous(arch: str = "llama3.2-1b", preset: str = "reduced",
                      num_requests: int = 8, num_slots: int = 4,
                      prompt_len: int = 32, gen: int = 32,
                      temperature: float = 0.8, top_k: int = 40,
-                     seed: int = 0, override_cfg=None, log: bool = True):
-    """Serve a request set through the continuous-batching engine."""
+                     seed: int = 0, execute: str = "auto",
+                     override_cfg=None, log: bool = True):
+    """Serve a request set through the continuous-batching engine.
+
+    ``execute`` selects the GEMM backend every model site runs through
+    the SARA dispatch layer with: "pallas" (RSA kernel), "xla", or
+    "auto" (compiled Pallas on TPU, XLA elsewhere).
+    """
     from repro.configs.registry import get_arch
     from repro.serving import EngineConfig, Request, ServingEngine
 
@@ -114,7 +120,8 @@ def serve_continuous(arch: str = "llama3.2-1b", preset: str = "reduced",
     engine = ServingEngine(cfg, EngineConfig(
         num_slots=num_slots, max_len=prompt_len + gen + 1,
         temperature=temperature, top_k=top_k, seed=seed,
-        src_len=prompt_len if cfg.family == "encdec" else 0))
+        src_len=prompt_len if cfg.family == "encdec" else 0,
+        execute=execute))
     reqs = []
     for i in range(num_requests):
         p = rng.integers(0, cfg.vocab_size, prompt_len).astype(np.int32)
@@ -130,7 +137,11 @@ def serve_continuous(arch: str = "llama3.2-1b", preset: str = "reduced",
         total = sum(len(v) for v in outputs.values())
         print(f"served {len(reqs)} requests / {total} tokens "
               f"in {time.time() - t0:.2f}s on {num_slots} slots")
-        print(engine.metrics.report(engine.dispatcher.cache_info()))
+        print(engine.metrics.report(engine.dispatcher.cache_info(),
+                                    engine.dispatch_stats()))
+        print("  executed gemm plan (last step):")
+        for site, desc in engine.gemm_plan.items():
+            print(f"    {site:<24} {desc}")
     return outputs, engine
 
 
@@ -144,6 +155,9 @@ def main():
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--temperature", type=float, default=0.8)
     ap.add_argument("--top-k", type=int, default=40)
+    ap.add_argument("--execute", default="auto",
+                    choices=["auto", "pallas", "xla"],
+                    help="GEMM backend for the dispatch layer")
     ap.add_argument("--waves", type=int, default=0,
                     help=">0: run the legacy wave-based path instead")
     ap.add_argument("--smoke", action="store_true",
@@ -152,10 +166,14 @@ def main():
     if a.smoke:
         outputs, engine = serve_continuous(
             arch=a.arch, num_requests=3, num_slots=2, prompt_len=12, gen=6,
-            temperature=0.0)
+            temperature=0.0, execute=a.execute)
         assert all(len(v) == 6 for v in outputs.values()), outputs
         engine.pool.check()
         assert engine.pool.num_free == engine.pool.num_blocks
+        # the plan must be registry-backed: sites that actually traced
+        assert engine.gemm_plan and "unembed" in engine.gemm_plan, \
+            engine.gemm_plan
+        assert engine.registry.scopes(), "no dispatch scopes traced"
         print("serving smoke OK")
         return
     if a.waves > 0:
@@ -165,7 +183,8 @@ def main():
         return
     serve_continuous(arch=a.arch, preset=a.preset, num_requests=a.requests,
                      num_slots=a.slots, prompt_len=a.prompt_len, gen=a.gen,
-                     temperature=a.temperature, top_k=a.top_k)
+                     temperature=a.temperature, top_k=a.top_k,
+                     execute=a.execute)
 
 
 if __name__ == "__main__":

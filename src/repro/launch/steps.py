@@ -3,17 +3,25 @@
 Each builder returns the pure step function plus the in/out sharding trees,
 ready for ``jax.jit(...).lower(...)`` in the dry-run, ``train.py`` and
 ``serve.py``.
+
+Lowering happens under a SARA dispatch context (``_dispatch_ctx``): every
+GEMM site resolves its tile configuration at trace time, so the lowered
+HLO embodies the executed plan (RSA Pallas kernels under
+``execute="pallas"``/on-TPU ``"auto"``; XLA dots otherwise) and the sites
+are recorded in the given registry for dry-run inspection.
 """
 
 from __future__ import annotations
 
+import contextlib
 import functools
-from typing import Any, Dict, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import dispatch
 from repro.configs.base import ArchConfig
 from repro.configs.shapes import ShapeSpec, cache_specs, input_specs
 from repro.models.api import Model, build_model
@@ -22,6 +30,14 @@ from repro.optim.adamw import AdamW, AdamWState, apply_updates
 from repro.parallel.hints import use_mesh
 from repro.parallel.sharding import (batch_specs, cache_specs_tree,
                                      param_specs, to_named)
+
+
+@contextlib.contextmanager
+def _dispatch_ctx(scope: str, execute: str = "xla",
+                  registry: Optional[dispatch.SiteRegistry] = None):
+    reg = registry if registry is not None else dispatch.default_registry()
+    with dispatch.use(execute=execute, registry=reg), reg.scope(scope):
+        yield reg
 
 
 # ---------------------------------------------------------------------------
@@ -208,7 +224,9 @@ def build_train_step(cfg: ArchConfig, mesh, lr: float = 3e-4):
     return model, train_step, (params_aval, opt_aval), (p_sh, o_sh)
 
 
-def lower_train_step(cfg: ArchConfig, mesh, shape: ShapeSpec):
+def lower_train_step(cfg: ArchConfig, mesh, shape: ShapeSpec,
+                     execute: str = "xla",
+                     registry: Optional[dispatch.SiteRegistry] = None):
     model, step, (params_aval, opt_aval), (p_sh, o_sh) = \
         build_train_step(cfg, mesh)
     specs = input_specs(cfg, shape)
@@ -218,7 +236,8 @@ def lower_train_step(cfg: ArchConfig, mesh, shape: ShapeSpec):
                      out_shardings=(p_sh, o_sh, None),
                      donate_argnums=(0, 1))
     with mesh:
-        with use_mesh(mesh, cfg.tp_strategy):
+        with use_mesh(mesh, cfg.tp_strategy), \
+                _dispatch_ctx(f"train:{shape.name}", execute, registry):
             lowered = jitted.lower(params_aval, opt_aval, specs)
     return lowered, model, params_aval
 
@@ -236,7 +255,9 @@ def build_serve_parts(cfg: ArchConfig, mesh, shape: ShapeSpec):
     return model, params_aval, p_sh, cache_aval, c_sh
 
 
-def lower_decode_step(cfg: ArchConfig, mesh, shape: ShapeSpec):
+def lower_decode_step(cfg: ArchConfig, mesh, shape: ShapeSpec,
+                      execute: str = "xla",
+                      registry: Optional[dispatch.SiteRegistry] = None):
     """serve_step: one new token against a seq_len KV cache."""
     model, params_aval, p_sh, cache_aval, c_sh = \
         build_serve_parts(cfg, mesh, shape)
@@ -250,14 +271,17 @@ def lower_decode_step(cfg: ArchConfig, mesh, shape: ShapeSpec):
                      in_shardings=(p_sh, b_sh["tokens"], c_sh),
                      out_shardings=(None, c_sh),
                      donate_argnums=(2,))
-    with mesh, use_mesh(mesh, cfg.tp_strategy):
+    with mesh, use_mesh(mesh, cfg.tp_strategy), \
+            _dispatch_ctx(f"decode:{shape.name}", execute, registry):
         # decode against a FULL cache: pos = seq_len - 1 abstractly (the cache
         # aval already has capacity seq_len; occupancy is a runtime value)
         lowered = jitted.lower(params_aval, specs["tokens"], cache_aval)
     return lowered, model, params_aval
 
 
-def lower_prefill_step(cfg: ArchConfig, mesh, shape: ShapeSpec):
+def lower_prefill_step(cfg: ArchConfig, mesh, shape: ShapeSpec,
+                       execute: str = "xla",
+                       registry: Optional[dispatch.SiteRegistry] = None):
     model, params_aval, p_sh, cache_aval, c_sh = \
         build_serve_parts(cfg, mesh, shape)
     specs = input_specs(cfg, shape)
@@ -270,14 +294,17 @@ def lower_prefill_step(cfg: ArchConfig, mesh, shape: ShapeSpec):
                      in_shardings=(p_sh, b_sh, c_sh),
                      out_shardings=(None, c_sh),
                      donate_argnums=(2,))
-    with mesh, use_mesh(mesh, cfg.tp_strategy):
+    with mesh, use_mesh(mesh, cfg.tp_strategy), \
+            _dispatch_ctx(f"prefill:{shape.name}", execute, registry):
         lowered = jitted.lower(params_aval, specs, cache_aval)
     return lowered, model, params_aval
 
 
-def lower_for_cell(cfg: ArchConfig, mesh, shape: ShapeSpec):
+def lower_for_cell(cfg: ArchConfig, mesh, shape: ShapeSpec,
+                   execute: str = "xla",
+                   registry: Optional[dispatch.SiteRegistry] = None):
     if shape.kind == "train":
-        return lower_train_step(cfg, mesh, shape)
+        return lower_train_step(cfg, mesh, shape, execute, registry)
     if shape.kind == "prefill":
-        return lower_prefill_step(cfg, mesh, shape)
-    return lower_decode_step(cfg, mesh, shape)
+        return lower_prefill_step(cfg, mesh, shape, execute, registry)
+    return lower_decode_step(cfg, mesh, shape, execute, registry)

@@ -25,13 +25,15 @@ def train_main(arch: str = "llama3.2-1b", preset: str = "reduced",
                checkpoint_dir: str = "/tmp/repro_ckpt",
                checkpoint_every: int = 25, lr: float = 1e-3,
                log_every: int = 10, seed: int = 0,
+               execute: str = "auto",
                override_cfg=None, fail_injector=None,
                d_model: Optional[int] = None,
                num_layers: Optional[int] = None):
+    from repro import dispatch
     from repro.configs.registry import get_arch
     from repro.data.pipeline import make_loader
     from repro.launch.mesh import make_host_mesh
-    from repro.launch.steps import build_train_step
+    from repro.launch.steps import _dispatch_ctx, build_train_step
     from repro.configs.shapes import input_specs, ShapeSpec
     from repro.parallel.hints import use_mesh
     from repro.parallel.sharding import batch_specs, to_named
@@ -78,8 +80,14 @@ def train_main(arch: str = "llama3.2-1b", preset: str = "reduced",
         arr = batches.get(step) or next(loader)
         return jax.device_put({"tokens": arr["tokens"]}, b_sh)
 
+    # the dispatch policy is consulted at trace time (first wrapped_step
+    # call), so every training GEMM — fwd and the custom-VJP bwd pair —
+    # executes with the SARA-recommended configuration
+    registry = dispatch.SiteRegistry()
+
     def wrapped_step(params, opt_state, batch):
-        with use_mesh(mesh, cfg.tp_strategy), mesh:
+        with use_mesh(mesh, cfg.tp_strategy), mesh, \
+                _dispatch_ctx("train_step", execute, registry):
             return jitted(params, opt_state, batch)
 
     driver = TrainDriver(
@@ -101,6 +109,10 @@ def train_main(arch: str = "llama3.2-1b", preset: str = "reduced",
     print(f"train done: {steps} steps in {dt:.1f}s ({tok_s:,.0f} tok/s), "
           f"loss {losses[0]:.3f} -> {losses[-1]:.3f}; "
           f"{driver.straggler_report()}")
+    plan = registry.plan("train_step")
+    if plan:
+        print(f"  dispatch: {len(plan)} GEMM sites executed "
+              f"({dict(registry.backends('train_step'))})")
     loader.close()
     return params, history, driver
 
@@ -117,10 +129,14 @@ def main():
     ap.add_argument("--model-axis", type=int, default=1)
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--ckpt", default="/tmp/repro_ckpt")
+    ap.add_argument("--execute", default="auto",
+                    choices=["auto", "pallas", "xla"],
+                    help="GEMM backend for the dispatch layer")
     a = ap.parse_args()
     train_main(arch=a.arch, preset=a.preset, steps=a.steps,
                global_batch=a.batch, seq_len=a.seq, data_axis=a.data_axis,
-               model_axis=a.model_axis, lr=a.lr, checkpoint_dir=a.ckpt)
+               model_axis=a.model_axis, lr=a.lr, checkpoint_dir=a.ckpt,
+               execute=a.execute)
 
 
 if __name__ == "__main__":

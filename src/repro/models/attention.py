@@ -268,11 +268,15 @@ def init_gqa(key, cfg: ArchConfig, *, d_in: Optional[int] = None,
     return p
 
 
-def _proj_qkv(params, x, kv_x, cfg: ArchConfig, compute_dtype):
+def _proj_qkv(params, x, kv_x, cfg: ArchConfig, compute_dtype,
+              site: str = "layer.attn"):
     B = x.shape[0]
-    q = dense(x, params["wq"], params.get("bq"), compute_dtype)
-    k = dense(kv_x, params["wk"], params.get("bk"), compute_dtype)
-    v = dense(kv_x, params["wv"], params.get("bv"), compute_dtype)
+    q = dense(x, params["wq"], params.get("bq"), compute_dtype,
+              site=f"{site}.q")
+    k = dense(kv_x, params["wk"], params.get("bk"), compute_dtype,
+              site=f"{site}.k")
+    v = dense(kv_x, params["wv"], params.get("bv"), compute_dtype,
+              site=f"{site}.v")
     q = hint(q.reshape(B, x.shape[1], cfg.num_heads, cfg.head_dim),
              "B", None, "M", None)
     k = hint(k.reshape(B, kv_x.shape[1], cfg.num_kv_heads, cfg.head_dim),
@@ -315,7 +319,8 @@ def gqa_self_attention(params: Params, x: jnp.ndarray, positions: jnp.ndarray,
                                   impl=cfg.attn_impl)
     B, S = x.shape[0], x.shape[1]
     out = hint(out.reshape(B, S, cfg.q_dim), "B", None, "M")
-    out = hint(dense(out, params["wo"], None, cdt), "B", None, None)
+    out = hint(dense(out, params["wo"], None, cdt, site="layer.attn.out"),
+               "B", None, None)
     return out, (new_cache if (update_cache or cache is not None) else None)
 
 
@@ -324,20 +329,22 @@ def gqa_cross_attention(params: Params, x: jnp.ndarray, enc_kv: Tuple[jnp.ndarra
     """Cross-attention: K/V precomputed from encoder output (no RoPE)."""
     cdt = jnp.dtype(cfg.compute_dtype)
     B, S = x.shape[0], x.shape[1]
-    q = dense(x, params["wq"], params.get("bq"), cdt)
+    q = dense(x, params["wq"], params.get("bq"), cdt, site="layer.cross.q")
     q = q.reshape(B, S, cfg.num_heads, cfg.head_dim)
     k, v = enc_kv
     out = multihead_attention(q, k.astype(cdt), v.astype(cdt), causal=False,
                               chunk=cfg.attn_chunk, impl=cfg.attn_impl)
     out = out.reshape(B, S, cfg.q_dim)
-    return dense(out, params["wo"], None, cdt)
+    return dense(out, params["wo"], None, cdt, site="layer.cross.out")
 
 
 def cross_attention_kv(params: Params, enc_out: jnp.ndarray, cfg: ArchConfig):
     cdt = jnp.dtype(cfg.compute_dtype)
     B, S = enc_out.shape[0], enc_out.shape[1]
-    k = dense(enc_out, params["wk"], params.get("bk"), cdt)
-    v = dense(enc_out, params["wv"], params.get("bv"), cdt)
+    k = dense(enc_out, params["wk"], params.get("bk"), cdt,
+              site="layer.cross.k")
+    v = dense(enc_out, params["wv"], params.get("bv"), cdt,
+              site="layer.cross.v")
     return (k.reshape(B, S, cfg.num_kv_heads, cfg.head_dim),
             v.reshape(B, S, cfg.num_kv_heads, cfg.head_dim))
 
@@ -377,8 +384,11 @@ def _mla_q(params, x, positions, cfg: ArchConfig, cdt):
     m = cfg.mla
     B, S = x.shape[0], x.shape[1]
     H = cfg.num_heads
-    cq = rmsnorm(dense(x, params["w_dq"], None, cdt), params["q_norm"], cfg.norm_eps)
-    q = dense(cq, params["w_uq"], None, cdt).reshape(
+    cq = rmsnorm(dense(x, params["w_dq"], None, cdt,
+                       site="layer.mla.q_down"), params["q_norm"],
+                 cfg.norm_eps)
+    q = dense(cq, params["w_uq"], None, cdt,
+              site="layer.mla.q_up").reshape(
         B, S, H, m.qk_nope_head_dim + m.qk_rope_head_dim)
     q_nope, q_rope = jnp.split(q, [m.qk_nope_head_dim], axis=-1)
     q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
@@ -387,7 +397,7 @@ def _mla_q(params, x, positions, cfg: ArchConfig, cdt):
 
 def _mla_ckv(params, x, positions, cfg: ArchConfig, cdt):
     m = cfg.mla
-    dkv = dense(x, params["w_dkv"], None, cdt)
+    dkv = dense(x, params["w_dkv"], None, cdt, site="layer.mla.kv_down")
     c_kv, k_rope = jnp.split(dkv, [m.kv_lora_rank], axis=-1)
     c_kv = rmsnorm(c_kv, params["kv_norm"], cfg.norm_eps)
     k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)[:, :, 0, :]
@@ -408,9 +418,11 @@ def mla_self_attention(params: Params, x: jnp.ndarray, positions: jnp.ndarray,
     if cache is None:
         # expanded (train/prefill-without-cache) path: standard flash attention
         # over per-head keys (nope ++ shared rope) and values.
-        k_nope = dense(c_kv, params["w_uk"], None, cdt).reshape(
+        k_nope = dense(c_kv, params["w_uk"], None, cdt,
+                       site="layer.mla.k_up").reshape(
             B, S, H, m.qk_nope_head_dim)
-        v = dense(c_kv, params["w_uv"], None, cdt).reshape(B, S, H, m.v_head_dim)
+        v = dense(c_kv, params["w_uv"], None, cdt,
+                  site="layer.mla.v_up").reshape(B, S, H, m.v_head_dim)
         k_rope_b = jnp.broadcast_to(k_rope[:, :, None, :],
                                     (B, S, H, m.qk_rope_head_dim))
         q = jnp.concatenate([q_nope, q_rope], axis=-1)
@@ -420,7 +432,7 @@ def mla_self_attention(params: Params, x: jnp.ndarray, positions: jnp.ndarray,
                                   causal_skip=cfg.flash_causal_skip,
                                   impl=cfg.attn_impl)
         out = out.reshape(B, S, H * m.v_head_dim)
-        out = dense(out, params["wo"], None, cdt)
+        out = dense(out, params["wo"], None, cdt, site="layer.mla.out")
         new_cache = None
         if update_cache:
             raise ValueError("prefill with cache must pass an initialized cache")
@@ -451,7 +463,7 @@ def mla_self_attention(params: Params, x: jnp.ndarray, positions: jnp.ndarray,
     w_uv = params["w_uv"].reshape(m.kv_lora_rank, H, m.v_head_dim)
     out = jnp.einsum("bshr,rhd->bshd", o_lat, w_uv.astype(cdt))
     out = out.reshape(B, S, H * m.v_head_dim)
-    out = dense(out, params["wo"], None, cdt)
+    out = dense(out, params["wo"], None, cdt, site="layer.mla.out")
     return out, new_cache
 
 

@@ -28,6 +28,9 @@ def init_mlp(key, d_model: int, d_ff: int, cfg: ArchConfig) -> Params:
 def mlp_apply(params: Params, x: jnp.ndarray, cfg: ArchConfig) -> jnp.ndarray:
     cdt = jnp.dtype(cfg.compute_dtype)
     act = activation(cfg.mlp_activation)
-    g = act(hint(dense(x, params["w_gate"], None, cdt), "B", None, "M"))
-    u = hint(dense(x, params["w_up"], None, cdt), "B", None, "M")
-    return hint(dense(g * u, params["w_down"], None, cdt), "B", None, None)
+    g = act(hint(dense(x, params["w_gate"], None, cdt,
+                       site="layer.mlp.gate"), "B", None, "M"))
+    u = hint(dense(x, params["w_up"], None, cdt,
+                   site="layer.mlp.up"), "B", None, "M")
+    return hint(dense(g * u, params["w_down"], None, cdt,
+                      site="layer.mlp.down"), "B", None, None)

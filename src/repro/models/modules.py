@@ -50,8 +50,14 @@ def ones_init(shape, dtype="float32"):
 # ---------------------------------------------------------------------------
 
 def dense(x: jnp.ndarray, w: jnp.ndarray, b: Optional[jnp.ndarray] = None,
-          compute_dtype=jnp.float32) -> jnp.ndarray:
-    y = jnp.einsum("...i,io->...o", x.astype(compute_dtype), w.astype(compute_dtype))
+          compute_dtype=jnp.float32, *, site: str = "dense") -> jnp.ndarray:
+    """Thin wrapper over the SARA dispatch layer: every dense GEMM site
+    resolves its (M, K, N) -> tile config through the active dispatcher and
+    executes via the RSA Pallas kernel or XLA (repro/dispatch).  ``site`` is
+    the stable site name recorded in the per-trace site registry."""
+    from repro import dispatch
+    y = dispatch.gemm(x.astype(compute_dtype), w.astype(compute_dtype),
+                      site=site)
     if b is not None:
         y = y + b.astype(compute_dtype)
     return y

@@ -27,8 +27,9 @@ from typing import Any, Dict, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import dispatch
 from repro.configs.base import ArchConfig
-from repro.models.modules import activation, dense_init
+from repro.models.modules import activation, dense, dense_init
 from repro.parallel.hints import hint
 
 Params = Dict[str, Any]
@@ -88,9 +89,11 @@ def moe_apply(params: Params, x: jnp.ndarray, cfg: ArchConfig
     k = m.experts_per_token
     C = row_capacity(S, cfg)
 
-    # ---- routing (fp32 for stability) ------------------------------------
-    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32),
-                        params["router"].astype(jnp.float32))
+    # ---- routing (fp32 for stability; pinned to XLA so the top-k routing
+    # decision is bit-stable across execution backends) --------------------
+    logits = dispatch.gemm(x.astype(jnp.float32),
+                           params["router"].astype(jnp.float32),
+                           site="moe.router", backend="xla")
     logits = jnp.where(jnp.arange(E_pad)[None, None, :] < E, logits, -1e30)
     probs = jax.nn.softmax(logits, axis=-1)
     gate_vals, top_idx = jax.lax.top_k(probs, k)            # (B,S,k)
@@ -117,13 +120,15 @@ def moe_apply(params: Params, x: jnp.ndarray, cfg: ArchConfig
     buf = hint(buf, "B", "E", None, None)     # EP: experts over `model`
     # buf: (B, E_pad, C, d)
 
-    # ---- expert computation (EP: E sharded over `model`) ------------------
+    # ---- expert computation (EP: E sharded over `model`); the expert-bank
+    # GEMMs go through the dispatch layer (one RSA GEMM per expert) ---------
     act = activation(cfg.mlp_activation)
-    g = jnp.einsum("becd,edf->becf", buf, params["w_gate"].astype(cdt))
-    u = jnp.einsum("becd,edf->becf", buf, params["w_up"].astype(cdt))
+    g = dispatch.gemm(buf, params["w_gate"].astype(cdt),
+                      site="moe.expert.gate")
+    u = dispatch.gemm(buf, params["w_up"].astype(cdt), site="moe.expert.up")
     h = act(g) * u
-    out_buf = hint(jnp.einsum("becf,efd->becd", h,
-                              params["w_down"].astype(cdt)),
+    out_buf = hint(dispatch.gemm(h, params["w_down"].astype(cdt),
+                                 site="moe.expert.down"),
                    "B", "E", None, None)
 
     # ---- combine back ------------------------------------------------------
@@ -140,9 +145,10 @@ def moe_apply(params: Params, x: jnp.ndarray, cfg: ArchConfig
     # ---- shared experts ----------------------------------------------------
     if "shared" in params:
         sp = params["shared"]
-        gs = act(jnp.einsum("bsd,df->bsf", x.astype(cdt), sp["w_gate"].astype(cdt)))
-        us = jnp.einsum("bsd,df->bsf", x.astype(cdt), sp["w_up"].astype(cdt))
-        y = y + jnp.einsum("bsf,fd->bsd", gs * us, sp["w_down"].astype(cdt))
+        gs = act(dense(x, sp["w_gate"], None, cdt, site="moe.shared.gate"))
+        us = dense(x, sp["w_up"], None, cdt, site="moe.shared.up")
+        y = y + dense(gs * us, sp["w_down"], None, cdt,
+                      site="moe.shared.down")
 
     # ---- aux losses --------------------------------------------------------
     # load-balance: E * sum_e f_e * p_e   (Switch), over real experts

@@ -28,7 +28,7 @@ from repro.models.transformer import (_embed, _frontend_embed, _maybe_remat,
                                       _scan_mamba_span, _unembed_weight,
                                       decoder_layer_apply, hybrid_layout,
                                       Params)
-from repro.models.modules import rmsnorm
+from repro.models.modules import dense, rmsnorm
 
 Cache = Dict[str, Any]
 
@@ -171,8 +171,7 @@ def _run_hybrid_stack(params: Params, x, positions, cfg: ArchConfig, cache):
 
 def _lm_head(params, h_last, cfg: ArchConfig):
     w = _unembed_weight(params, cfg)
-    return jnp.einsum("bd,dv->bv", h_last.astype(jnp.float32),
-                      w.astype(jnp.float32))
+    return dense(h_last, w, None, jnp.float32, site="unembed")
 
 
 def prefill(params: Params, batch: Dict[str, jnp.ndarray], cfg: ArchConfig,

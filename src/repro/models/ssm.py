@@ -219,17 +219,17 @@ def rwkv_block_apply(params: Params, x: jnp.ndarray, cfg: ArchConfig,
 
     xr, xk, xv, xw, xg = (mix(params[m]) for m in
                           ("mu_r", "mu_k", "mu_v", "mu_w", "mu_g"))
-    r = hint(dense(xr, params["w_r"], None, cdt).reshape(B, S, H, K),
+    r = hint(dense(xr, params["w_r"], None, cdt, site="ssm.r").reshape(B, S, H, K),
              "B", None, "M", None)
-    k = hint(dense(xk, params["w_k"], None, cdt).reshape(B, S, H, K),
+    k = hint(dense(xk, params["w_k"], None, cdt, site="ssm.k").reshape(B, S, H, K),
              "B", None, "M", None)
-    v = hint(dense(xv, params["w_v"], None, cdt).reshape(B, S, H, K),
+    v = hint(dense(xv, params["w_v"], None, cdt, site="ssm.v").reshape(B, S, H, K),
              "B", None, "M", None)
-    g = jax.nn.silu(dense(xg, params["w_g"], None, cdt))
+    g = jax.nn.silu(dense(xg, params["w_g"], None, cdt, site="ssm.g"))
 
     # data-dependent decay (log space, always <= -exp(-10) < 0)
-    lora = jnp.tanh(dense(xw, params["w_decay_a"], None, cdt))
-    dec = dense(lora, params["w_decay_b"], None, cdt) + \
+    lora = jnp.tanh(dense(xw, params["w_decay_a"], None, cdt, site="ssm.decay_a"))
+    dec = dense(lora, params["w_decay_b"], None, cdt, site="ssm.decay_b") + \
         params["decay_base"].astype(cdt)
     logw = -jnp.exp(jnp.clip(dec, -12.0, 1.0)).astype(jnp.float32)  # (B,S,d)
     logw = logw.reshape(B, S, H, K)
@@ -251,16 +251,16 @@ def rwkv_block_apply(params: Params, x: jnp.ndarray, cfg: ArchConfig,
     out = out * params["ln_scale"].astype(jnp.float32) + \
         params["ln_bias"].astype(jnp.float32)
     out = (out.reshape(B, S, d).astype(cdt)) * g
-    y_time = dense(out, params["w_o"], None, cdt)
+    y_time = dense(out, params["w_o"], None, cdt, site="ssm.out")
 
     # ---- channel mix ------------------------------------------------------
     xc = x + y_time           # pre-norm simplification: mix on residual stream
     xxc = _shift(xc, state.shift_c.astype(cdt))
     xck = xc + (xxc - xc) * params["mu_ck"].astype(cdt)
     xcr = xc + (xxc - xc) * params["mu_cr"].astype(cdt)
-    kk = jnp.square(jax.nn.relu(dense(xck, params["w_ck"], None, cdt)))
-    vv = dense(kk, params["w_cv"], None, cdt)
-    rr = jax.nn.sigmoid(dense(xcr, params["w_cr"], None, cdt))
+    kk = jnp.square(jax.nn.relu(dense(xck, params["w_ck"], None, cdt, site="ssm.channel_k")))
+    vv = dense(kk, params["w_cv"], None, cdt, site="ssm.channel_v")
+    rr = jax.nn.sigmoid(dense(xcr, params["w_cr"], None, cdt, site="ssm.channel_r"))
     y = y_time + rr * vv
 
     new_state = RWKVState(
@@ -374,7 +374,7 @@ def mamba_block_apply(params: Params, x: jnp.ndarray, cfg: ArchConfig,
     W = cfg.ssm.conv_width
     x = x.astype(cdt)
 
-    zxbcdt = hint(dense(x, params["w_in"], None, cdt), "B", None, None)
+    zxbcdt = hint(dense(x, params["w_in"], None, cdt, site="ssm.in_proj"), "B", None, None)
     z, xBC, dt_raw = jnp.split(zxbcdt, [d_inner, 2 * d_inner + 2 * N], axis=-1)
 
     # causal depthwise conv over (x ++ B ++ C)
@@ -407,7 +407,7 @@ def mamba_block_apply(params: Params, x: jnp.ndarray, cfg: ArchConfig,
     y = (y32 * jax.lax.rsqrt(var + cfg.norm_eps) *
          (1.0 + params["norm_scale"].astype(jnp.float32))).astype(cdt)
     y = y * jax.nn.silu(z)
-    out = dense(y, params["w_out"], None, cdt)
+    out = dense(y, params["w_out"], None, cdt, site="ssm.out_proj")
 
     new_state = MambaState(ssm=new_ssm.astype(state.ssm.dtype),
                            conv=new_conv.astype(state.conv.dtype))

@@ -207,9 +207,12 @@ def _embed(params, tokens, cfg: ArchConfig):
 def _frontend_embed(params, feats, cfg: ArchConfig):
     cdt = jnp.dtype(cfg.compute_dtype)
     if cfg.frontend.kind == "audio_frames":
-        return dense(feats, params["frontend"]["proj"], None, cdt)
-    h = dense(feats, params["frontend"]["proj1"], None, cdt)
-    return dense(jax.nn.gelu(h), params["frontend"]["proj2"], None, cdt)
+        return dense(feats, params["frontend"]["proj"], None, cdt,
+                     site="frontend.proj")
+    h = dense(feats, params["frontend"]["proj1"], None, cdt,
+              site="frontend.proj1")
+    return dense(jax.nn.gelu(h), params["frontend"]["proj2"], None, cdt,
+                 site="frontend.proj2")
 
 
 def _scan_decoder(params, x, positions, cfg: ArchConfig, enc_kv=None):
@@ -421,8 +424,7 @@ def chunked_ce_loss(params, hidden, labels, mask, cfg: ArchConfig):
 
     @jax.checkpoint
     def chunk_loss(h, y, m):
-        logits = jnp.einsum("bcd,dv->bcv", h.astype(jnp.float32),
-                            w.astype(jnp.float32))
+        logits = dense(h, w, None, jnp.float32, site="loss.unembed")
         logits = hint(logits, "B", None, "M")
         lse = jax.nn.logsumexp(logits, axis=-1)
         gold = jnp.take_along_axis(logits, y[..., None], axis=-1)[..., 0]
@@ -457,5 +459,4 @@ def logits(params, batch, cfg: ArchConfig):
     """Full logits for small-scale eval/tests only."""
     hidden, _, _ = forward(params, batch, cfg)
     w = _unembed_weight(params, cfg)
-    return jnp.einsum("bsd,dv->bsv", hidden.astype(jnp.float32),
-                      w.astype(jnp.float32))
+    return dense(hidden, w, None, jnp.float32, site="unembed")

@@ -13,11 +13,15 @@ Execution model
   ``serving.prefill`` uses to pick the real last-token logits and correct
   the cache lengths.  SSM/hybrid families use exact-length prefill (their
   recurrent state integrates every input token).
-* Every GEMM site's (M, K, N) — which changes with the live token count —
-  is routed through ``SaraDispatcher.recommend`` before each prefill and
-  each decode round, so the recommended tile configuration adapts as the
-  batch composition shifts (the paper's runtime-reconfiguration loop, at
-  serving granularity).  ``SaraDispatcher.cache_info()`` feeds the
+* Every GEMM the model runs goes through the SARA dispatch layer
+  (``repro.dispatch``): each prefill/decode entry point traces under a
+  named registry scope with this engine's dispatcher active, so the tile
+  configuration every site *executes* with (RSA Pallas blocks + residency
+  mode under ``execute="pallas"``/on-TPU ``"auto"``; XLA otherwise) is
+  recorded per trace.  ``gemm_plan`` is read back from that registry —
+  the executed plan, not an advisory estimate — and ``plan_changes``
+  counts real reconfigurations (steps whose executed plan differs from
+  the previous step's).  ``SaraDispatcher.cache_info()`` feeds the
   recommendation-cache hit rate into the metrics.
 * The ``KVBlockPool`` meters admission over *text* tokens (the vlm
   frontend adds a constant per-slot overhead outside the budget).
@@ -33,6 +37,7 @@ in engine-step units — deterministic, used by tests and trace benchmarks).
 
 from __future__ import annotations
 
+import contextlib
 import time
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple
@@ -41,8 +46,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import dispatch
 from repro.configs.base import ArchConfig
 from repro.core.sara import SaraDispatcher
+from repro.dispatch import SiteRegistry
 from repro.serving.kv_pool import KVBlockPool
 from repro.serving.metrics import ServingMetrics
 from repro.serving.scheduler import ContinuousScheduler, Request
@@ -63,7 +70,9 @@ def sample_logits(key, logits: jnp.ndarray, temperature: float = 1.0,
 
 
 # ---------------------------------------------------------------------------
-# GEMM-site enumeration (what the dispatcher is consulted about)
+# GEMM-site enumeration (analytic estimate — benchmarks/capacity planning).
+# The engine itself no longer consults this: its gemm_plan is read back
+# from the dispatch registry, i.e. from the sites that actually traced.
 # ---------------------------------------------------------------------------
 
 def gemm_sites(cfg: ArchConfig, m_tokens: int) -> List[Tuple[str, int, int, int]]:
@@ -113,6 +122,7 @@ class EngineConfig:
     eos_id: Optional[int] = None
     clock: str = "steps"              # "steps" | "wall"
     src_len: int = 0                  # encdec: shared encoder length
+    execute: str = "auto"             # GEMM backend: "pallas"|"xla"|"auto"
 
 
 class ServingEngine:
@@ -152,8 +162,14 @@ class ServingEngine:
         self._key = jax.random.PRNGKey(e.seed + 1)
         self._vtime = 0.0
         self._t0 = time.time()
+        # registry-backed executed-plan bookkeeping: each traced entry point
+        # (one per prefill bucket + one for the vmapped decode) records its
+        # sites under a scope; _dispatch() reads the plan back (memoized per
+        # scope) instead of re-running any recommendation sweep.
+        self.registry = SiteRegistry()
         self.gemm_plan: Dict[str, str] = {}
         self.plan_changes = 0
+        self._plan_memo: Dict[str, Dict[str, str]] = {}
 
     # -- time -----------------------------------------------------------------
     def now(self) -> float:
@@ -162,12 +178,26 @@ class ServingEngine:
         return time.time() - self._t0
 
     # -- SARA dispatch --------------------------------------------------------
-    def _dispatch(self, m_tokens: int) -> None:
-        plan = {}
-        for name, M, K, N in gemm_sites(self.cfg, m_tokens):
-            plan[name] = self.dispatcher.recommend(M, K, N).describe()
+    @contextlib.contextmanager
+    def _dispatch_scope(self, scope: str):
+        """Install this engine's dispatch policy + registry scope around a
+        jitted call: if the call traces (first time this shape is seen),
+        every GEMM site records its executed configuration under ``scope``."""
+        with dispatch.use(self.dispatcher, execute=self.ecfg.execute,
+                          registry=self.registry), \
+                self.registry.scope(scope):
+            yield
+
+    def _dispatch(self, scope: str) -> None:
+        """Adopt the executed plan of ``scope`` (memoized per scope — the
+        scope name encodes the token count, so an unchanged batch shape is
+        a dict lookup, not a recommendation sweep)."""
+        plan = self._plan_memo.get(scope)
+        if plan is None:
+            plan = self.registry.plan(scope)
+            self._plan_memo[scope] = plan
         if plan != self.gemm_plan:
-            self.plan_changes += 1
+            self.plan_changes += 1       # a real reconfiguration
             self.gemm_plan = plan
 
     # -- buckets --------------------------------------------------------------
@@ -237,12 +267,14 @@ class ServingEngine:
                              np.float32)),
                 jnp.dtype(cfg.compute_dtype))
 
-        self._dispatch(bucket)
+        scope = f"prefill:m{bucket}"
         fresh = self.model.init_cache(1, self._cache_len, src_len=e.src_len)
         t0 = time.time()
-        logits, new_cache = jax.block_until_ready(self._prefill(
-            self.params, batch, fresh, jnp.int32(n)))
+        with self._dispatch_scope(scope):
+            logits, new_cache = jax.block_until_ready(self._prefill(
+                self.params, batch, fresh, jnp.int32(n)))
         self.metrics.on_prefill(n, time.time() - t0)
+        self._dispatch(scope)
         self._slot_restore(req.slot, new_cache)
 
         self._key, k = jax.random.split(self._key)
@@ -296,12 +328,13 @@ class ServingEngine:
                                        req.prompt_len + len(req.generated)):
                     self.metrics.stalls += 1
                     snaps[slot] = self._slot_snapshot(slot)
-            self._dispatch(len(active))
             toks = jnp.asarray(self._last_tok)[:, :, None]   # (S, 1, 1)
             t0 = time.time()
-            logits, self._cache = jax.block_until_ready(self._decode(
-                self.params, toks, self._cache))
+            with self._dispatch_scope("decode"):
+                logits, self._cache = jax.block_until_ready(self._decode(
+                    self.params, toks, self._cache))
             dt = time.time() - t0
+            self._dispatch("decode")
             self._key, k = jax.random.split(self._key)
             sampled = np.asarray(sample_logits(
                 k, logits[:, 0, :], self.ecfg.temperature, self.ecfg.top_k))
@@ -337,8 +370,20 @@ class ServingEngine:
             pass
         return {r.rid: np.asarray(r.generated, np.int32) for r in requests}
 
+    def dispatch_stats(self) -> Dict[str, int]:
+        """Executed-GEMM dispatch telemetry (registry-backed)."""
+        backends: Dict[str, int] = {}
+        for scope in self.registry.scopes():
+            for b, c in self.registry.backends(scope).items():
+                backends[b] = backends.get(b, 0) + c
+        return {"gemm_plan_changes": self.plan_changes,
+                "gemm_sites_executed": len(self.gemm_plan),
+                "gemm_traced_scopes": len(self.registry.scopes()),
+                "gemm_pallas_sites": backends.get("pallas", 0),
+                "gemm_xla_sites": backends.get("xla", 0)}
+
     def summary(self) -> Dict[str, float]:
-        s = self.metrics.summary(self.dispatcher.cache_info())
-        s["gemm_plan_changes"] = self.plan_changes
+        s = self.metrics.summary(self.dispatcher.cache_info(),
+                                 dispatch=self.dispatch_stats())
         s["kv_peak_blocks"] = self.pool.peak_in_use
         return s

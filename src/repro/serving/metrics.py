@@ -1,5 +1,6 @@
 """Serving telemetry: TTFT, per-request latency percentiles, decode
-throughput, slot utilization, and SARA recommendation-cache hit rate.
+throughput, slot utilization, SARA recommendation-cache hit rate, and
+executed-GEMM dispatch stats (plan reconfigurations, sites per backend).
 
 All timestamps are whatever clock the engine passes in (wall seconds for
 live serving, virtual step time for simulated traces) — the math only needs
@@ -53,7 +54,8 @@ class ServingMetrics:
         self.slot_occupancy.append(active / slots if slots else 0.0)
 
     # -- summary --------------------------------------------------------------
-    def summary(self, sara_cache: Dict = None) -> Dict[str, float]:
+    def summary(self, sara_cache: Dict = None,
+                dispatch: Dict = None) -> Dict[str, float]:
         out = {
             "completed": self.completed,
             "decode_steps": self.decode_steps,
@@ -73,10 +75,12 @@ class ServingMetrics:
             total = hits + sara_cache.get("misses", 0)
             out["sara_cache_hit_rate"] = hits / total if total else 0.0
             out["sara_cache_size"] = sara_cache.get("size", 0)
+        if dispatch:
+            out.update(dispatch)        # executed-plan stats from the engine
         return out
 
-    def report(self, sara_cache: Dict = None) -> str:
-        s = self.summary(sara_cache)
+    def report(self, sara_cache: Dict = None, dispatch: Dict = None) -> str:
+        s = self.summary(sara_cache, dispatch)
         lines = [f"  {k:<22} {v:.4g}" if isinstance(v, float)
                  else f"  {k:<22} {v}" for k, v in s.items()]
         return "\n".join(lines)

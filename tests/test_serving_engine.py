@@ -217,6 +217,8 @@ def test_dispatcher_cache_is_per_instance_with_counters():
 
 
 def test_engine_routes_gemm_sites_through_sara():
+    """Every executed GEMM consults the engine's dispatcher at trace time
+    and the engine's gemm_plan is read back from the site registry."""
     cfg = _cfg()
     disp = SaraDispatcher()
     eng = ServingEngine(cfg, EngineConfig(
@@ -227,11 +229,39 @@ def test_engine_routes_gemm_sites_through_sara():
                      4) for i in range(3)])
     info = disp.cache_info()
     assert info["misses"] > 0                     # consulted on live shapes
-    assert info["hits"] > info["misses"]          # shape reuse hits the cache
-    assert "lm_head" in eng.gemm_plan             # plan covers the GEMM sites
-    from repro.serving.engine import gemm_sites
-    n_sites = len(gemm_sites(cfg, 1))
-    assert info["size"] > n_sites                 # distinct prefill/decode M
-    assert eng.plan_changes >= 1
+    assert info["hits"] > 0                       # shape reuse hits the cache
+    # plan is registry-backed: exactly the sites of an executed scope
+    scopes = eng.registry.scopes()
+    assert any(s.startswith("prefill:") for s in scopes) and \
+        "decode" in scopes, scopes
+    assert eng.gemm_plan == eng.registry.plan("decode")   # last step decoded
+    assert "unembed" in eng.gemm_plan
+    assert "layer.attn.q" in eng.gemm_plan
+    assert eng.plan_changes >= 1                  # at least one real reconfig
     s = eng.summary()
     assert 0.0 < s["sara_cache_hit_rate"] <= 1.0
+    assert s["gemm_sites_executed"] == len(eng.gemm_plan)
+    assert s["gemm_plan_changes"] == eng.plan_changes
+
+
+def test_engine_dispatch_plan_memoized_per_scope():
+    """Re-running an unchanged batch shape must not re-derive the plan —
+    the per-scope memo (keyed by the token-count-encoding scope name) is
+    the satellite replacement for the old per-step recommend sweep."""
+    cfg = _cfg()
+    eng = ServingEngine(cfg, EngineConfig(
+        num_slots=2, max_len=24, max_prefills_per_step=1, temperature=0.0))
+    rng = np.random.default_rng(4)
+    eng.run([Request(f"r{i}", rng.integers(0, cfg.vocab_size, 7).astype(np.int32),
+                     3) for i in range(2)])
+    memo = dict(eng._plan_memo)
+    assert set(memo) == set(eng.registry.scopes())
+    records_before = eng.registry.records
+    changes_before = eng.plan_changes
+    # same shapes again: jit traces are cached -> no new registry records,
+    # plans come from the memo, and plan_changes counts only real switches
+    eng.run([Request(f"s{i}", rng.integers(0, cfg.vocab_size, 7).astype(np.int32),
+                     3) for i in range(2)])
+    assert eng.registry.records == records_before
+    assert eng._plan_memo == memo
+    assert eng.plan_changes <= changes_before + 2   # prefill<->decode flips
