@@ -15,4 +15,11 @@ python -m repro.launch.serve --arch llama3.2-1b --smoke
 echo "== dispatch-parity smoke (xla vs pallas per-site plan) =="
 python -m benchmarks.bench_gemm_dispatch --smoke
 
+echo "== self-adaptive smoke (train -> save -> load -> serve adaptnet) =="
+ADAPTNET_SMOKE_DIR="$(mktemp -d)/adaptnet_ckpt"
+python -m repro.launch.train_adaptnet --samples 8000 --epochs 2 \
+    --buckets 64 --out "$ADAPTNET_SMOKE_DIR" --quiet
+python -m repro.launch.serve --arch llama3.2-1b --smoke \
+    --dispatcher adaptnet --adaptnet-ckpt "$ADAPTNET_SMOKE_DIR"
+
 echo "check.sh: all green"

@@ -6,6 +6,22 @@ classes.  The embedding tables dominate the on-chip footprint (paper
 footnote 1): 3 x 10001 x 16 at one byte/weight ~ 480 KB of the 512 KB
 ADAPTNETX SRAM.
 
+Two feature encodings (``AdaptNetConfig.encoding``):
+
+  "raw"        the paper's direct per-dim embedding lookup over
+               [0, 10^4].  Dims beyond the table silently clip, so every
+               dim > 10^4 aliases to one row — real serving sites like
+               lm_head (N = 128256..256000) are NOT representable.
+  "logbucket"  log-spaced bucket embedding over [1, max_dim] (default
+               2^18, covering every registry arch's vocab), concatenated
+               with per-dim continuous features (log2 magnitude + the
+               fractional position within 128/512/2048 alignment
+               periods, which is what the tile cost model's ceil()
+               quantization actually depends on).  This is the encoding
+               ADAPTNET-TPU serves with; params carry their
+               ``bucket_edges``/``dim_max`` so a loaded checkpoint is
+               self-describing.
+
 Trained with this repo's own substrate (optim.AdamW), not an external
 framework — the framework trains its own controller.
 """
@@ -27,6 +43,13 @@ EMBED_DIM = 16
 HIDDEN = 128
 VOCAB = MAX_DIM + 1
 
+# logbucket encoding: covers every registry arch's GEMM dims (gemma-2b
+# lm_head N = 256000 < 2^18); alignment periods mirror the tile space's
+# block granularities (BLOCK_MN up to 512, BLOCK_K up to 2048).
+MAX_DIM_SERVING = 1 << 18
+ALIGN_PERIODS = (128.0, 512.0, 2048.0)
+N_CONT = 1 + len(ALIGN_PERIODS)          # log2 magnitude + one per period
+
 
 @dataclass
 class AdaptNetConfig:
@@ -34,32 +57,100 @@ class AdaptNetConfig:
     embed_dim: int = EMBED_DIM
     hidden: int = HIDDEN
     vocab: int = VOCAB
+    encoding: str = "raw"                # "raw" | "logbucket"
+    num_buckets: int = 256               # logbucket table rows per feature
+    max_dim: int = MAX_DIM_SERVING       # logbucket coverage [1, max_dim]
 
 
 def init_params(key, cfg: AdaptNetConfig) -> Dict:
     k1, k2, k3, k4, k5 = jax.random.split(key, 5)
     e = cfg.embed_dim
-    return {
-        "emb_m": jax.random.normal(k1, (cfg.vocab, e)) * 0.02,
-        "emb_k": jax.random.normal(k2, (cfg.vocab, e)) * 0.02,
-        "emb_n": jax.random.normal(k3, (cfg.vocab, e)) * 0.02,
-        "w1": jax.random.normal(k4, (3 * e, cfg.hidden)) *
-              (1.0 / np.sqrt(3 * e)),
+    if cfg.encoding == "logbucket":
+        vocab = cfg.num_buckets
+        in_dim = 3 * e + 3 * N_CONT
+    elif cfg.encoding == "raw":
+        vocab = cfg.vocab
+        in_dim = 3 * e
+    else:
+        raise ValueError(f"unknown encoding {cfg.encoding!r}")
+    params = {
+        "emb_m": jax.random.normal(k1, (vocab, e)) * 0.02,
+        "emb_k": jax.random.normal(k2, (vocab, e)) * 0.02,
+        "emb_n": jax.random.normal(k3, (vocab, e)) * 0.02,
+        "w1": jax.random.normal(k4, (in_dim, cfg.hidden)) *
+              (1.0 / np.sqrt(in_dim)),
         "b1": jnp.zeros((cfg.hidden,)),
         "w2": jax.random.normal(k5, (cfg.hidden, cfg.num_classes)) *
               (1.0 / np.sqrt(cfg.hidden)),
         "b2": jnp.zeros((cfg.num_classes,)),
     }
+    if cfg.encoding == "logbucket":
+        # interior bucket boundaries + coverage bound ride inside the param
+        # pytree (zero gradient, zero weight decay) so a saved checkpoint
+        # is self-describing and the dispatcher can detect out-of-range
+        # shapes without side-channel config.
+        edges = np.geomspace(1.0, cfg.max_dim, cfg.num_buckets + 1)[1:-1]
+        params["bucket_edges"] = jnp.asarray(edges, jnp.float32)
+        params["dim_max"] = jnp.float32(cfg.max_dim)
+    return params
+
+
+def trained_max_dim(params: Dict) -> int:
+    """Largest dim the params' encoding can represent: the recorded
+    coverage bound for logbucket params, the embedding-table extent for
+    legacy raw params (beyond which lookups would alias)."""
+    if "dim_max" in params:
+        return int(np.asarray(params["dim_max"]))
+    return MAX_DIM
+
+
+def _encode_logbucket(params: Dict, feats: jnp.ndarray) -> jnp.ndarray:
+    f = feats.astype(jnp.float32)
+    idx = jnp.searchsorted(params["bucket_edges"], f, side="right")
+    m = params["emb_m"][idx[:, 0]]
+    k = params["emb_k"][idx[:, 1]]
+    n = params["emb_n"][idx[:, 2]]
+    logd = jnp.log2(jnp.maximum(f, 1.0)) / np.log2(float(MAX_DIM_SERVING))
+    cont = [logd] + [jnp.mod(f, p) / p for p in ALIGN_PERIODS]
+    return jnp.concatenate([m, k, n] + cont, axis=-1)
 
 
 def logits_fn(params: Dict, feats: jnp.ndarray) -> jnp.ndarray:
     """feats: (B, 3) int32 (M, K, N) -> (B, num_classes)."""
-    m = params["emb_m"][jnp.clip(feats[:, 0], 0, VOCAB - 1)]
-    k = params["emb_k"][jnp.clip(feats[:, 1], 0, VOCAB - 1)]
-    n = params["emb_n"][jnp.clip(feats[:, 2], 0, VOCAB - 1)]
-    h = jnp.concatenate([m, k, n], axis=-1)
+    if "bucket_edges" in params:
+        h = _encode_logbucket(params, feats)
+    else:
+        m = params["emb_m"][jnp.clip(feats[:, 0], 0, VOCAB - 1)]
+        k = params["emb_k"][jnp.clip(feats[:, 1], 0, VOCAB - 1)]
+        n = params["emb_n"][jnp.clip(feats[:, 2], 0, VOCAB - 1)]
+        h = jnp.concatenate([m, k, n], axis=-1)
     h = jax.nn.relu(h @ params["w1"] + params["b1"])
     return h @ params["w2"] + params["b2"]
+
+
+def logits_np(params: Dict, feats: np.ndarray) -> np.ndarray:
+    """Pure-NumPy twin of ``logits_fn`` for trace-time callers: the SARA
+    dispatcher resolves recommendations while an ambient jit/vmap trace
+    is active (the engine's prefill/decode), where jnp ops would either
+    stage into the executable or trip the transform machinery.  Same
+    math, host-side — like the oracle's cost-model sweep."""
+    p = {k: np.asarray(v) for k, v in params.items()}
+    f = np.asarray(feats)
+    if "bucket_edges" in p:
+        ff = f.astype(np.float32)
+        idx = np.searchsorted(p["bucket_edges"], ff, side="right")
+        emb = [p["emb_m"][idx[:, 0]], p["emb_k"][idx[:, 1]],
+               p["emb_n"][idx[:, 2]]]
+        logd = np.log2(np.maximum(ff, 1.0)) / np.log2(float(MAX_DIM_SERVING))
+        cont = [logd] + [np.mod(ff, per) / per for per in ALIGN_PERIODS]
+        h = np.concatenate(emb + cont, axis=-1, dtype=np.float32)
+    else:
+        h = np.concatenate([p["emb_m"][np.clip(f[:, 0], 0, VOCAB - 1)],
+                            p["emb_k"][np.clip(f[:, 1], 0, VOCAB - 1)],
+                            p["emb_n"][np.clip(f[:, 2], 0, VOCAB - 1)]],
+                           axis=-1)
+    h = np.maximum(h @ p["w1"] + p["b1"], 0.0)
+    return h @ p["w2"] + p["b2"]
 
 
 def predict(params: Dict, feats: np.ndarray, batch: int = 8192) -> np.ndarray:
@@ -80,8 +171,9 @@ class TrainResult:
 
 def train(train_ds: Dataset, test_ds: Dataset, *, epochs: int = 20,
           batch: int = 1024, lr: float = 3e-3, seed: int = 0,
-          log: bool = True) -> TrainResult:
-    cfg = AdaptNetConfig(num_classes=train_ds.num_classes)
+          log: bool = True, cfg: AdaptNetConfig = None) -> TrainResult:
+    if cfg is None:
+        cfg = AdaptNetConfig(num_classes=train_ds.num_classes)
     params = init_params(jax.random.PRNGKey(seed), cfg)
     n = len(train_ds.labels)
     steps_per_epoch = n // batch

@@ -47,14 +47,17 @@ class Dataset:
                 Dataset(self.features[te], self.labels[te], self.num_classes))
 
 
-def sample_workloads(n: int, *, dist: str = "loguniform", seed: int = 0
-                     ) -> np.ndarray:
+def sample_workloads(n: int, *, dist: str = "loguniform", seed: int = 0,
+                     max_dim: int = MAX_DIM) -> np.ndarray:
+    """``max_dim`` widens the sampled range beyond the paper's 10^4 (the
+    serving-realistic ADAPTNET-TPU trainer covers lm_head-scale dims up
+    to 2^18 — see launch/train_adaptnet.py)."""
     rng = np.random.default_rng(seed)
     if dist == "uniform":
-        dims = rng.integers(1, MAX_DIM + 1, size=(n, 3))
+        dims = rng.integers(1, max_dim + 1, size=(n, 3))
     elif dist == "loguniform":
-        dims = np.exp(rng.uniform(0.0, np.log(MAX_DIM), size=(n, 3)))
-        dims = np.clip(dims.astype(np.int64) + 1, 1, MAX_DIM)
+        dims = np.exp(rng.uniform(0.0, np.log(max_dim), size=(n, 3)))
+        dims = np.clip(dims.astype(np.int64) + 1, 1, max_dim)
     else:
         raise ValueError(dist)
     return dims.astype(np.int32)

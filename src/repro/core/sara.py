@@ -24,14 +24,27 @@ from __future__ import annotations
 
 import functools
 from dataclasses import dataclass, field
-from typing import Dict, Optional
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import tpu_costmodel as tcm
-from repro.core.adaptnet import AdaptNetConfig, init_params, logits_fn
+from repro.core.adaptnet import logits_np, trained_max_dim
+
+
+def load_adaptnet(directory: str) -> Tuple[Dict, dict]:
+    """Load a trained ADAPTNET-TPU artifact saved by
+    ``launch/train_adaptnet.py`` (checkpoint/manager.py layout); returns
+    (params, metadata).  The params dict is flat, so the checkpoint's
+    flat keys restore it directly."""
+    from repro.checkpoint.manager import CheckpointManager
+    _, flat, meta = CheckpointManager(directory).restore_flat()
+    # keep leaves host-side: the only consumers are the dispatcher's
+    # NumPy forward (logits_np) and trained_max_dim, so a cache miss
+    # stays a table lookup instead of a full-pytree device transfer
+    return {k: np.asarray(v) for k, v in flat.items()}, meta
 
 
 @dataclass
@@ -40,24 +53,119 @@ class SaraDispatcher:
     adaptnet_params: Optional[Dict] = None
     use_pallas: bool = False
     _cache: Dict = field(default_factory=dict)
+    _sources: Dict = field(default_factory=dict)
     _hits: int = 0
     _misses: int = 0
+    _n_adaptnet: int = 0
+    _n_oracle: int = 0
+    _n_fallback: int = 0
+
+    def __setattr__(self, name, value):
+        # flipping the recommendation source on a live dispatcher must not
+        # keep serving stale cached recommendations (or stale per-source
+        # counters — the telemetry restarts with the new source)
+        if (name in ("mode", "adaptnet_params")
+                and self.__dict__.get(name) is not value
+                and self.__dict__.get("_cache")):
+            self.cache_clear()
+        object.__setattr__(self, name, value)
+
+    @classmethod
+    def from_checkpoint(cls, directory: str, **kw) -> "SaraDispatcher":
+        """An adaptnet-mode dispatcher driven by a saved ADAPTNET-TPU."""
+        params, _ = load_adaptnet(directory)
+        return cls(mode="adaptnet", adaptnet_params=params, **kw)
 
     # -- recommendation ------------------------------------------------------
+    def _adaptnet_active(self) -> bool:
+        return self.mode == "adaptnet" and self.adaptnet_params is not None
+
+    def in_trained_range(self, M: int, K: int, N: int) -> bool:
+        """Whether the installed ADAPTNET can represent this shape.  Raw
+        legacy params clip (alias) every dim > 10^4, so those shapes must
+        go to the oracle; logbucket params record their coverage bound."""
+        if not self._adaptnet_active():
+            return False
+        return max(int(M), int(K), int(N)) <= trained_max_dim(
+            self.adaptnet_params)
+
+    def _oracle_cfg(self, M, K, N) -> tcm.TPUTileConfig:
+        return tcm.TILE_CONFIGS[int(tcm.best_tile_config(M, K, N))]
+
     def recommend(self, M: int, K: int, N: int) -> tcm.TPUTileConfig:
-        key = (M, K, N)
+        key = (int(M), int(K), int(N))
         if key in self._cache:
             self._hits += 1
             return self._cache[key]
         self._misses += 1
-        if self.mode == "adaptnet" and self.adaptnet_params is not None:
-            feats = jnp.array([[M, K, N]], jnp.int32)
-            cid = int(jnp.argmax(logits_fn(self.adaptnet_params, feats), -1)[0])
+        if self._adaptnet_active():
+            if self.in_trained_range(M, K, N):
+                # recommendations resolve at trace time, often inside an
+                # ambient jit/vmap trace (the engine's prefill/decode):
+                # the NumPy forward keeps the lookup host-side instead of
+                # staging it into the traced executable
+                cid = int(np.argmax(logits_np(
+                    self.adaptnet_params, np.array([key], np.int64)), -1)[0])
+                cfg, src = tcm.TILE_CONFIGS[cid], "adaptnet"
+            else:
+                # guaranteed fallback: shapes the net was never trained to
+                # represent get the exhaustive-search answer, not an
+                # arbitrary aliased embedding row
+                cfg, src = self._oracle_cfg(M, K, N), "oracle_fallback"
         else:
-            cid = int(tcm.best_tile_config(M, K, N))
-        cfg = tcm.TILE_CONFIGS[cid]
-        self._cache[key] = cfg
+            cfg, src = self._oracle_cfg(M, K, N), "oracle"
+        self._commit(key, cfg, src)
         return cfg
+
+    def recommend_batch(self, shapes: Sequence[Tuple[int, int, int]]
+                        ) -> List[tcm.TPUTileConfig]:
+        """Batch recommendation: one ADAPTNET forward for every uncached
+        in-range shape, one vectorized oracle sweep for the rest — the O(1)
+        runtime path the paper's hardware ADAPTNETX provides."""
+        keys = [(int(M), int(K), int(N)) for M, K, N in shapes]
+        out: List[Optional[tcm.TPUTileConfig]] = [None] * len(keys)
+        net_idx, orc_idx = [], []
+        seen = set()
+        for i, key in enumerate(keys):
+            if key in self._cache:
+                self._hits += 1
+                out[i] = self._cache[key]
+                continue
+            if key in seen:            # in-batch duplicate: the first
+                self._hits += 1        # occurrence decides it (same
+                continue               # bookkeeping as the scalar path)
+            self._misses += 1
+            seen.add(key)
+            (net_idx if self.in_trained_range(*key) else orc_idx).append(i)
+        if net_idx:
+            feats = np.asarray([keys[i] for i in net_idx], np.int64)
+            cids = np.argmax(logits_np(self.adaptnet_params, feats), -1)
+            for i, cid in zip(net_idx, cids):
+                self._commit(keys[i], tcm.TILE_CONFIGS[int(cid)], "adaptnet")
+        if orc_idx:
+            ms, ks, ns = zip(*(keys[i] for i in orc_idx))
+            src = ("oracle_fallback" if self._adaptnet_active() else "oracle")
+            cids = np.atleast_1d(tcm.best_tile_config(
+                np.asarray(ms), np.asarray(ks), np.asarray(ns)))
+            for i, cid in zip(orc_idx, cids):
+                self._commit(keys[i], tcm.TILE_CONFIGS[int(cid)], src)
+        return [out[i] if out[i] is not None else self._cache[keys[i]]
+                for i in range(len(keys))]
+
+    def _commit(self, key, cfg: tcm.TPUTileConfig, src: str) -> None:
+        self._cache[key] = cfg
+        self._sources[key] = src
+        if src == "adaptnet":
+            self._n_adaptnet += 1
+        elif src == "oracle_fallback":
+            self._n_fallback += 1
+        else:
+            self._n_oracle += 1
+
+    def source_of(self, M: int, K: int, N: int) -> str:
+        """Provenance of a cached recommendation: "adaptnet", "oracle", or
+        "oracle_fallback" (adaptnet mode, shape outside the trained range)."""
+        return self._sources.get((int(M), int(K), int(N)), "oracle")
 
     def cache_info(self) -> Dict[str, int]:
         """Recommendation-cache statistics (the serving engine reports the
@@ -66,9 +174,16 @@ class SaraDispatcher:
         return {"hits": self._hits, "misses": self._misses,
                 "size": len(self._cache)}
 
+    def source_info(self) -> Dict[str, int]:
+        """How many distinct shapes each recommendation source decided."""
+        return {"adaptnet": self._n_adaptnet, "oracle": self._n_oracle,
+                "oracle_fallback": self._n_fallback}
+
     def cache_clear(self) -> None:
         self._cache.clear()
+        self._sources.clear()
         self._hits = self._misses = 0
+        self._n_adaptnet = self._n_oracle = self._n_fallback = 0
 
     def recommend_sharding(self, M: int, K: int, N: int,
                            data: int = 16, model: int = 16) -> tcm.ShardPlan:

@@ -83,6 +83,13 @@ def _resolved_tile(policy, m: int, k: int, n: int):
     return cfg, _clamped_blocks(cfg, m, k, n) + (cfg.mode,)
 
 
+def _rec_source(policy, m: int, k: int, n: int) -> str:
+    """Provenance of the recommendation just resolved ("oracle" for
+    dispatchers that don't track sources, e.g. test fixtures)."""
+    src = getattr(policy.dispatcher, "source_of", None)
+    return src(m, k, n) if src is not None else "oracle"
+
+
 def _shard_plan_name(policy, M: int, K: int, N: int
                      ) -> Tuple[str, Optional[object]]:
     """Mesh-level recommendation: ("", None) when meshless, else
@@ -127,7 +134,7 @@ def gemm(x: jnp.ndarray, w: jnp.ndarray, *, site: str = "dense",
     shard_name, shard_plan = _shard_plan_name(policy, M, K, N)
     if policy.registry is not None:
         policy.registry.record(site, M, K, N, cfg, *tile, exec_backend,
-                               shard_name)
+                               shard_name, _rec_source(policy, M, K, N))
 
     if exec_backend == "pallas":
         # the gradient GEMMs carry their own recommendations: dx is an
@@ -164,7 +171,7 @@ def _gemm_experts(x, w, site: str, exec_backend: str, policy):
     shard_name, _ = _shard_plan_name(policy, M, K, N)
     if policy.registry is not None:
         policy.registry.record(site, M, K, N, cfg, *tile, exec_backend,
-                               shard_name)
+                               shard_name, _rec_source(policy, M, K, N))
 
     if exec_backend == "pallas":
         _, dx_tile = _resolved_tile(policy, M, N, K)

@@ -33,10 +33,18 @@ class SiteRecord:
     mode: int
     backend: str               # "pallas" | "xla"
     shard_plan: str = ""       # mesh-level plan name ("" when meshless)
+    source: str = "oracle"     # "oracle" | "adaptnet" | "oracle_fallback"
+
+    def executed(self) -> Tuple[int, int, int, int]:
+        """The tile configuration this site actually ran with (clamped
+        blocks + residency mode) — the thing plan-agreement compares."""
+        return (self.block_m, self.block_n, self.block_k, self.mode)
 
     def describe(self) -> str:
         s = (f"bm={self.block_m} bn={self.block_n} bk={self.block_k} "
              f"{DATAFLOW_NAMES[self.mode]} @{self.backend}")
+        if self.source != "oracle":
+            s += f" src={self.source}"
         if self.shard_plan:
             s += f" shard={self.shard_plan}"
         return s
@@ -65,9 +73,10 @@ class SiteRegistry:
     # -- recording (called by dispatch.gemm at trace time) -------------------
     def record(self, site: str, m: int, k: int, n: int, cfg: TPUTileConfig,
                block_m: int, block_n: int, block_k: int, mode: int,
-               backend: str, shard_plan: str = "") -> SiteRecord:
+               backend: str, shard_plan: str = "",
+               source: str = "oracle") -> SiteRecord:
         rec = SiteRecord(site, m, k, n, cfg, block_m, block_n, block_k,
-                         mode, backend, shard_plan)
+                         mode, backend, shard_plan, source)
         scope = self._scopes.setdefault(self.current_scope(), {})
         key = site
         if key in scope and (scope[key].m, scope[key].k, scope[key].n) != \
@@ -98,6 +107,14 @@ class SiteRegistry:
         for rec in self._scopes.get(scope or self.current_scope(),
                                     {}).values():
             out[rec.backend] = out.get(rec.backend, 0) + 1
+        return out
+
+    def sources(self, scope: Optional[str] = None) -> Dict[str, int]:
+        """Recommendation provenance per executed site of a scope."""
+        out: Dict[str, int] = {}
+        for rec in self._scopes.get(scope or self.current_scope(),
+                                    {}).values():
+            out[rec.source] = out.get(rec.source, 0) + 1
         return out
 
     def clear(self) -> None:

@@ -103,12 +103,17 @@ def serve_continuous(arch: str = "llama3.2-1b", preset: str = "reduced",
                      prompt_len: int = 32, gen: int = 32,
                      temperature: float = 0.8, top_k: int = 40,
                      seed: int = 0, execute: str = "auto",
+                     dispatcher: str = "oracle",
+                     adaptnet_ckpt: str = None,
                      override_cfg=None, log: bool = True):
     """Serve a request set through the continuous-batching engine.
 
     ``execute`` selects the GEMM backend every model site runs through
     the SARA dispatch layer with: "pallas" (RSA kernel), "xla", or
-    "auto" (compiled Pallas on TPU, XLA elsewhere).
+    "auto" (compiled Pallas on TPU, XLA elsewhere).  ``dispatcher``
+    selects the recommendation source: "oracle" (analytic search) or
+    "adaptnet" (trained ADAPTNET-TPU loaded from ``adaptnet_ckpt`` —
+    the self-adaptive path, with oracle fallback out of trained range).
     """
     from repro.configs.registry import get_arch
     from repro.serving import EngineConfig, Request, ServingEngine
@@ -121,7 +126,8 @@ def serve_continuous(arch: str = "llama3.2-1b", preset: str = "reduced",
         num_slots=num_slots, max_len=prompt_len + gen + 1,
         temperature=temperature, top_k=top_k, seed=seed,
         src_len=prompt_len if cfg.family == "encdec" else 0,
-        execute=execute))
+        execute=execute, dispatcher_mode=dispatcher,
+        adaptnet_dir=adaptnet_ckpt))
     reqs = []
     for i in range(num_requests):
         p = rng.integers(0, cfg.vocab_size, prompt_len).astype(np.int32)
@@ -158,6 +164,11 @@ def main():
     ap.add_argument("--execute", default="auto",
                     choices=["auto", "pallas", "xla"],
                     help="GEMM backend for the dispatch layer")
+    ap.add_argument("--dispatcher", default="oracle",
+                    choices=["oracle", "adaptnet"],
+                    help="recommendation source for every GEMM site")
+    ap.add_argument("--adaptnet-ckpt", default=None,
+                    help="trained ADAPTNET-TPU dir (launch.train_adaptnet)")
     ap.add_argument("--waves", type=int, default=0,
                     help=">0: run the legacy wave-based path instead")
     ap.add_argument("--smoke", action="store_true",
@@ -166,7 +177,8 @@ def main():
     if a.smoke:
         outputs, engine = serve_continuous(
             arch=a.arch, num_requests=3, num_slots=2, prompt_len=12, gen=6,
-            temperature=0.0, execute=a.execute)
+            temperature=0.0, execute=a.execute, dispatcher=a.dispatcher,
+            adaptnet_ckpt=a.adaptnet_ckpt)
         assert all(len(v) == 6 for v in outputs.values()), outputs
         engine.pool.check()
         assert engine.pool.num_free == engine.pool.num_blocks
@@ -174,6 +186,13 @@ def main():
         assert engine.gemm_plan and "unembed" in engine.gemm_plan, \
             engine.gemm_plan
         assert engine.registry.scopes(), "no dispatch scopes traced"
+        if a.dispatcher == "adaptnet":
+            # the learned model (not the oracle) must have driven dispatch
+            assert engine.dispatcher.mode == "adaptnet"
+            src = engine.dispatcher.source_info()
+            assert src["adaptnet"] > 0 or src["oracle_fallback"] > 0, src
+            print(f"serving smoke OK (adaptnet: {src})")
+            return
         print("serving smoke OK")
         return
     if a.waves > 0:
@@ -184,7 +203,8 @@ def main():
     serve_continuous(arch=a.arch, preset=a.preset, num_requests=a.requests,
                      num_slots=a.slots, prompt_len=a.prompt_len, gen=a.gen,
                      temperature=a.temperature, top_k=a.top_k,
-                     execute=a.execute)
+                     execute=a.execute, dispatcher=a.dispatcher,
+                     adaptnet_ckpt=a.adaptnet_ckpt)
 
 
 if __name__ == "__main__":

@@ -23,6 +23,11 @@ Execution model
   counts real reconfigurations (steps whose executed plan differs from
   the previous step's).  ``SaraDispatcher.cache_info()`` feeds the
   recommendation-cache hit rate into the metrics.
+* ``EngineConfig.dispatcher_mode`` selects the recommendation source:
+  ``"oracle"`` (exhaustive analytic search) or ``"adaptnet"`` (a trained
+  ADAPTNET-TPU loaded from ``adaptnet_dir`` — the paper's self-adaptive
+  runtime path; shapes outside its trained range fall back to the
+  oracle, and per-source site counts land in ``dispatch_stats()``).
 * The ``KVBlockPool`` meters admission over *text* tokens (the vlm
   frontend adds a constant per-slot overhead outside the budget).
   ``reserve="full"`` can never stall; ``reserve="incremental"`` packs
@@ -123,6 +128,8 @@ class EngineConfig:
     clock: str = "steps"              # "steps" | "wall"
     src_len: int = 0                  # encdec: shared encoder length
     execute: str = "auto"             # GEMM backend: "pallas"|"xla"|"auto"
+    dispatcher_mode: str = "oracle"   # recommendation source: "oracle"|"adaptnet"
+    adaptnet_dir: Optional[str] = None  # trained ADAPTNET-TPU checkpoint dir
 
 
 class ServingEngine:
@@ -135,7 +142,8 @@ class ServingEngine:
         self.model = build_model(cfg)
         self.params = params if params is not None \
             else self.model.init(jax.random.PRNGKey(self.ecfg.seed))
-        self.dispatcher = dispatcher or SaraDispatcher()
+        self.dispatcher = dispatcher if dispatcher is not None \
+            else self._build_dispatcher(self.ecfg)
         self.metrics = ServingMetrics()
 
         e = self.ecfg
@@ -170,6 +178,20 @@ class ServingEngine:
         self.gemm_plan: Dict[str, str] = {}
         self.plan_changes = 0
         self._plan_memo: Dict[str, Dict[str, str]] = {}
+
+    @staticmethod
+    def _build_dispatcher(ecfg: EngineConfig) -> SaraDispatcher:
+        if ecfg.dispatcher_mode == "adaptnet":
+            if not ecfg.adaptnet_dir:
+                raise ValueError(
+                    "dispatcher_mode='adaptnet' needs adaptnet_dir: a "
+                    "checkpoint saved by `python -m repro.launch."
+                    "train_adaptnet --out <dir>`")
+            return SaraDispatcher.from_checkpoint(ecfg.adaptnet_dir)
+        if ecfg.dispatcher_mode != "oracle":
+            raise ValueError(f"unknown dispatcher_mode "
+                             f"{ecfg.dispatcher_mode!r}")
+        return SaraDispatcher()
 
     # -- time -----------------------------------------------------------------
     def now(self) -> float:
@@ -294,13 +316,14 @@ class ServingEngine:
     def _preempt_newest(self) -> None:
         """Every lane is stalled: preempt the newest request so the rest can
         make progress.  Its blocks free immediately; it re-enters the queue
-        head and re-prefills prompt+generated at the next admission."""
+        head and re-prefills prompt+generated at the next admission.
+        ``sched.preempt`` (not ``retire``) keeps the request's lifecycle
+        fields clean: no ``t_done`` is stamped until it actually finishes."""
         victim = max(self.sched.active.values(), key=lambda r: r.t_admit)
         slot = victim.slot
-        self.sched.retire(victim, self.now())
-        victim.stalled = False
+        self.sched.preempt(victim)
+        self.metrics.preemptions += 1
         self._last_tok[slot, 0] = 0
-        self.sched.waiting.appendleft(victim)
 
     # -- main loop ------------------------------------------------------------
     def step(self) -> bool:
@@ -373,14 +396,20 @@ class ServingEngine:
     def dispatch_stats(self) -> Dict[str, int]:
         """Executed-GEMM dispatch telemetry (registry-backed)."""
         backends: Dict[str, int] = {}
+        sources: Dict[str, int] = {}
         for scope in self.registry.scopes():
             for b, c in self.registry.backends(scope).items():
                 backends[b] = backends.get(b, 0) + c
+            for s, c in self.registry.sources(scope).items():
+                sources[s] = sources.get(s, 0) + c
         return {"gemm_plan_changes": self.plan_changes,
                 "gemm_sites_executed": len(self.gemm_plan),
                 "gemm_traced_scopes": len(self.registry.scopes()),
                 "gemm_pallas_sites": backends.get("pallas", 0),
-                "gemm_xla_sites": backends.get("xla", 0)}
+                "gemm_xla_sites": backends.get("xla", 0),
+                "rec_adaptnet_sites": sources.get("adaptnet", 0),
+                "rec_oracle_sites": sources.get("oracle", 0),
+                "rec_fallback_sites": sources.get("oracle_fallback", 0)}
 
     def summary(self) -> Dict[str, float]:
         s = self.metrics.summary(self.dispatcher.cache_info(),

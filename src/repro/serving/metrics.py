@@ -32,6 +32,7 @@ class ServingMetrics:
     slot_occupancy: List[float] = field(default_factory=list)  # active/slots per step
     completed: int = 0
     stalls: int = 0
+    preemptions: int = 0
 
     # -- recording ------------------------------------------------------------
     def on_first_token(self, arrival: float, t: float) -> None:
@@ -69,6 +70,7 @@ class ServingMetrics:
             "slot_utilization": (float(np.mean(self.slot_occupancy))
                                  if self.slot_occupancy else 0.0),
             "stalls": self.stalls,
+            "preemptions": self.preemptions,
         }
         if sara_cache:
             hits = sara_cache.get("hits", 0)

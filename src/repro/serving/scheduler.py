@@ -146,3 +146,19 @@ class ContinuousScheduler:
         self._free_slots.append(req.slot)
         req.t_done = now
         req.slot = -1
+
+    # -- preemption -----------------------------------------------------------
+    def preempt(self, req: Request) -> None:
+        """Evict an admitted-but-unfinished request: free its slot and KV
+        blocks and requeue it at the head (recompute-on-readmit).  Unlike
+        ``retire`` this resets the lifecycle fields admission/stalling
+        stamped — a preempted request is NOT done, so ``t_done`` must stay
+        unset until a real retirement records it (metrics would otherwise
+        inherit a stale completion time)."""
+        del self.active[req.slot]
+        self.pool.free(req.rid)
+        self._free_slots.append(req.slot)
+        req.slot = -1
+        req.stalled = False
+        req.t_done = -1.0
+        self.waiting.appendleft(req)

@@ -65,3 +65,51 @@ def test_training_monotone_improvement(trained):
     first = trained.history[0][2]
     last = trained.history[-1][2]
     assert last > first
+
+
+# ---------------------------------------------------------------------------
+# feature encodings
+# ---------------------------------------------------------------------------
+
+def test_logbucket_encoding_resolves_dims_raw_aliases():
+    """Raw encoding clips every dim > 10^4 to one embedding row (16384 and
+    262144 become indistinguishable — the lm_head aliasing bug); logbucket
+    keeps them apart and records its coverage bound in the params."""
+    import jax
+
+    raw = A.init_params(jax.random.PRNGKey(0),
+                        A.AdaptNetConfig(num_classes=12))
+    lb = A.init_params(jax.random.PRNGKey(0), A.AdaptNetConfig(
+        num_classes=12, encoding="logbucket"))
+    f1 = np.array([[64, 2048, 16384]], np.int64)
+    f2 = np.array([[64, 2048, 262144]], np.int64)
+    assert np.allclose(A.logits_np(raw, f1), A.logits_np(raw, f2))
+    assert not np.allclose(A.logits_np(lb, f1), A.logits_np(lb, f2))
+    assert A.trained_max_dim(raw) == 10_000
+    assert A.trained_max_dim(lb) == A.MAX_DIM_SERVING
+
+
+def test_logits_np_matches_logits_fn():
+    """The dispatcher's trace-time NumPy forward is the same function as
+    the jax training forward, for both encodings."""
+    import jax
+
+    feats = np.array([[1, 64, 128], [16, 2048, 8192], [37, 9000, 10000]],
+                     np.int32)
+    for kw in ({}, {"encoding": "logbucket", "num_buckets": 64}):
+        params = A.init_params(jax.random.PRNGKey(1),
+                               A.AdaptNetConfig(num_classes=7, **kw))
+        np.testing.assert_allclose(
+            A.logits_np(params, feats),
+            np.asarray(A.logits_fn(params, feats)), rtol=1e-5, atol=1e-5)
+
+
+def test_logbucket_trains_on_serving_range():
+    """A small logbucket run must learn shapes far beyond 10^4 — the
+    serving trainer's full-scale numbers live in
+    benchmarks/bench_adaptnet_serving."""
+    from repro.launch.train_adaptnet import train_serving_adaptnet
+    params, info = train_serving_adaptnet(30_000, 6, seed=5, log=False)
+    assert info["accuracy"] >= 0.6
+    assert "bucket_edges" in params
+    assert int(np.asarray(params["dim_max"])) == A.MAX_DIM_SERVING

@@ -1,0 +1,130 @@
+"""End-to-end self-adaptive serving: a trained ADAPTNET-TPU drives the
+engine's dispatch layer.
+
+- train (tiny) -> save (checkpoint/manager layout) -> load through
+  ``EngineConfig(dispatcher_mode="adaptnet", adaptnet_dir=...)`` -> serve
+- every GEMM site the oracle engine executes also executes under the
+  adaptnet dispatcher (same scopes, same sites)
+- on trained-range shapes the executed plan agrees with the oracle
+- shapes outside the trained range (here: the unembed N=512 column with
+  a max_dim=256 recommender) fall back to the oracle path explicitly
+"""
+
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_arch
+from repro.core import tpu_costmodel as tcm
+from repro.core.sara import SaraDispatcher
+from repro.launch.train_adaptnet import save_adaptnet, train_serving_adaptnet
+from repro.serving import EngineConfig, Request, ServingEngine
+
+TRAINED_MAX_DIM = 256        # unembed (N=512) lands outside on purpose
+N_REQS, PROMPT, GEN = 3, 7, 4
+
+
+def _cfg():
+    return get_arch("llama3.2-1b").reduced()
+
+
+def _requests(cfg, seed=3):
+    rng = np.random.default_rng(seed)
+    return [Request(f"r{i}", rng.integers(0, cfg.vocab_size,
+                                          PROMPT).astype(np.int32), GEN)
+            for i in range(N_REQS)]
+
+
+def _run_engine(cfg, **engine_kw):
+    eng = ServingEngine(cfg, EngineConfig(
+        num_slots=2, max_len=24, max_prefills_per_step=2, temperature=0.0,
+        **engine_kw))
+    outputs = eng.run(_requests(cfg))
+    return eng, outputs
+
+
+def _records(eng):
+    return {(scope, name): rec
+            for scope in eng.registry.scopes()
+            for name, rec in eng.registry.sites(scope).items()}
+
+
+@pytest.fixture(scope="module")
+def oracle_run():
+    return _run_engine(_cfg())
+
+
+@pytest.fixture(scope="module")
+def adaptnet_ckpt(oracle_run, tmp_path_factory):
+    """Train on the oracle probe's executed shapes (the serving-realistic
+    distribution for THIS engine) and persist the artifact."""
+    eng, _ = oracle_run
+    shapes = sorted({(r.m, r.k, r.n) for r in _records(eng).values()})
+    params, info = train_serving_adaptnet(
+        12_000, 8, shapes=shapes, max_dim=TRAINED_MAX_DIM, num_buckets=64,
+        site_frac=0.9, seed=0, log=False)
+    out = str(tmp_path_factory.mktemp("adaptnet") / "ckpt")
+    save_adaptnet(out, params, info)
+    return out
+
+
+@pytest.fixture(scope="module")
+def adaptnet_run(adaptnet_ckpt):
+    return _run_engine(_cfg(), dispatcher_mode="adaptnet",
+                       adaptnet_dir=adaptnet_ckpt)
+
+
+def test_engine_builds_dispatcher_from_checkpoint(adaptnet_run):
+    eng, _ = adaptnet_run
+    assert eng.dispatcher.mode == "adaptnet"
+    assert eng.dispatcher.adaptnet_params is not None
+    assert "bucket_edges" in eng.dispatcher.adaptnet_params
+
+
+def test_adaptnet_mode_requires_checkpoint_dir():
+    with pytest.raises(ValueError, match="adaptnet_dir"):
+        ServingEngine(_cfg(), EngineConfig(dispatcher_mode="adaptnet"))
+
+
+def test_every_oracle_site_executes_under_adaptnet(oracle_run, adaptnet_run):
+    o_eng, o_out = oracle_run
+    a_eng, a_out = adaptnet_run
+    o_recs, a_recs = _records(o_eng), _records(a_eng)
+    assert set(a_recs) == set(o_recs) and a_recs
+    assert any(s == "decode" for s, _ in a_recs)
+    assert any(s.startswith("prefill:") for s, _ in a_recs)
+    # greedy outputs are dispatcher-independent (same math, different tiles)
+    for rid in o_out:
+        np.testing.assert_array_equal(a_out[rid], o_out[rid])
+
+
+def test_trained_range_shapes_agree_with_oracle(oracle_run, adaptnet_run):
+    o_recs = _records(oracle_run[0])
+    a_recs = _records(adaptnet_run[0])
+    net_keys = [k for k, r in a_recs.items() if r.source == "adaptnet"]
+    assert net_keys, "no site was decided by the learned model"
+    agree = sum(a_recs[k].executed() == o_recs[k].executed()
+                for k in net_keys)
+    assert agree / len(net_keys) >= 0.9, (agree, len(net_keys))
+    # plan quality: analytic tile cost within 2% of the oracle's choice
+    ratios = []
+    for k in net_keys:
+        a, o = a_recs[k], o_recs[k]
+        cost = tcm.tile_cost_seconds([a.m], [a.k], [a.n])[0]
+        ratios.append(cost[a.cfg.class_id] / cost[o.cfg.class_id])
+    assert float(np.exp(np.mean(np.log(ratios)))) <= 1.02
+
+
+def test_out_of_range_shapes_fall_back_to_oracle(oracle_run, adaptnet_run):
+    o_recs = _records(oracle_run[0])
+    a_eng = adaptnet_run[0]
+    a_recs = _records(a_eng)
+    oob = [k for k, r in a_recs.items()
+           if max(r.m, r.k, r.n) > TRAINED_MAX_DIM]
+    assert oob, "expected the unembed column to exceed the trained range"
+    for k in oob:
+        assert a_recs[k].source == "oracle_fallback", (k, a_recs[k])
+        assert a_recs[k].executed() == o_recs[k].executed()
+    assert a_eng.dispatcher.source_info()["oracle_fallback"] > 0
+    s = a_eng.summary()
+    assert s["rec_fallback_sites"] == len(oob)
+    assert s["rec_adaptnet_sites"] > 0

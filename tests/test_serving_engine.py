@@ -202,6 +202,74 @@ def test_incremental_reserve_completes_under_tight_budget():
 
 
 # ---------------------------------------------------------------------------
+# preemption lifecycle
+# ---------------------------------------------------------------------------
+
+def test_scheduler_preempt_resets_lifecycle_fields():
+    """Regression: preemption used to route through ``retire``, stamping
+    ``t_done`` on a request that is NOT done; the stale value survived
+    until (if ever) re-admission."""
+    pool = KVBlockPool(num_blocks=8, block_size=4)
+    sched = ContinuousScheduler(num_slots=2, pool=pool,
+                                reserve="incremental")
+    req = Request("a", np.zeros(4, np.int32), 8, arrival_time=0.0)
+    sched.submit(req)
+    assert sched.plan(0.0).prefills == [req]
+    req.stalled = True
+    req.generated = [1, 2]
+
+    sched.preempt(req)
+    assert req.t_done == -1.0                  # not done -> no done stamp
+    assert not req.stalled and req.slot == -1
+    assert sched.waiting[0] is req and not sched.active
+    assert pool.num_free == pool.num_blocks    # blocks freed immediately
+
+    # readmit -> retire records the real completion time
+    assert sched.plan(5.0).prefills == [req]
+    assert req.t_admit == 5.0
+    sched.retire(req, 9.0)
+    assert req.t_done == 9.0
+
+
+def test_engine_preempt_readmit_retire_metrics():
+    """Drive the engine into a full stall (every lane blocked on the KV
+    pool) so it preempts; the victim must carry clean lifecycle fields
+    until its real retirement, and the final metrics must account every
+    request exactly once."""
+    cfg = _cfg()
+    eng = ServingEngine(cfg, EngineConfig(
+        num_slots=2, max_len=40, block_size=4, num_blocks=6,
+        reserve="incremental", max_prefills_per_step=2, temperature=0.0))
+
+    observed = []
+    orig = eng._preempt_newest
+
+    def spy():
+        orig()
+        victim = eng.sched.waiting[0]
+        observed.append((victim.rid, victim.t_done, victim.stalled))
+    eng._preempt_newest = spy
+
+    rng = np.random.default_rng(7)
+    reqs = [Request(f"r{i}", rng.integers(0, cfg.vocab_size, 8)
+                    .astype(np.int32), 12) for i in range(2)]
+    res = eng.run(reqs)
+
+    assert eng.metrics.preemptions >= 1 and observed
+    for _, t_done, stalled in observed:
+        assert t_done == -1.0 and not stalled   # preempted != done
+    assert all(len(res[r.rid]) == 12 for r in reqs)
+    assert eng.metrics.completed == 2
+    assert len(eng.metrics.latency) == 2        # one retirement per request
+    for r in reqs:
+        assert 0 <= r.t_first_token <= r.t_done
+        assert r.t_done - r.arrival_time in eng.metrics.latency
+    assert eng.metrics.summary()["preemptions"] == eng.metrics.preemptions
+    eng.pool.check()
+    assert eng.pool.num_free == eng.pool.num_blocks
+
+
+# ---------------------------------------------------------------------------
 # SARA dispatch integration
 # ---------------------------------------------------------------------------
 
