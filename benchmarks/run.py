@@ -9,10 +9,11 @@ import time
 def main() -> None:
     t0 = time.time()
     from benchmarks import (bench_adaptnet_serving, bench_gemm_dispatch,
-                            bench_kernels, bench_sara_tpu, bench_serving,
-                            fig3_motivation, fig7_classifiers, fig8_adaptnet,
-                            fig9_adaptnetx, fig11_workloads, fig12_histograms,
-                            fig13_ppa, fig14_sigma, tab2_bandwidth)
+                            bench_kernels, bench_paged_decode, bench_sara_tpu,
+                            bench_serving, fig3_motivation, fig7_classifiers,
+                            fig8_adaptnet, fig9_adaptnetx, fig11_workloads,
+                            fig12_histograms, fig13_ppa, fig14_sigma,
+                            tab2_bandwidth)
     print("name,value,derived")
     fig3_motivation.run()
     tab2_bandwidth.run()
@@ -27,6 +28,7 @@ def main() -> None:
     bench_gemm_dispatch.run()
     bench_sara_tpu.run()
     bench_serving.run()
+    bench_paged_decode.run()
     bench_adaptnet_serving.run()
     print(f"# benchmarks done in {time.time() - t0:.0f}s")
 

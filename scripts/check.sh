@@ -15,6 +15,9 @@ python -m repro.launch.serve --arch llama3.2-1b --smoke
 echo "== dispatch-parity smoke (xla vs pallas per-site plan) =="
 python -m benchmarks.bench_gemm_dispatch --smoke
 
+echo "== paged-decode smoke (paged KV engine == dense decode logits) =="
+python -m benchmarks.bench_paged_decode --smoke
+
 echo "== self-adaptive smoke (train -> save -> load -> serve adaptnet) =="
 ADAPTNET_SMOKE_DIR="$(mktemp -d)/adaptnet_ckpt"
 python -m repro.launch.train_adaptnet --samples 8000 --epochs 2 \

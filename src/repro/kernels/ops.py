@@ -105,6 +105,66 @@ def linear_attn(r, k, v, logw, u, *, chunk: int = 64,
     return o[:, :S]
 
 
+def default_paged_impl() -> str:
+    """Compiled Pallas paged kernel on TPU; jitted XLA gather elsewhere
+    (mirrors dispatch ``execute="auto"`` — interpret-mode Pallas in the
+    per-step decode hot loop would be pure Python overhead off-TPU)."""
+    return "pallas" if jax.default_backend() == "tpu" else "xla"
+
+
+def _paged_impl(impl: Optional[str]) -> str:
+    return default_paged_impl() if impl is None else impl
+
+
+@functools.partial(jax.jit, static_argnames=("logit_cap", "impl",
+                                             "interpret"))
+def paged_attention(q, k_arena, v_arena, tables, lengths, *,
+                    logit_cap: float = 0.0,
+                    impl: Optional[str] = None,
+                    interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Paged flash-decode (GQA/MQA): each lane attends only to the KV pages
+    its block table names.
+
+    q: (S, H, hd) one query token per lane; k_arena: (NB, bs, KVH, hd);
+    v_arena: (NB, bs, KVH, hd_v); tables: (S, W) int32 physical block ids
+    in logical order (tail-pad with the last live id); lengths: (S,) int32.
+    Returns (S, H, hd_v); lanes with length 0 yield zeros.
+    """
+    S, H, hd = q.shape
+    KVH = k_arena.shape[2]
+    scale = 1.0 / (hd ** 0.5)
+    if _paged_impl(impl) == "xla":
+        from repro.kernels.ref import paged_attention_ref
+        return paged_attention_ref(q, k_arena, v_arena, tables, lengths,
+                                   scale=scale, logit_cap=logit_cap)
+    from repro.kernels.paged_attn import paged_gqa_decode_pallas
+    qg = q.reshape(S, KVH, H // KVH, hd)
+    o = paged_gqa_decode_pallas(qg, k_arena, v_arena, tables, lengths,
+                                scale, _interpret(interpret),
+                                logit_cap=logit_cap)
+    return o.reshape(S, H, v_arena.shape[-1])
+
+
+@functools.partial(jax.jit, static_argnames=("qk_dim", "impl", "interpret"))
+def mla_paged_attention(q_abs, q_rope, ckv_arena, krope_arena, tables,
+                        lengths, *, qk_dim: int,
+                        impl: Optional[str] = None,
+                        interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Paged flash-decode for absorbed MLA: attend in the compressed latent
+    space through the block table; ``qk_dim`` is the full per-head query-key
+    dim (nope + rope) setting the softmax scale.  Returns o_lat (S, H, r).
+    """
+    scale = 1.0 / (qk_dim ** 0.5)
+    if _paged_impl(impl) == "xla":
+        from repro.kernels.ref import paged_mla_attention_ref
+        return paged_mla_attention_ref(q_abs, q_rope, ckv_arena, krope_arena,
+                                       tables, lengths, scale=scale)
+    from repro.kernels.paged_attn import paged_mla_decode_pallas
+    return paged_mla_decode_pallas(q_abs, q_rope, ckv_arena, krope_arena,
+                                   tables, lengths, scale,
+                                   _interpret(interpret))
+
+
 @functools.partial(jax.custom_vjp, nondiff_argnums=(6, 7))
 def wkv_attention(r, k, v, logw, u, state0, chunk: int = 64,
                   interpret: Optional[bool] = None):

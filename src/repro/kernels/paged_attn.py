@@ -1,0 +1,208 @@
+"""Paged flash-decode Pallas kernels (GQA + absorbed-MLA).
+
+Decode-side analogue of kernels/flash_attn.py for a *physically paged* KV
+cache: K/V live in a block arena ``(num_blocks, block_size, ...)`` shared by
+every decode lane, and each lane reads only the pages its block table names.
+The masked-dense decode path (models/attention.py) streams ``num_slots *
+max_len`` KV rows per step regardless of how many tokens are actually live;
+here the split-K grid walks a lane's block table, so per-step traffic is
+``sum_lane ceil(kv_len / block_size) * block_size`` rows — decode cost
+scales with live tokens, not slot capacity (the SARA size-to-the-workload
+argument applied to the serving hot path).
+
+Grid layout: ``(lanes, kv_heads, table_width)`` (GQA) / ``(lanes,
+table_width)`` (MLA), table width innermost.  The block table and per-lane
+lengths ride in scalar prefetch (PrefetchScalarGridSpec) so the K/V
+BlockSpec index maps resolve ``table[lane, j]`` before the body runs —
+that indirection IS the paging.  Per (lane, head) the (m, l, acc) online
+softmax state lives in VMEM scratch, reset at ``j == 0`` and emitted on the
+last table column.  Callers pad dead table columns with the lane's last
+live block id: Pallas elides the DMA when consecutive grid steps map to
+the same block, and ``pl.when`` skips the compute, so padded columns cost
+(almost) nothing.
+
+Absorbed MLA attends in the compressed latent space: queries arrive
+pre-absorbed (q @ W_UK) plus the shared-rope query, the arena stores
+(c_kv, k_rope) rows, and the output is the latent mix ``p @ c_kv`` — the
+caller applies W_UV/W_O outside (models/attention.py::mla_paged_decode).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# jax<0.5 ships the class as TPUCompilerParams; newer as CompilerParams
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or \
+    pltpu.TPUCompilerParams
+
+NEG = -1e30
+
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+
+def _gqa_kernel(tables, lengths, q_ref, k_ref, v_ref, o_ref,
+                m_scr, l_scr, acc_scr, *, bs, n_bt, scale, logit_cap):
+    lane = pl.program_id(0)
+    j = pl.program_id(2)
+    kv_len = lengths[lane]
+
+    @pl.when(j == 0)
+    def _reset():
+        m_scr[...] = jnp.full_like(m_scr, NEG)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    @pl.when(j * bs < kv_len)
+    def _accumulate():
+        q = q_ref[0, 0]                                    # (G, hd)
+        k = k_ref[0, :, 0, :]                              # (bs, hd)
+        v = v_ref[0, :, 0, :]                              # (bs, hd_v)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if logit_cap > 0.0:
+            s = jnp.tanh(s / logit_cap) * logit_cap
+        col = j * bs + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(col < kv_len, s, NEG)
+        m_prev, l_prev = m_scr[0], l_scr[0]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        acc_scr[...] = acc_scr[...] * corr[:, None] + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[0] = m_new
+        l_scr[0] = l_prev * corr + jnp.sum(p, axis=-1)
+
+    @pl.when(j == n_bt - 1)
+    def _emit():
+        # empty lanes (kv_len == 0) never accumulate: l == 0 -> zeros out
+        l = jnp.maximum(l_scr[0], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def paged_gqa_decode_pallas(q, k_arena, v_arena, tables, lengths,
+                            scale: float, interpret: bool,
+                            logit_cap: float = 0.0) -> jnp.ndarray:
+    """q: (S, KVH, G, hd); k_arena: (NB, bs, KVH, hd); v_arena:
+    (NB, bs, KVH, hd_v); tables: (S, W) int32 physical block ids in logical
+    order (tail-pad with the last live id); lengths: (S,) int32 valid
+    tokens.  Returns (S, KVH, G, hd_v)."""
+    S, KVH, G, hd = q.shape
+    NB, bs = k_arena.shape[0], k_arena.shape[1]
+    hd_v = v_arena.shape[-1]
+    W = tables.shape[1]
+
+    grid = (S, KVH, W)
+    out = pl.pallas_call(
+        functools.partial(_gqa_kernel, bs=bs, n_bt=W, scale=scale,
+                          logit_cap=logit_cap),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, G, hd),
+                             lambda s, h, j, t, ln: (s, h, 0, 0)),
+                pl.BlockSpec((1, bs, 1, hd),
+                             lambda s, h, j, t, ln: (t[s, j], 0, h, 0)),
+                pl.BlockSpec((1, bs, 1, hd_v),
+                             lambda s, h, j, t, ln: (t[s, j], 0, h, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, G, hd_v),
+                                   lambda s, h, j, t, ln: (s, h, 0, 0)),
+            scratch_shapes=[pltpu.VMEM((1, G), jnp.float32),
+                            pltpu.VMEM((1, G), jnp.float32),
+                            pltpu.VMEM((G, hd_v), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((S, KVH, G, hd_v), q.dtype),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(tables, lengths, q, k_arena, v_arena)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# absorbed MLA (latent-space attention; shared keys across heads)
+# ---------------------------------------------------------------------------
+
+def _mla_kernel(tables, lengths, qa_ref, qr_ref, ckv_ref, krope_ref, o_ref,
+                m_scr, l_scr, acc_scr, *, bs, n_bt, scale):
+    lane = pl.program_id(0)
+    j = pl.program_id(1)
+    kv_len = lengths[lane]
+
+    @pl.when(j == 0)
+    def _reset():
+        m_scr[...] = jnp.full_like(m_scr, NEG)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    @pl.when(j * bs < kv_len)
+    def _accumulate():
+        qa = qa_ref[0]                                     # (H, r)
+        qr = qr_ref[0]                                     # (H, rd)
+        ckv = ckv_ref[0]                                   # (bs, r)
+        krope = krope_ref[0]                               # (bs, rd)
+        s = (jax.lax.dot_general(qa, ckv, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32) +
+             jax.lax.dot_general(qr, krope, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)) * scale
+        col = j * bs + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(col < kv_len, s, NEG)
+        m_prev, l_prev = m_scr[0], l_scr[0]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        acc_scr[...] = acc_scr[...] * corr[:, None] + jax.lax.dot_general(
+            p.astype(ckv.dtype), ckv, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[0] = m_new
+        l_scr[0] = l_prev * corr + jnp.sum(p, axis=-1)
+
+    @pl.when(j == n_bt - 1)
+    def _emit():
+        l = jnp.maximum(l_scr[0], 1e-30)
+        o_ref[0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def paged_mla_decode_pallas(q_abs, q_rope, ckv_arena, krope_arena, tables,
+                            lengths, scale: float,
+                            interpret: bool) -> jnp.ndarray:
+    """q_abs: (S, H, r) pre-absorbed queries; q_rope: (S, H, rd); ckv_arena:
+    (NB, bs, r); krope_arena: (NB, bs, rd); tables: (S, W) int32; lengths:
+    (S,) int32.  Returns the latent mix o_lat: (S, H, r)."""
+    S, H, r = q_abs.shape
+    rd = q_rope.shape[-1]
+    NB, bs = ckv_arena.shape[0], ckv_arena.shape[1]
+    W = tables.shape[1]
+
+    grid = (S, W)
+    out = pl.pallas_call(
+        functools.partial(_mla_kernel, bs=bs, n_bt=W, scale=scale),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, H, r), lambda s, j, t, ln: (s, 0, 0)),
+                pl.BlockSpec((1, H, rd), lambda s, j, t, ln: (s, 0, 0)),
+                pl.BlockSpec((1, bs, r), lambda s, j, t, ln: (t[s, j], 0, 0)),
+                pl.BlockSpec((1, bs, rd), lambda s, j, t, ln: (t[s, j], 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, H, r), lambda s, j, t, ln: (s, 0, 0)),
+            scratch_shapes=[pltpu.VMEM((1, H), jnp.float32),
+                            pltpu.VMEM((1, H), jnp.float32),
+                            pltpu.VMEM((H, r), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((S, H, r), q_abs.dtype),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(tables, lengths, q_abs, q_rope, ckv_arena, krope_arena)
+    return out

@@ -42,6 +42,60 @@ def flash_attention_ref(q, k, v, *, causal: bool = True,
     return o.reshape(B, Sq, H, vf.shape[-1]).astype(q.dtype)
 
 
+def paged_gather(arena: jnp.ndarray, tables: jnp.ndarray) -> jnp.ndarray:
+    """Linearize paged KV: arena (NB, bs, *feat) gathered through per-lane
+    block tables (S, W) -> logical rows (S, W*bs, *feat)."""
+    g = arena[tables]                     # (S, W, bs, *feat)
+    return g.reshape((g.shape[0], g.shape[1] * g.shape[2]) + g.shape[3:])
+
+
+def paged_attention_ref(q, k_arena, v_arena, tables, lengths,
+                        *, scale: float | None = None,
+                        logit_cap: float = 0.0) -> jnp.ndarray:
+    """Masked-dense decode attention over gathered pages (f32 softmax).
+
+    q: (S, H, hd) one query token per lane; k_arena: (NB, bs, KVH, hd);
+    v_arena: (NB, bs, KVH, hd_v); tables: (S, W) int32; lengths: (S,) int32.
+    Returns (S, H, hd_v); empty lanes (length 0) yield zeros.
+    """
+    S, H, hd = q.shape
+    KVH = k_arena.shape[2]
+    G = H // KVH
+    if scale is None:
+        scale = 1.0 / (hd ** 0.5)
+    k = paged_gather(k_arena, tables).astype(jnp.float32)   # (S, L, KVH, hd)
+    v = paged_gather(v_arena, tables).astype(jnp.float32)
+    qf = q.astype(jnp.float32).reshape(S, KVH, G, hd)
+    s = jnp.einsum("shgd,slhd->shgl", qf, k) * scale
+    if logit_cap > 0.0:
+        s = jnp.tanh(s / logit_cap) * logit_cap
+    mask = jnp.arange(k.shape[1])[None, :] < lengths[:, None]   # (S, L)
+    s = jnp.where(mask[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("shgl,slhd->shgd", p, v)
+    o = jnp.where((lengths > 0)[:, None, None, None], o, 0.0)
+    return o.reshape(S, H, v.shape[-1]).astype(q.dtype)
+
+
+def paged_mla_attention_ref(q_abs, q_rope, ckv_arena, krope_arena, tables,
+                            lengths, *, scale: float) -> jnp.ndarray:
+    """Absorbed-MLA decode over gathered latent pages.
+
+    q_abs: (S, H, r); q_rope: (S, H, rd); ckv_arena: (NB, bs, r);
+    krope_arena: (NB, bs, rd).  Returns the latent mix o_lat (S, H, r).
+    """
+    ckv = paged_gather(ckv_arena, tables).astype(jnp.float32)   # (S, L, r)
+    krope = paged_gather(krope_arena, tables).astype(jnp.float32)
+    s = (jnp.einsum("shr,slr->shl", q_abs.astype(jnp.float32), ckv) +
+         jnp.einsum("shd,sld->shl", q_rope.astype(jnp.float32), krope)) * scale
+    mask = jnp.arange(ckv.shape[1])[None, :] < lengths[:, None]
+    s = jnp.where(mask[:, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("shl,slr->shr", p, ckv)
+    o = jnp.where((lengths > 0)[:, None, None], o, 0.0)
+    return o.astype(q_abs.dtype)
+
+
 def linear_attn_ref(r, k, v, logw, u) -> jnp.ndarray:
     """Exact sequential recurrence (the definition, O(S) steps).
 

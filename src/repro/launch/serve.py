@@ -104,7 +104,7 @@ def serve_continuous(arch: str = "llama3.2-1b", preset: str = "reduced",
                      temperature: float = 0.8, top_k: int = 40,
                      seed: int = 0, execute: str = "auto",
                      dispatcher: str = "oracle",
-                     adaptnet_ckpt: str = None,
+                     adaptnet_ckpt: str = None, kv_layout: str = "auto",
                      override_cfg=None, log: bool = True):
     """Serve a request set through the continuous-batching engine.
 
@@ -114,6 +114,10 @@ def serve_continuous(arch: str = "llama3.2-1b", preset: str = "reduced",
     selects the recommendation source: "oracle" (analytic search) or
     "adaptnet" (trained ADAPTNET-TPU loaded from ``adaptnet_ckpt`` —
     the self-adaptive path, with oracle fallback out of trained range).
+    ``kv_layout`` selects the decode KV storage: "paged" (physical page
+    arena + paged flash-decode kernel), "dense" (stacked per-slot caches),
+    or "auto" (paged for attention families on TPU; dense elsewhere and
+    for recurrent-state families).
     """
     from repro.configs.registry import get_arch
     from repro.serving import EngineConfig, Request, ServingEngine
@@ -127,7 +131,7 @@ def serve_continuous(arch: str = "llama3.2-1b", preset: str = "reduced",
         temperature=temperature, top_k=top_k, seed=seed,
         src_len=prompt_len if cfg.family == "encdec" else 0,
         execute=execute, dispatcher_mode=dispatcher,
-        adaptnet_dir=adaptnet_ckpt))
+        adaptnet_dir=adaptnet_ckpt, kv_layout=kv_layout))
     reqs = []
     for i in range(num_requests):
         p = rng.integers(0, cfg.vocab_size, prompt_len).astype(np.int32)
@@ -142,7 +146,8 @@ def serve_continuous(arch: str = "llama3.2-1b", preset: str = "reduced",
     if log:
         total = sum(len(v) for v in outputs.values())
         print(f"served {len(reqs)} requests / {total} tokens "
-              f"in {time.time() - t0:.2f}s on {num_slots} slots")
+              f"in {time.time() - t0:.2f}s on {num_slots} slots "
+              f"(kv_layout={engine.kv_layout})")
         print(engine.metrics.report(engine.dispatcher.cache_info(),
                                     engine.dispatch_stats()))
         print("  executed gemm plan (last step):")
@@ -169,6 +174,9 @@ def main():
                     help="recommendation source for every GEMM site")
     ap.add_argument("--adaptnet-ckpt", default=None,
                     help="trained ADAPTNET-TPU dir (launch.train_adaptnet)")
+    ap.add_argument("--kv-layout", default="auto",
+                    choices=["auto", "paged", "dense"],
+                    help="decode KV storage: paged arena or dense slots")
     ap.add_argument("--waves", type=int, default=0,
                     help=">0: run the legacy wave-based path instead")
     ap.add_argument("--smoke", action="store_true",
@@ -178,7 +186,7 @@ def main():
         outputs, engine = serve_continuous(
             arch=a.arch, num_requests=3, num_slots=2, prompt_len=12, gen=6,
             temperature=0.0, execute=a.execute, dispatcher=a.dispatcher,
-            adaptnet_ckpt=a.adaptnet_ckpt)
+            adaptnet_ckpt=a.adaptnet_ckpt, kv_layout=a.kv_layout)
         assert all(len(v) == 6 for v in outputs.values()), outputs
         engine.pool.check()
         assert engine.pool.num_free == engine.pool.num_blocks
@@ -204,7 +212,7 @@ def main():
                      num_slots=a.slots, prompt_len=a.prompt_len, gen=a.gen,
                      temperature=a.temperature, top_k=a.top_k,
                      execute=a.execute, dispatcher=a.dispatcher,
-                     adaptnet_ckpt=a.adaptnet_ckpt)
+                     adaptnet_ckpt=a.adaptnet_ckpt, kv_layout=a.kv_layout)
 
 
 if __name__ == "__main__":

@@ -52,6 +52,22 @@ class Model:
     def decode_step(self, params, tokens, cache):
         return serving.decode_step(params, tokens, self.cfg, cache)
 
+    # ---- paged serving (physical KV arena; serving/kv_pool.py) ------------
+    def init_paged_arena(self, num_blocks: int, block_size: int):
+        return serving.init_paged_arena(self.cfg, num_blocks, block_size)
+
+    def init_paged_state(self, num_slots: int, src_len: int = 0):
+        return serving.init_paged_state(self.cfg, num_slots, src_len)
+
+    def paged_prefill_write(self, arena, layers_cache, block_ids):
+        return serving.paged_prefill_write(arena, layers_cache, block_ids)
+
+    def paged_decode_step(self, params, tokens, state, arena, block_tables,
+                          kv_lens, write_mask):
+        return serving.paged_decode_step(params, tokens, self.cfg, state,
+                                         arena, block_tables, kv_lens,
+                                         write_mask)
+
 
 def build_model(cfg: ArchConfig) -> Model:
     return Model(cfg)

@@ -356,6 +356,101 @@ def init_gqa_cache(cfg: ArchConfig, batch: int, max_len: int, dtype) -> KVCache:
 
 
 # ---------------------------------------------------------------------------
+# paged decode (physically paged KV arena; kernels/paged_attn.py)
+# ---------------------------------------------------------------------------
+
+def _paged_write_rows(tables, lengths, write_mask, block_size: int,
+                      num_blocks: int):
+    """Flat arena row each lane's new token writes to.  Masked lanes (stalled
+    or empty slots) land in row 0 of the trash block — the arena's trailing
+    block, never pool-allocated — so a lane without capacity this step
+    cannot corrupt live pages (clamped gather keeps the masked lane's table
+    lookup in bounds)."""
+    S = lengths.shape[0]
+    blk = tables[jnp.arange(S), lengths // block_size]
+    rows = blk * block_size + lengths % block_size
+    return jnp.where(write_mask > 0, rows, (num_blocks - 1) * block_size)
+
+
+def _arena_write(arena: jnp.ndarray, rows: jnp.ndarray, new: jnp.ndarray):
+    """Scatter one new row per lane into the flattened (NB*bs) arena."""
+    NB, bs = arena.shape[0], arena.shape[1]
+    flat = arena.reshape((NB * bs,) + arena.shape[2:])
+    flat = flat.at[rows].set(new.astype(arena.dtype))
+    return flat.reshape(arena.shape)
+
+
+def gqa_paged_decode(params: Params, x: jnp.ndarray, positions: jnp.ndarray,
+                     cfg: ArchConfig, *, k_arena, v_arena, block_tables,
+                     kv_lens, write_mask):
+    """One-token batched decode through the paged KV arena.
+
+    x: (S, 1, d) — one pending token per lane; positions: (S, 1);
+    k_arena/v_arena: (NB, bs, KVH, hd) physical pages (trailing block is the
+    write-discard scratch); block_tables: (S, W) int32 pages in logical
+    order; kv_lens: (S,) tokens already in the arena; write_mask: (S,) int32
+    — 1 writes the new token's KV and attends over kv_len+1 tokens, 0
+    leaves the arena unchanged (the lane's output is discarded by the
+    engine).  Returns (out (S, 1, d), new_k_arena, new_v_arena).
+    """
+    cdt = jnp.dtype(cfg.compute_dtype)
+    q, k, v = _proj_qkv(params, x, x, cfg, cdt)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+
+    from repro.kernels import ops as kops
+    NB, bs = k_arena.shape[0], k_arena.shape[1]
+    rows = _paged_write_rows(block_tables, kv_lens, write_mask, bs, NB)
+    k_arena = _arena_write(k_arena, rows, k[:, 0])
+    v_arena = _arena_write(v_arena, rows, v[:, 0])
+    attn_len = kv_lens + (write_mask > 0).astype(kv_lens.dtype)
+    o = kops.paged_attention(q[:, 0], k_arena, v_arena, block_tables,
+                             attn_len, logit_cap=cfg.attn_logit_softcap)
+    S = x.shape[0]
+    out = hint(o.reshape(S, 1, cfg.q_dim), "B", None, "M")
+    out = hint(dense(out, params["wo"], None, cdt, site="layer.attn.out"),
+               "B", None, None)
+    return out, k_arena, v_arena
+
+
+def mla_paged_decode(params: Params, x: jnp.ndarray, positions: jnp.ndarray,
+                     cfg: ArchConfig, *, ckv_arena, krope_arena, block_tables,
+                     kv_lens, write_mask):
+    """Absorbed-MLA batched decode through the paged latent arena.
+
+    The arena stores the compressed (c_kv, k_rope) rows only (the same
+    ~70 KB/token layout as the dense absorbed path); queries are absorbed
+    through W_UK before the kernel and the latent mix goes through W_UV/W_O
+    after.  Shapes as in :func:`gqa_paged_decode` with ckv_arena
+    (NB, bs, kv_lora_rank) and krope_arena (NB, bs, qk_rope_head_dim).
+    """
+    m = cfg.mla
+    cdt = jnp.dtype(cfg.compute_dtype)
+    S = x.shape[0]
+    H = cfg.num_heads
+    q_nope, q_rope = _mla_q(params, x, positions, cfg, cdt)    # (S,1,H,*)
+    c_kv, k_rope = _mla_ckv(params, x, positions, cfg, cdt)    # (S,1,r/rd)
+
+    from repro.kernels import ops as kops
+    NB, bs = ckv_arena.shape[0], ckv_arena.shape[1]
+    rows = _paged_write_rows(block_tables, kv_lens, write_mask, bs, NB)
+    ckv_arena = _arena_write(ckv_arena, rows, c_kv[:, 0])
+    krope_arena = _arena_write(krope_arena, rows, k_rope[:, 0])
+
+    w_uk = params["w_uk"].reshape(m.kv_lora_rank, H, m.qk_nope_head_dim)
+    q_abs = jnp.einsum("bshd,rhd->bshr", q_nope, w_uk.astype(cdt))[:, 0]
+    attn_len = kv_lens + (write_mask > 0).astype(kv_lens.dtype)
+    o_lat = kops.mla_paged_attention(
+        q_abs, q_rope[:, 0], ckv_arena, krope_arena, block_tables, attn_len,
+        qk_dim=m.qk_nope_head_dim + m.qk_rope_head_dim)       # (S, H, r)
+    w_uv = params["w_uv"].reshape(m.kv_lora_rank, H, m.v_head_dim)
+    out = jnp.einsum("shr,rhd->shd", o_lat.astype(cdt), w_uv.astype(cdt))
+    out = out.reshape(S, 1, H * m.v_head_dim)
+    out = dense(out, params["wo"], None, cdt, site="layer.mla.out")
+    return out, ckv_arena, krope_arena
+
+
+# ---------------------------------------------------------------------------
 # MLA (DeepSeek-V3 multi-head latent attention)
 # ---------------------------------------------------------------------------
 

@@ -27,10 +27,17 @@ from repro.models.attention import (KVCache, cross_attention_kv,
 from repro.models.transformer import (_embed, _frontend_embed, _maybe_remat,
                                       _scan_mamba_span, _unembed_weight,
                                       decoder_layer_apply, hybrid_layout,
-                                      Params)
+                                      paged_decoder_layer_apply, Params)
 from repro.models.modules import dense, rmsnorm
 
 Cache = Dict[str, Any]
+
+# Families whose decode KV can live in the physically paged arena: a single
+# homogeneous self-attention stack per step.  encdec pages its self-attn KV
+# only (the fixed-length cross K/V stays dense per slot); ssm/hybrid keep
+# the dense slot layout — their recurrent state is O(1) in sequence length,
+# so there is nothing to page.
+PAGED_FAMILIES = ("dense", "moe", "vlm", "encdec")
 
 
 def _stack_cache(proto, n: int):
@@ -77,6 +84,130 @@ def init_cache(cfg: ArchConfig, batch: int, max_len: int,
     else:
         raise ValueError(fam)
     return cache
+
+
+# ---------------------------------------------------------------------------
+# paged KV arena (physical pages; consumed by paged_decode_step)
+# ---------------------------------------------------------------------------
+
+def init_paged_arena(cfg: ArchConfig, num_blocks: int,
+                     block_size: int) -> Dict[str, Any]:
+    """Per-layer physical KV pages for the attention stack.
+
+    Leaves are ``(num_layers, num_blocks, block_size, *feat)``: ``k``/``v``
+    rows for GQA, the compressed ``(c_kv, k_rope)`` latent rows for MLA
+    (mirroring the dense KVCache's k/v slots).  The caller decides how many
+    blocks to allocate; the serving engine passes pool blocks + 1 and uses
+    the trailing block as write-discard scratch for masked lanes.
+    """
+    if cfg.family not in PAGED_FAMILIES:
+        raise ValueError(f"family {cfg.family!r} has no paged KV arena")
+    dt = jnp.dtype(cfg.compute_dtype)
+    L = cfg.num_layers
+    if cfg.attention_type == "mla":
+        m = cfg.mla
+        return {"k": jnp.zeros((L, num_blocks, block_size, m.kv_lora_rank),
+                               dt),
+                "v": jnp.zeros((L, num_blocks, block_size,
+                                m.qk_rope_head_dim), dt)}
+    shape = (L, num_blocks, block_size, cfg.num_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+
+
+def init_paged_state(cfg: ArchConfig, num_slots: int,
+                     src_len: int = 0) -> Dict[str, Any]:
+    """Slot-stacked per-lane state that stays dense under the paged layout
+    (currently only the encdec cross-attention K/V; positions are implied
+    by the per-lane kv_lens the engine tracks)."""
+    st: Dict[str, Any] = {}
+    if cfg.family == "encdec":
+        dt = jnp.dtype(cfg.compute_dtype)
+        shape = (cfg.num_layers, num_slots, src_len, cfg.num_kv_heads,
+                 cfg.head_dim)
+        st["cross_k"] = jnp.zeros(shape, dt)
+        st["cross_v"] = jnp.zeros(shape, dt)
+    return st
+
+
+def paged_prefill_write(arena: Dict[str, Any], layers_cache: KVCache,
+                        block_ids: jnp.ndarray) -> Dict[str, Any]:
+    """Commit a freshly prefilled batch=1 dense cache into arena pages.
+
+    ``block_ids``: (nblk,) int32 physical pages in logical order.  The copy
+    happens at bucket granularity — the first ``nblk * block_size`` rows of
+    the dense cache are reshaped into pages and scattered, so the padded-
+    bucket prefill itself is untouched; rows past the true length are
+    bucket padding that decode masks (and overwrites as tokens arrive).
+    """
+    nblk = block_ids.shape[0]
+
+    def put(leaf, dense_leaf):
+        bs = leaf.shape[2]
+        rows = dense_leaf[:, 0, :nblk * bs]
+        rows = rows.reshape((dense_leaf.shape[0], nblk, bs) +
+                            dense_leaf.shape[3:])
+        return leaf.at[:, block_ids].set(rows.astype(leaf.dtype))
+
+    return {"k": put(arena["k"], layers_cache.k),
+            "v": put(arena["v"], layers_cache.v)}
+
+
+def paged_decode_step(params: Params, tokens: jnp.ndarray, cfg: ArchConfig,
+                      state: Dict[str, Any], arena: Dict[str, Any],
+                      block_tables: jnp.ndarray, kv_lens: jnp.ndarray,
+                      write_mask: jnp.ndarray
+                      ) -> Tuple[jnp.ndarray, Dict[str, Any]]:
+    """One batched decode step over every lane through the paged KV arena.
+
+    tokens: (S, 1) int32 — one pending token per lane; block_tables:
+    (S, W) int32; kv_lens: (S,) rows already committed per lane (this IS
+    each lane's position — vlm frontend rows included); write_mask: (S,)
+    int32 — lanes with 0 (stalled / empty slots) leave the arena untouched
+    and their logits are discarded by the caller, so there is nothing to
+    snapshot or roll back.  Returns ((S, V) logits, new arena).
+    """
+    fam = cfg.family
+    if fam not in PAGED_FAMILIES:
+        raise ValueError(f"family {fam!r} cannot decode through the paged "
+                         "arena (recurrent state keeps the dense layout)")
+    x = _embed(params, tokens, cfg)
+    positions = kv_lens[:, None]
+    wm = write_mask.astype(jnp.int32)
+
+    def body(h, xs):
+        if fam == "encdec":
+            layer_p, ak, av, ck, cv = xs
+            enc_kv = (ck, cv)
+        else:
+            layer_p, ak, av = xs
+            enc_kv = None
+        h, nk, nv = paged_decoder_layer_apply(
+            layer_p, h, positions, cfg, k_arena=ak, v_arena=av,
+            block_tables=block_tables, kv_lens=kv_lens, write_mask=wm,
+            enc_kv=enc_kv)
+        return h, (nk, nv)
+
+    body = _maybe_remat(body, cfg)
+    if fam == "encdec":
+        x, (nk, nv) = jax.lax.scan(
+            body, x, (params["layers"], arena["k"], arena["v"],
+                      state["cross_k"], state["cross_v"]))
+    elif "dense_layers" in params:
+        # leading dense stack (deepseek-v3): split the layer axis
+        nd = jax.tree_util.tree_leaves(params["dense_layers"])[0].shape[0]
+        x, (hk, hv) = jax.lax.scan(
+            body, x, (params["dense_layers"], arena["k"][:nd],
+                      arena["v"][:nd]))
+        x, (tk, tv) = jax.lax.scan(
+            body, x, (params["layers"], arena["k"][nd:], arena["v"][nd:]))
+        nk = jnp.concatenate([hk, tk], axis=0)
+        nv = jnp.concatenate([hv, tv], axis=0)
+    else:
+        x, (nk, nv) = jax.lax.scan(
+            body, x, (params["layers"], arena["k"], arena["v"]))
+
+    x = rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    return _lm_head(params, x[:, -1, :], cfg), {"k": nk, "v": nv}
 
 
 # ---------------------------------------------------------------------------

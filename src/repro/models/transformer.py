@@ -104,6 +104,39 @@ def decoder_layer_apply(p: Params, x, positions, cfg: ArchConfig, *,
     return x, new_cache, aux
 
 
+def paged_decoder_layer_apply(p: Params, x, positions, cfg: ArchConfig, *,
+                              k_arena, v_arena, block_tables, kv_lens,
+                              write_mask, enc_kv=None):
+    """One decoder layer's batched single-token decode through the paged KV
+    arena (mirrors :func:`decoder_layer_apply`; see
+    models/attention.py::gqa_paged_decode for the arena contract).
+    Returns (x, new_k_arena, new_v_arena)."""
+    from repro.models.attention import gqa_paged_decode, mla_paged_decode
+
+    h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+    paged = dict(block_tables=block_tables, kv_lens=kv_lens,
+                 write_mask=write_mask)
+    if cfg.attention_type == "mla":
+        a, nk, nv = mla_paged_decode(p["attn"], h, positions, cfg,
+                                     ckv_arena=k_arena, krope_arena=v_arena,
+                                     **paged)
+    else:
+        a, nk, nv = gqa_paged_decode(p["attn"], h, positions, cfg,
+                                     k_arena=k_arena, v_arena=v_arena,
+                                     **paged)
+    x = x + a.astype(x.dtype)
+    if enc_kv is not None:
+        hc = rmsnorm(x, p["ln_cross"], cfg.norm_eps)
+        x = x + gqa_cross_attention(p["cross"], hc, enc_kv, cfg).astype(x.dtype)
+    h2 = rmsnorm(x, p["ln2"], cfg.norm_eps)
+    if "moe" in p:
+        f, _ = moe_apply(p["moe"], h2, cfg)
+    else:
+        f = mlp_apply(p["mlp"], h2, cfg)
+    x = x + f.astype(x.dtype)
+    return x, nk, nv
+
+
 # ---------------------------------------------------------------------------
 # model init
 # ---------------------------------------------------------------------------

@@ -2,18 +2,22 @@
 serving of shape-diverse traffic — the serving-side analogue of the paper's
 utilization argument).
 
-  kv_pool    paged KV-cache block pool: fixed-size blocks, per-request block
-             tables, alloc/extend/free/defrag, admission accounting
+  kv_pool    paged KV-cache block pool + the physical page arena (KVArena)
+             it meters: fixed-size blocks, per-request block tables,
+             alloc/extend/free, defrag that compacts storage in place
   scheduler  request queue + continuous batching into fixed decode slots
-  engine     ServingEngine: jitted bucketed prefill + vmapped slot decode,
-             every GEMM site routed through SaraDispatcher.recommend
-  metrics    TTFT / latency percentiles / tokens-per-second / slot utilization
+  engine     ServingEngine: jitted bucketed prefill + paged flash-decode
+             through per-slot block tables (dense vmapped decode for
+             recurrent-state families), every GEMM site routed through
+             the SARA dispatch layer
+  metrics    TTFT / latency percentiles / tokens-per-second / slot
+             utilization / KV rows streamed per decode step
 """
 
 from repro.serving.engine import EngineConfig, ServingEngine, sample_logits
-from repro.serving.kv_pool import KVBlockPool
+from repro.serving.kv_pool import KVArena, KVBlockPool
 from repro.serving.metrics import ServingMetrics
 from repro.serving.scheduler import ContinuousScheduler, Request
 
-__all__ = ["EngineConfig", "ServingEngine", "sample_logits", "KVBlockPool",
-           "ServingMetrics", "ContinuousScheduler", "Request"]
+__all__ = ["EngineConfig", "ServingEngine", "sample_logits", "KVArena",
+           "KVBlockPool", "ServingMetrics", "ContinuousScheduler", "Request"]

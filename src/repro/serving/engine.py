@@ -28,13 +28,33 @@ Execution model
   ADAPTNET-TPU loaded from ``adaptnet_dir`` — the paper's self-adaptive
   runtime path; shapes outside its trained range fall back to the
   oracle, and per-source site counts land in ``dispatch_stats()``).
-* The ``KVBlockPool`` meters admission over *text* tokens (the vlm
-  frontend adds a constant per-slot overhead outside the budget).
-  ``reserve="full"`` can never stall; ``reserve="incremental"`` packs
-  denser: a lane whose block-table extension fails is rolled back to its
-  pre-step cache and stalls until blocks free up, and if every lane stalls
-  the newest request is preempted (recompute-on-readmit: it re-enters the
-  queue and re-prefills prompt+generated at its next admission).
+* KV layout (``EngineConfig.kv_layout``): under ``"paged"`` (what
+  ``"auto"`` picks for attention families on TPU) each layer's K/V rows
+  live in a physical page arena ``(layers, num_blocks + 1, block_size,
+  ...)`` bound to the ``KVBlockPool``; decode runs ONE batched ``paged_decode_step`` over all
+  lanes that reads K/V through per-slot block tables
+  (``kernels/paged_attn.py``), so per-step KV traffic is
+  ``sum_lane ceil(kv_len / block_size)`` pages — it scales with live
+  tokens, not ``num_slots * max_len``.  The table width shipped to the
+  kernel each step is the max live page count rounded up to a power of
+  two (one compilation per width bucket).  Prefill still runs at padded
+  bucket shapes into a scratch dense cache whose first pages are then
+  scattered into the arena at bucket granularity.  Slot KV
+  snapshot/restore disappears: stalled lanes simply don't commit (their
+  new-token KV is routed to the arena's trailing write-discard page) and
+  preemption frees pages without copying anything.  ``"dense"`` keeps the
+  original stacked per-slot caches + ``jit(vmap(decode_step))`` and is
+  what recurrent-state families (ssm, hybrid) always use; encdec pages
+  its self-attention KV while its cross K/V stays dense per slot.
+* The ``KVBlockPool`` meters admission over *text* tokens under the dense
+  layout (the vlm frontend adds a constant per-slot overhead outside the
+  budget); under the paged layout the vlm frontend's rows live in pool
+  pages too, so reservations include them.  ``reserve="full"`` can never
+  stall; ``reserve="incremental"`` packs denser: a lane whose block-table
+  extension fails stalls (skips committing) until blocks free up, and if
+  every lane stalls the newest request is preempted
+  (recompute-on-readmit: it re-enters the queue and re-prefills
+  prompt+generated at its next admission).
 
 The clock is either ``"wall"`` (live serving) or ``"steps"`` (virtual time
 in engine-step units — deterministic, used by tests and trace benchmarks).
@@ -55,7 +75,8 @@ from repro import dispatch
 from repro.configs.base import ArchConfig
 from repro.core.sara import SaraDispatcher
 from repro.dispatch import SiteRegistry
-from repro.serving.kv_pool import KVBlockPool
+from repro.models.serving import PAGED_FAMILIES
+from repro.serving.kv_pool import KVArena, KVBlockPool
 from repro.serving.metrics import ServingMetrics
 from repro.serving.scheduler import ContinuousScheduler, Request
 
@@ -130,6 +151,13 @@ class EngineConfig:
     execute: str = "auto"             # GEMM backend: "pallas"|"xla"|"auto"
     dispatcher_mode: str = "oracle"   # recommendation source: "oracle"|"adaptnet"
     adaptnet_dir: Optional[str] = None  # trained ADAPTNET-TPU checkpoint dir
+    # KV storage: "paged" = physical page arena + paged flash-decode kernel
+    # (attention families); "dense" = stacked per-slot caches + vmapped
+    # decode (always used by ssm/hybrid).  "auto" is backend-aware like
+    # execute="auto": paged on TPU (where page-granular HBM traffic is the
+    # win), dense elsewhere — at CPU-test capacities the paged path's
+    # fixed per-step overheads outweigh the rows it skips.
+    kv_layout: str = "auto"           # "auto" | "paged" | "dense"
 
 
 class ServingEngine:
@@ -147,26 +175,69 @@ class ServingEngine:
         self.metrics = ServingMetrics()
 
         e = self.ecfg
-        blocks_per_slot = -(-e.max_len // e.block_size)
+        layout = e.kv_layout
+        if layout == "auto":
+            layout = ("paged" if cfg.family in PAGED_FAMILIES
+                      and jax.default_backend() == "tpu" else "dense")
+        if layout not in ("paged", "dense"):
+            raise ValueError(f"unknown kv_layout {e.kv_layout!r}")
+        if layout == "paged" and cfg.family not in PAGED_FAMILIES:
+            raise ValueError(
+                f"family {cfg.family!r} keeps recurrent state in the dense "
+                f"slot layout; kv_layout='paged' supports {PAGED_FAMILIES}")
+        self.kv_layout = layout
+
+        # vlm frontend rows share the per-slot KV cache; under the paged
+        # layout they live in pool pages, so reservations must cover them
+        self._fe_rows = (cfg.frontend.num_tokens
+                         if cfg.family == "vlm" else 0)
+        self._cache_len = e.max_len + self._fe_rows
+        row_overhead = self._fe_rows if layout == "paged" else 0
+        blocks_per_slot = -(-(e.max_len + row_overhead) // e.block_size)
         num_blocks = (e.num_blocks if e.num_blocks is not None
                       else e.num_slots * blocks_per_slot)
         self.pool = KVBlockPool(num_blocks, e.block_size)
         self.sched = ContinuousScheduler(
             e.num_slots, self.pool,
-            max_prefills_per_step=e.max_prefills_per_step, reserve=e.reserve)
-
-        # stacked per-slot caches: leading axis = slot, each lane batch=1
-        self._cache_len = e.max_len + (cfg.frontend.num_tokens
-                                       if cfg.family == "vlm" else 0)
-        proto = self.model.init_cache(1, self._cache_len, src_len=e.src_len)
-        self._cache = jax.tree_util.tree_map(
-            lambda a: jnp.broadcast_to(
-                a, (e.num_slots,) + a.shape).copy(), proto)
+            max_prefills_per_step=e.max_prefills_per_step, reserve=e.reserve,
+            token_overhead=row_overhead)
         self._last_tok = np.zeros((e.num_slots, 1), np.int32)
-
         self._prefill = jax.jit(self.model.prefill)
-        self._decode = jax.jit(jax.vmap(self.model.decode_step,
-                                        in_axes=(None, 0, 0)))
+
+        if layout == "paged":
+            # physical page arena (pool pages + one write-discard scratch
+            # page for masked lanes), per-slot row counts, and the slot-
+            # stacked residue that stays dense (encdec cross K/V).  The
+            # scratch prefill cache is rounded up to whole pages so the
+            # bucket-granularity arena scatter can always slice full blocks.
+            # (under this layout row_overhead == self._fe_rows, so
+            # blocks_per_slot already covers the full _cache_len rows)
+            self._max_blocks_per_slot = blocks_per_slot
+            self._prefill_rows = self._max_blocks_per_slot * e.block_size
+            self.arena = KVArena(
+                self.model.init_paged_arena(num_blocks + 1, e.block_size),
+                e.block_size)
+            self.pool.bind_arena(self.arena)
+            self._state = self.model.init_paged_state(e.num_slots,
+                                                      src_len=e.src_len)
+            self._kv_rows = np.zeros((e.num_slots,), np.int32)
+            self._paged_decode = jax.jit(self.model.paged_decode_step)
+            self._paged_write = jax.jit(self.model.paged_prefill_write)
+            self._cache = None
+        else:
+            # stacked per-slot caches: leading axis = slot, lane batch=1
+            self._prefill_rows = self._cache_len
+            proto = self.model.init_cache(1, self._cache_len,
+                                          src_len=e.src_len)
+            self._cache = jax.tree_util.tree_map(
+                lambda a: jnp.broadcast_to(
+                    a, (e.num_slots,) + a.shape).copy(), proto)
+            self._decode = jax.jit(jax.vmap(self.model.decode_step,
+                                            in_axes=(None, 0, 0)))
+        # what one masked-dense decode step would stream: every slot's full
+        # capacity (recurrent-state families have no KV rows to speak of)
+        self._dense_kv_rows = (e.num_slots * self._cache_len
+                               if cfg.attention_type != "none" else 0)
         self._key = jax.random.PRNGKey(e.seed + 1)
         self._vtime = 0.0
         self._t0 = time.time()
@@ -248,11 +319,12 @@ class ServingEngine:
         if need > self.ecfg.max_len:
             raise ValueError(f"request {req.rid} needs {need} tokens > "
                              f"max_len {self.ecfg.max_len}")
-        if self.pool.blocks_for(need) > self.pool.num_blocks:
+        need_rows = need + self.sched.token_overhead
+        if self.pool.blocks_for(need_rows) > self.pool.num_blocks:
             raise ValueError(
-                f"request {req.rid} needs {self.pool.blocks_for(need)} KV "
-                f"blocks > pool total {self.pool.num_blocks}; it could never "
-                "be admitted")
+                f"request {req.rid} needs {self.pool.blocks_for(need_rows)} "
+                f"KV blocks > pool total {self.pool.num_blocks}; it could "
+                "never be admitted")
         if req.eos_id is None:
             req.eos_id = self.ecfg.eos_id
         self.sched.submit(req)
@@ -290,14 +362,31 @@ class ServingEngine:
                 jnp.dtype(cfg.compute_dtype))
 
         scope = f"prefill:m{bucket}"
-        fresh = self.model.init_cache(1, self._cache_len, src_len=e.src_len)
+        fresh = self.model.init_cache(1, self._prefill_rows, src_len=e.src_len)
         t0 = time.time()
         with self._dispatch_scope(scope):
             logits, new_cache = jax.block_until_ready(self._prefill(
                 self.params, batch, fresh, jnp.int32(n)))
         self.metrics.on_prefill(n, time.time() - t0)
         self._dispatch(scope)
-        self._slot_restore(req.slot, new_cache)
+        if self.kv_layout == "paged":
+            # commit the prefilled KV rows into this request's pool pages
+            # (bucket-granularity scatter); the scratch dense cache is gone
+            # after this — only pages + the row count persist per slot
+            rows = n + self._fe_rows
+            nblk = self.pool.blocks_for(rows)
+            table = self.pool.table(req.rid).blocks
+            self.arena.leaves = self._paged_write(
+                self.arena.leaves, new_cache["layers"],
+                jnp.asarray(table[:nblk], jnp.int32))
+            self._kv_rows[req.slot] = rows
+            if cfg.family == "encdec":
+                self._state["cross_k"] = self._state["cross_k"].at[
+                    :, req.slot].set(new_cache["cross_k"][:, 0])
+                self._state["cross_v"] = self._state["cross_v"].at[
+                    :, req.slot].set(new_cache["cross_v"][:, 0])
+        else:
+            self._slot_restore(req.slot, new_cache)
 
         self._key, k = jax.random.split(self._key)
         tok = int(np.asarray(sample_logits(
@@ -310,20 +399,27 @@ class ServingEngine:
             self.metrics.on_first_token(req.arrival_time, req.t_first_token)
 
     def _retire(self, req: Request) -> None:
+        slot = req.slot
         self.sched.retire(req, self.now())
         self.metrics.on_retire(req.arrival_time, req.t_admit, req.t_done)
+        if self.kv_layout == "paged":
+            self._kv_rows[slot] = 0      # pages already back in the free list
 
     def _preempt_newest(self) -> None:
         """Every lane is stalled: preempt the newest request so the rest can
-        make progress.  Its blocks free immediately; it re-enters the queue
-        head and re-prefills prompt+generated at the next admission.
-        ``sched.preempt`` (not ``retire``) keeps the request's lifecycle
-        fields clean: no ``t_done`` is stamped until it actually finishes."""
+        make progress.  Its pages free immediately — under the paged layout
+        nothing is copied, the block table entries just return to the pool —
+        and it re-enters the queue head to re-prefill prompt+generated at
+        the next admission.  ``sched.preempt`` (not ``retire``) keeps the
+        request's lifecycle fields clean: no ``t_done`` is stamped until it
+        actually finishes."""
         victim = max(self.sched.active.values(), key=lambda r: r.t_admit)
         slot = victim.slot
         self.sched.preempt(victim)
         self.metrics.preemptions += 1
         self._last_tok[slot, 0] = 0
+        if self.kv_layout == "paged":
+            self._kv_rows[slot] = 0
 
     # -- main loop ------------------------------------------------------------
     def step(self) -> bool:
@@ -350,26 +446,36 @@ class ServingEngine:
                 if not self.sched.grow(req,
                                        req.prompt_len + len(req.generated)):
                     self.metrics.stalls += 1
-                    snaps[slot] = self._slot_snapshot(slot)
-            toks = jnp.asarray(self._last_tok)[:, :, None]   # (S, 1, 1)
-            t0 = time.time()
-            with self._dispatch_scope("decode"):
-                logits, self._cache = jax.block_until_ready(self._decode(
-                    self.params, toks, self._cache))
-            dt = time.time() - t0
+                    if self.kv_layout == "dense":
+                        snaps[slot] = self._slot_snapshot(slot)
+            if self.kv_layout == "paged":
+                logits, dt, kv_read = self._decode_paged(active)
+            else:
+                toks = jnp.asarray(self._last_tok)[:, :, None]  # (S, 1, 1)
+                t0 = time.time()
+                with self._dispatch_scope("decode"):
+                    logits, self._cache = jax.block_until_ready(self._decode(
+                        self.params, toks, self._cache))
+                dt = time.time() - t0
+                logits = logits[:, 0, :]
+                kv_read = self._dense_kv_rows
             self._dispatch("decode")
             self._key, k = jax.random.split(self._key)
             sampled = np.asarray(sample_logits(
-                k, logits[:, 0, :], self.ecfg.temperature, self.ecfg.top_k))
+                k, logits, self.ecfg.temperature, self.ecfg.top_k))
             committed = 0
             for slot, req in sorted(active.items()):
                 if req.stalled:
-                    # roll the lane back; it replays this token once the
-                    # pool can cover it
-                    self._slot_restore(slot, snaps[slot])
+                    # the lane replays this token once the pool can cover
+                    # it; paged lanes wrote nothing (trash page), dense
+                    # lanes roll back to the pre-step snapshot
+                    if self.kv_layout == "dense":
+                        self._slot_restore(slot, snaps[slot])
                     continue
                 req.generated.append(int(sampled[slot]))
                 self._last_tok[slot, 0] = req.generated[-1]
+                if self.kv_layout == "paged":
+                    self._kv_rows[slot] += 1
                 committed += 1
                 if req.t_first_token < 0:
                     req.t_first_token = self.now()
@@ -377,13 +483,46 @@ class ServingEngine:
                                                 req.t_first_token)
                 if req.done():
                     self._retire(req)
-            self.metrics.on_decode_step(len(active), self.ecfg.num_slots,
-                                        committed, dt)
+            self.metrics.on_decode_step(
+                len(active), self.ecfg.num_slots, committed, dt,
+                kv_read_tokens=kv_read,
+                kv_read_tokens_dense=self._dense_kv_rows)
             if self.sched.active and \
                     all(r.stalled for r in self.sched.active.values()):
                 self._preempt_newest()
         self._vtime += 1.0
         return True
+
+    def _decode_paged(self, active: Dict[int, Request]):
+        """One batched decode over every lane through the page arena.
+        Returns (logits (S, V), seconds, KV rows actually streamed)."""
+        e = self.ecfg
+        S = e.num_slots
+        wm = np.zeros((S,), np.int32)
+        for slot, req in active.items():
+            wm[slot] = 0 if req.stalled else 1
+        kv = self._kv_rows.astype(np.int32)
+        # pages each lane touches this step (stalled lanes attend without
+        # their pending token; empty lanes touch nothing)
+        need = [self.pool.blocks_for(int(kv[s]) + int(wm[s]))
+                for s in range(S)]
+        # table width = max live pages rounded up to a power of two (one
+        # compilation per width bucket) — the kernel grid walks only these
+        # columns, which is what makes decode cost track live tokens
+        width = KVBlockPool.table_width(max(need),
+                                        self._max_blocks_per_slot)
+        rids = [self.sched.active[s].rid if s in self.sched.active else None
+                for s in range(S)]
+        tables = self.pool.dense_block_table(rids, width)
+        toks = jnp.asarray(self._last_tok)                   # (S, 1)
+        t0 = time.time()
+        with self._dispatch_scope("decode"):
+            logits, leaves = jax.block_until_ready(self._paged_decode(
+                self.params, toks, self._state, self.arena.leaves,
+                jnp.asarray(tables), jnp.asarray(kv), jnp.asarray(wm)))
+        self.arena.leaves = leaves
+        return np.asarray(logits), time.time() - t0, \
+            e.block_size * sum(need)
 
     def run(self, requests: Sequence[Request]) -> Dict[str, np.ndarray]:
         """Serve a request set to completion; returns {rid: generated}."""
@@ -411,8 +550,19 @@ class ServingEngine:
                 "rec_oracle_sites": sources.get("oracle", 0),
                 "rec_fallback_sites": sources.get("oracle_fallback", 0)}
 
+    def defrag(self) -> int:
+        """Compact live KV pages to the front of the arena between steps:
+        the pool rewrites every block table and (paged layout) mirrors the
+        move map into page storage as one batched gather.  Returns the
+        number of pages moved.  The next decode step picks the remapped
+        tables up automatically."""
+        return len(self.pool.defrag())
+
     def summary(self) -> Dict[str, float]:
         s = self.metrics.summary(self.dispatcher.cache_info(),
                                  dispatch=self.dispatch_stats())
+        s["kv_layout"] = self.kv_layout
         s["kv_peak_blocks"] = self.pool.peak_in_use
+        s["kv_fragmentation"] = self.pool.fragmentation()
+        s["kv_defrag_block_moves"] = self.pool.defrag_moves
         return s

@@ -1,4 +1,4 @@
-"""Paged KV-cache block pool.
+"""Paged KV-cache block pool + the physical arena it meters.
 
 The pool divides the KV-cache budget into fixed-size blocks of
 ``block_size`` tokens and hands them out to requests on demand — the
@@ -9,25 +9,72 @@ allocated lazily as a request's sequence crosses block boundaries and all
 return to the free list when the request retires, so short requests stop
 holding memory the moment they finish instead of at the end of a wave.
 
-Physical layout: the engine's per-slot caches (``models/serving.py``
-pytrees) are contiguous arenas; one slot spans ``slot_capacity //
-block_size`` consecutive logical pages, so allocation never fails from
-fragmentation and no data ever moves.  ``defrag()`` computes the
-{old: new} remapping that compacts live block tables to the front — a
-physically paged arena (the flashinfer-style layout ROADMAP names as a
-follow-up) would mirror those moves in storage; today it is pool-level
-bookkeeping only and the engine does not call it.
+Physical layout: a pool can be *bound* to a :class:`KVArena` — the
+per-layer K/V page tensors ``(layers, num_blocks + 1, block_size, *feat)``
+the paged decode kernel (``kernels/paged_attn.py``) reads through dense
+per-slot block tables.  Pool block id ``b`` IS arena page ``b``; the
+arena's one extra trailing block is the engine's write-discard scratch for
+masked decode lanes and is never pool-allocated.  ``defrag()`` computes the
+{old: new} remapping that compacts live block tables to the front AND
+applies it to the bound arena as one batched gather over the page axis, so
+the freed tail is physically contiguous (the flashinfer-style layout the
+ROADMAP named).  Unbound pools (the engine's dense fallback layout) keep
+defrag as pure bookkeeping, exactly as before.
 """
 
 from __future__ import annotations
 
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Any, Dict, List, Optional, Sequence
+
+import numpy as np
 
 
 class PoolError(RuntimeError):
     pass
+
+
+class KVArena:
+    """Physical KV pages for a :class:`KVBlockPool`.
+
+    ``leaves`` maps names (``"k"``/``"v"``) to page tensors shaped
+    ``(layers, num_blocks + 1, block_size, *feat)`` — built by
+    ``models/serving.py::init_paged_arena``.  The trailing page is the
+    write-discard scratch (``trash_block``).  The engine swaps ``leaves``
+    functionally after every decode/prefill write; ``apply_moves`` mutates
+    in place when ``defrag`` compacts the pool.
+    """
+
+    def __init__(self, leaves: Dict[str, Any], block_size: int):
+        shapes = {k: v.shape for k, v in leaves.items()}
+        nb = {s[1] for s in shapes.values()}
+        bsz = {s[2] for s in shapes.values()}
+        if len(nb) != 1 or bsz != {block_size}:
+            raise ValueError(f"inconsistent arena leaves: {shapes}")
+        self.leaves = leaves
+        self.block_size = block_size
+        self.num_blocks = nb.pop() - 1       # pool-allocatable pages
+
+    @property
+    def trash_block(self) -> int:
+        return self.num_blocks
+
+    def apply_moves(self, moves: Dict[int, int]) -> int:
+        """Mirror a defrag move map in storage: one batched gather per leaf
+        over the page axis (new page ``n`` takes old page ``moves^-1(n)``;
+        untouched pages — including the trash page — map to themselves).
+        Returns the number of pages moved."""
+        if not moves:
+            return 0
+        import jax.numpy as jnp
+        src = np.arange(self.num_blocks + 1)
+        for old, new in moves.items():
+            src[new] = old
+        src = jnp.asarray(src, jnp.int32)
+        self.leaves = {name: jnp.take(leaf, src, axis=1)
+                       for name, leaf in self.leaves.items()}
+        return len(moves)
 
 
 @dataclass
@@ -54,6 +101,17 @@ class KVBlockPool:
         self._owner: List[Optional[str]] = [None] * num_blocks
         self._tables: Dict[str, BlockTable] = {}
         self.peak_in_use = 0
+        self.arena: Optional[KVArena] = None
+        self.defrag_moves = 0          # lifetime pages moved by defrag()
+
+    def bind_arena(self, arena: KVArena) -> None:
+        """Attach physical page storage; defrag() moves now mirror into it."""
+        if arena.num_blocks != self.num_blocks or \
+                arena.block_size != self.block_size:
+            raise ValueError(
+                f"arena ({arena.num_blocks} blocks x {arena.block_size}) "
+                f"does not match pool ({self.num_blocks} x {self.block_size})")
+        self.arena = arena
 
     # -- accounting ----------------------------------------------------------
     @property
@@ -88,6 +146,33 @@ class KVBlockPool:
 
     def live_requests(self) -> List[str]:
         return list(self._tables)
+
+    @staticmethod
+    def table_width(need: int, cap: int) -> int:
+        """Block-table width for the paged decode kernel: the needed page
+        count rounded up to a power of two (one jit compilation per width
+        bucket), clamped to the per-slot maximum."""
+        width = 1
+        while width < need:
+            width *= 2
+        return max(1, min(width, cap))
+
+    def dense_block_table(self, rids: Sequence[Optional[str]],
+                          width: int) -> np.ndarray:
+        """(len(rids), width) int32 block table for the paged decode kernel:
+        row i holds ``rids[i]``'s block ids in logical order, tail-padded
+        with the last live id (consecutive grid steps mapping to the same
+        page elide the DMA); ``None``/empty rows are all zeros (the kernel
+        masks them out via length 0)."""
+        t = np.zeros((len(rids), width), np.int32)
+        for i, rid in enumerate(rids):
+            if rid is None:
+                continue
+            blocks = self._tables[rid].blocks[:width]
+            if blocks:
+                t[i, :len(blocks)] = blocks
+                t[i, len(blocks):] = blocks[-1]
+        return t
 
     # -- alloc / extend / free ----------------------------------------------
     def _take_block(self, request_id: str) -> int:
@@ -141,9 +226,10 @@ class KVBlockPool:
     # -- defrag --------------------------------------------------------------
     def defrag(self) -> Dict[int, int]:
         """Compact live blocks to the lowest physical ids (stable order:
-        table order within request, requests by first block).  Returns the
-        {old_id: new_id} moves a physically paged arena would mirror in
-        storage."""
+        table order within request, requests by first block) and mirror the
+        moves into the bound arena's page storage (a single batched gather
+        per K/V leaf).  Returns the {old_id: new_id} move map; afterwards
+        the free list is the contiguous tail."""
         order = sorted(self._tables.values(),
                        key=lambda t: t.blocks[0] if t.blocks else 0)
         moves: Dict[int, int] = {}
@@ -158,6 +244,11 @@ class KVBlockPool:
                 nxt += 1
         self._owner = new_owner
         self._free = deque(range(nxt, self.num_blocks))
+        if self.arena is not None:
+            # the counter records physical page moves, so it only advances
+            # when storage is bound (unbound defrag is table bookkeeping)
+            self.arena.apply_moves(moves)
+            self.defrag_moves += len(moves)
         return moves
 
     # -- invariant check (tests / debug) -------------------------------------

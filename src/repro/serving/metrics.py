@@ -33,6 +33,10 @@ class ServingMetrics:
     completed: int = 0
     stalls: int = 0
     preemptions: int = 0
+    # KV rows actually streamed by decode vs what a masked-dense decode
+    # over full slot capacity would stream (the paged-arena win)
+    kv_read_tokens: int = 0
+    kv_read_tokens_dense: int = 0
 
     # -- recording ------------------------------------------------------------
     def on_first_token(self, arrival: float, t: float) -> None:
@@ -48,11 +52,14 @@ class ServingMetrics:
         self.prefill_s += seconds
 
     def on_decode_step(self, active: int, slots: int, tokens: int,
-                       seconds: float) -> None:
+                       seconds: float, kv_read_tokens: int = 0,
+                       kv_read_tokens_dense: int = 0) -> None:
         self.decode_steps += 1
         self.decode_tokens += tokens
         self.decode_s += seconds
         self.slot_occupancy.append(active / slots if slots else 0.0)
+        self.kv_read_tokens += kv_read_tokens
+        self.kv_read_tokens_dense += kv_read_tokens_dense
 
     # -- summary --------------------------------------------------------------
     def summary(self, sara_cache: Dict = None,
@@ -71,6 +78,15 @@ class ServingMetrics:
                                  if self.slot_occupancy else 0.0),
             "stalls": self.stalls,
             "preemptions": self.preemptions,
+            "kv_read_tokens_per_step": (self.kv_read_tokens
+                                        / max(self.decode_steps, 1)),
+            "kv_read_tokens_dense_per_step": (self.kv_read_tokens_dense
+                                              / max(self.decode_steps, 1)),
+            # neutral 1.0 when no KV rows were measured (recurrent-state
+            # families) instead of a misleading 0x "reduction"
+            "kv_read_reduction_x": (self.kv_read_tokens_dense
+                                    / max(self.kv_read_tokens, 1)
+                                    if self.kv_read_tokens_dense else 1.0),
         }
         if sara_cache:
             hits = sara_cache.get("hits", 0)

@@ -77,13 +77,19 @@ class StepPlan:
 
 class ContinuousScheduler:
     def __init__(self, num_slots: int, pool: KVBlockPool,
-                 max_prefills_per_step: int = 1, reserve: str = "full"):
+                 max_prefills_per_step: int = 1, reserve: str = "full",
+                 token_overhead: int = 0):
         if reserve not in ("full", "incremental"):
             raise ValueError(reserve)
         self.num_slots = num_slots
         self.pool = pool
         self.max_prefills_per_step = max_prefills_per_step
         self.reserve = reserve
+        # extra KV rows every request's block table must also cover beyond
+        # its text tokens — the vlm frontend's per-slot rows when the paged
+        # arena stores them in pool pages (0 under the dense layout, where
+        # that overhead lives outside the metered budget)
+        self.token_overhead = token_overhead
         self.waiting: deque = deque()
         self.active: Dict[int, Request] = {}
         self._free_slots = list(range(num_slots - 1, -1, -1))
@@ -101,8 +107,8 @@ class ContinuousScheduler:
     # -- planning -------------------------------------------------------------
     def _reservation(self, req: Request) -> int:
         if self.reserve == "full":
-            return req.prompt_len + req.max_new_tokens + 1
-        return req.context_len + 1
+            return self.token_overhead + req.prompt_len + req.max_new_tokens + 1
+        return self.token_overhead + req.context_len + 1
 
     def plan(self, now: float = float("inf")) -> StepPlan:
         """Admit up to ``max_prefills_per_step`` arrived requests into free
@@ -124,8 +130,10 @@ class ContinuousScheduler:
 
     # -- per-token growth (incremental mode) ----------------------------------
     def grow(self, req: Request, total_tokens: int) -> bool:
-        """Ensure the request's block table covers ``total_tokens``; returns
-        False (stall) when the pool cannot extend."""
+        """Ensure the request's block table covers ``total_tokens`` (plus
+        the per-request ``token_overhead``); returns False (stall) when the
+        pool cannot extend."""
+        total_tokens += self.token_overhead
         table = self.pool.table(req.rid)
         if table.capacity(self.pool.block_size) >= total_tokens:
             table.num_tokens = max(table.num_tokens, total_tokens)
