@@ -1,10 +1,14 @@
 #!/usr/bin/env bash
-# CI gate: tier-1 tests + a fast serving smoke + dispatch-parity smoke.
+# CI gate: tier-1 tests + fast serving/dispatch/paged/chunked/adaptnet
+# smokes + docs-consistency check.
 #   bash scripts/check.sh
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== docs consistency (package map + snippet parse + links) =="
+python scripts/check_docs.py
 
 echo "== tier-1 tests =="
 python -m pytest -x -q
@@ -17,6 +21,9 @@ python -m benchmarks.bench_gemm_dispatch --smoke
 
 echo "== paged-decode smoke (paged KV engine == dense decode logits) =="
 python -m benchmarks.bench_paged_decode --smoke
+
+echo "== chunked-prefill smoke (chunked paged engine == dense greedy) =="
+python -m benchmarks.bench_chunked_prefill --smoke
 
 echo "== self-adaptive smoke (train -> save -> load -> serve adaptnet) =="
 ADAPTNET_SMOKE_DIR="$(mktemp -d)/adaptnet_ckpt"

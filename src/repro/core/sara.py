@@ -49,6 +49,18 @@ def load_adaptnet(directory: str) -> Tuple[Dict, dict]:
 
 @dataclass
 class SaraDispatcher:
+    """Per-shape tile-configuration recommender (the paper's SARA runtime).
+
+    ``recommend(M, K, N) -> TPUTileConfig`` resolves a GEMM shape to the
+    tile blocks + residency mode the RSA kernel should run with, through
+    either the analytic oracle (exhaustive cost-model argmin) or a trained
+    ADAPTNET-TPU (``mode="adaptnet"``; shapes outside the trained range
+    fall back to the oracle).  Recommendations are memoized per shape —
+    ``cache_info()`` / ``cache_clear()`` expose the cache, and
+    ``source_of`` / ``source_info`` report which path produced each one.
+    Build adaptnet-mode instances with ``from_checkpoint(dir)``; install
+    as the active policy with ``dispatch.use(dispatcher, ...)``."""
+
     mode: str = "oracle"                   # "oracle" | "adaptnet"
     adaptnet_params: Optional[Dict] = None
     use_pallas: bool = False

@@ -165,6 +165,64 @@ def mla_paged_attention(q_abs, q_rope, ckv_arena, krope_arena, tables,
                                    _interpret(interpret))
 
 
+@functools.partial(jax.jit, static_argnames=("logit_cap", "impl",
+                                             "interpret"))
+def paged_prefill_attention(q, k_arena, v_arena, tables, starts, lengths, *,
+                            logit_cap: float = 0.0,
+                            impl: Optional[str] = None,
+                            interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Chunked paged prefill (GQA/MQA): each lane's prompt chunk attends
+    causally through its block table to every page written so far,
+    including the chunk's own rows (which the caller wrote before calling).
+
+    q: (S, C, H, hd) one chunk of queries per lane; k_arena: (NB, bs, KVH,
+    hd); v_arena: (NB, bs, KVH, hd_v); tables: (S, W) int32 physical block
+    ids in logical order (tail-pad with the last live id); starts: (S,)
+    int32 absolute position of chunk row 0; lengths: (S,) int32 valid
+    tokens including the chunk.  Returns (S, C, H, hd_v); rows at or past
+    a lane's chunk length are garbage the caller discards, and lanes with
+    length 0 yield zeros.
+    """
+    S, C, H, hd = q.shape
+    KVH = k_arena.shape[2]
+    scale = 1.0 / (hd ** 0.5)
+    if _paged_impl(impl) == "xla":
+        from repro.kernels.ref import paged_prefill_attention_ref
+        return paged_prefill_attention_ref(q, k_arena, v_arena, tables,
+                                           starts, lengths, scale=scale,
+                                           logit_cap=logit_cap)
+    from repro.kernels.paged_attn import paged_gqa_prefill_pallas
+    qg = q.reshape(S, C, KVH, H // KVH, hd)
+    o = paged_gqa_prefill_pallas(qg, k_arena, v_arena, tables, starts,
+                                 lengths, scale, _interpret(interpret),
+                                 logit_cap=logit_cap)
+    return o.reshape(S, C, H, v_arena.shape[-1])
+
+
+@functools.partial(jax.jit, static_argnames=("qk_dim", "impl", "interpret"))
+def mla_paged_prefill_attention(q_abs, q_rope, ckv_arena, krope_arena,
+                                tables, starts, lengths, *, qk_dim: int,
+                                impl: Optional[str] = None,
+                                interpret: Optional[bool] = None
+                                ) -> jnp.ndarray:
+    """Chunked paged prefill for absorbed MLA: attend in the compressed
+    latent space through the block table with causal chunk masking;
+    ``qk_dim`` is the full per-head query-key dim (nope + rope) setting the
+    softmax scale.  Shapes as in :func:`paged_prefill_attention` with
+    q_abs (S, C, H, r) / q_rope (S, C, H, rd).  Returns o_lat (S, C, H, r).
+    """
+    scale = 1.0 / (qk_dim ** 0.5)
+    if _paged_impl(impl) == "xla":
+        from repro.kernels.ref import paged_mla_prefill_attention_ref
+        return paged_mla_prefill_attention_ref(
+            q_abs, q_rope, ckv_arena, krope_arena, tables, starts, lengths,
+            scale=scale)
+    from repro.kernels.paged_attn import paged_mla_prefill_pallas
+    return paged_mla_prefill_pallas(q_abs, q_rope, ckv_arena, krope_arena,
+                                    tables, starts, lengths, scale,
+                                    _interpret(interpret))
+
+
 @functools.partial(jax.custom_vjp, nondiff_argnums=(6, 7))
 def wkv_attention(r, k, v, logw, u, state0, chunk: int = 64,
                   interpret: Optional[bool] = None):

@@ -1,18 +1,31 @@
-"""Paged flash-decode Pallas kernels (GQA + absorbed-MLA).
+"""Paged flash-attention Pallas kernels (GQA + absorbed-MLA): decode + prefill.
 
-Decode-side analogue of kernels/flash_attn.py for a *physically paged* KV
-cache: K/V live in a block arena ``(num_blocks, block_size, ...)`` shared by
-every decode lane, and each lane reads only the pages its block table names.
-The masked-dense decode path (models/attention.py) streams ``num_slots *
-max_len`` KV rows per step regardless of how many tokens are actually live;
-here the split-K grid walks a lane's block table, so per-step traffic is
-``sum_lane ceil(kv_len / block_size) * block_size`` rows — decode cost
-scales with live tokens, not slot capacity (the SARA size-to-the-workload
-argument applied to the serving hot path).
+Attention kernels for a *physically paged* KV cache: K/V live in a block
+arena ``(num_blocks, block_size, ...)`` shared by every lane, and each lane
+reads only the pages its block table names.  The masked-dense decode path
+(models/attention.py) streams ``num_slots * max_len`` KV rows per step
+regardless of how many tokens are actually live; here the split-K grid
+walks a lane's block table, so per-step traffic is ``sum_lane ceil(kv_len /
+block_size) * block_size`` rows — attention cost scales with live tokens,
+not slot capacity (the SARA size-to-the-workload argument applied to the
+serving hot path).
+
+Two kernel families share the structure:
+
+* **decode** (``paged_gqa_decode_pallas`` / ``paged_mla_decode_pallas``) —
+  one query token per lane attending over its whole table.
+* **chunked prefill** (``paged_gqa_prefill_pallas`` /
+  ``paged_mla_prefill_pallas``) — ``C`` query tokens per lane (one prompt
+  chunk, already written to the arena by the caller) attending *causally*:
+  chunk row ``r`` sits at absolute position ``starts[lane] + r`` and sees
+  keys at positions ``<= starts[lane] + r``.  Per-lane ``starts`` /
+  ``lengths`` make the batch ragged: lanes whose chunk is empty
+  (``lengths[lane] == 0``) skip every block, which is how one prefill batch
+  carries heterogeneous prompt lengths.
 
 Grid layout: ``(lanes, kv_heads, table_width)`` (GQA) / ``(lanes,
 table_width)`` (MLA), table width innermost.  The block table and per-lane
-lengths ride in scalar prefetch (PrefetchScalarGridSpec) so the K/V
+scalars ride in scalar prefetch (PrefetchScalarGridSpec) so the K/V
 BlockSpec index maps resolve ``table[lane, j]`` before the body runs —
 that indirection IS the paging.  Per (lane, head) the (m, l, acc) online
 softmax state lives in VMEM scratch, reset at ``j == 0`` and emitted on the
@@ -24,7 +37,8 @@ the same block, and ``pl.when`` skips the compute, so padded columns cost
 Absorbed MLA attends in the compressed latent space: queries arrive
 pre-absorbed (q @ W_UK) plus the shared-rope query, the arena stores
 (c_kv, k_rope) rows, and the output is the latent mix ``p @ c_kv`` — the
-caller applies W_UV/W_O outside (models/attention.py::mla_paged_decode).
+caller applies W_UV/W_O outside (models/attention.py::mla_paged_decode /
+mla_paged_prefill).
 """
 
 from __future__ import annotations
@@ -205,4 +219,190 @@ def paged_mla_decode_pallas(q_abs, q_rope, ckv_arena, krope_arena, tables,
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(tables, lengths, q_abs, q_rope, ckv_arena, krope_arena)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# chunked prefill: C causal queries per lane over previously-written pages
+# ---------------------------------------------------------------------------
+
+def _gqa_prefill_kernel(tables, starts, lengths, q_ref, k_ref, v_ref, o_ref,
+                        m_scr, l_scr, acc_scr, *, bs, n_bt, scale, logit_cap):
+    lane = pl.program_id(0)
+    j = pl.program_id(2)
+    kv_len = lengths[lane]          # rows valid AFTER this chunk's write
+    q0 = starts[lane]               # absolute position of chunk row 0
+    C, G = q_ref.shape[1], q_ref.shape[3]
+    CG = C * G
+
+    @pl.when(j == 0)
+    def _reset():
+        m_scr[...] = jnp.full_like(m_scr, NEG)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    @pl.when(j * bs < kv_len)
+    def _accumulate():
+        q = q_ref[0, :, 0].reshape(CG, q_ref.shape[-1])    # (C*G, hd)
+        k = k_ref[0, :, 0, :]                              # (bs, hd)
+        v = v_ref[0, :, 0, :]                              # (bs, hd_v)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if logit_cap > 0.0:
+            s = jnp.tanh(s / logit_cap) * logit_cap
+        col = j * bs + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        # flat row i is chunk row i // G at absolute position q0 + i // G;
+        # the causal mask makes each chunk query see only keys at or before
+        # its own position (block 0 always has col 0 <= q0 + row, so every
+        # live row accumulates a finite max there — no exp(0) blowups)
+        qpos = q0 + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) // G
+        s = jnp.where((col < kv_len) & (col <= qpos), s, NEG)
+        m_prev, l_prev = m_scr[0], l_scr[0]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        acc_scr[...] = acc_scr[...] * corr[:, None] + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[0] = m_new
+        l_scr[0] = l_prev * corr + jnp.sum(p, axis=-1)
+
+    @pl.when(j == n_bt - 1)
+    def _emit():
+        # empty lanes (kv_len == 0) never accumulate: l == 0 -> zeros out
+        l = jnp.maximum(l_scr[0], 1e-30)
+        o = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+        o_ref[0, :, 0] = o.reshape(C, G, o_ref.shape[-1])
+
+
+def paged_gqa_prefill_pallas(q, k_arena, v_arena, tables, starts, lengths,
+                             scale: float, interpret: bool,
+                             logit_cap: float = 0.0) -> jnp.ndarray:
+    """q: (S, C, KVH, G, hd) one prompt chunk per lane; k_arena: (NB, bs,
+    KVH, hd); v_arena: (NB, bs, KVH, hd_v); tables: (S, W) int32 physical
+    block ids in logical order (tail-pad with the last live id); starts:
+    (S,) int32 absolute position of each lane's chunk row 0; lengths: (S,)
+    int32 valid tokens *including* the chunk (``starts + chunk_len``).
+    The chunk's own K/V rows must already be in the arena.  Returns
+    (S, C, KVH, G, hd_v); rows past a lane's chunk are garbage the caller
+    discards, lanes with length 0 yield zeros."""
+    S, C, KVH, G, hd = q.shape
+    bs = k_arena.shape[1]
+    hd_v = v_arena.shape[-1]
+    W = tables.shape[1]
+
+    grid = (S, KVH, W)
+    out = pl.pallas_call(
+        functools.partial(_gqa_prefill_kernel, bs=bs, n_bt=W, scale=scale,
+                          logit_cap=logit_cap),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, C, 1, G, hd),
+                             lambda s, h, j, t, st, ln: (s, 0, h, 0, 0)),
+                pl.BlockSpec((1, bs, 1, hd),
+                             lambda s, h, j, t, st, ln: (t[s, j], 0, h, 0)),
+                pl.BlockSpec((1, bs, 1, hd_v),
+                             lambda s, h, j, t, st, ln: (t[s, j], 0, h, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, C, 1, G, hd_v),
+                                   lambda s, h, j, t, st, ln: (s, 0, h, 0, 0)),
+            scratch_shapes=[pltpu.VMEM((1, C * G), jnp.float32),
+                            pltpu.VMEM((1, C * G), jnp.float32),
+                            pltpu.VMEM((C * G, hd_v), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((S, C, KVH, G, hd_v), q.dtype),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(tables, starts, lengths, q, k_arena, v_arena)
+    return out
+
+
+def _mla_prefill_kernel(tables, starts, lengths, qa_ref, qr_ref, ckv_ref,
+                        krope_ref, o_ref, m_scr, l_scr, acc_scr, *, bs, n_bt,
+                        scale):
+    lane = pl.program_id(0)
+    j = pl.program_id(1)
+    kv_len = lengths[lane]
+    q0 = starts[lane]
+    C, H = qa_ref.shape[1], qa_ref.shape[2]
+    CH = C * H
+
+    @pl.when(j == 0)
+    def _reset():
+        m_scr[...] = jnp.full_like(m_scr, NEG)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    @pl.when(j * bs < kv_len)
+    def _accumulate():
+        qa = qa_ref[0].reshape(CH, qa_ref.shape[-1])       # (C*H, r)
+        qr = qr_ref[0].reshape(CH, qr_ref.shape[-1])       # (C*H, rd)
+        ckv = ckv_ref[0]                                   # (bs, r)
+        krope = krope_ref[0]                               # (bs, rd)
+        s = (jax.lax.dot_general(qa, ckv, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32) +
+             jax.lax.dot_general(qr, krope, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)) * scale
+        col = j * bs + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        qpos = q0 + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) // H
+        s = jnp.where((col < kv_len) & (col <= qpos), s, NEG)
+        m_prev, l_prev = m_scr[0], l_scr[0]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        acc_scr[...] = acc_scr[...] * corr[:, None] + jax.lax.dot_general(
+            p.astype(ckv.dtype), ckv, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[0] = m_new
+        l_scr[0] = l_prev * corr + jnp.sum(p, axis=-1)
+
+    @pl.when(j == n_bt - 1)
+    def _emit():
+        l = jnp.maximum(l_scr[0], 1e-30)
+        o = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+        o_ref[0] = o.reshape(C, H, o_ref.shape[-1])
+
+
+def paged_mla_prefill_pallas(q_abs, q_rope, ckv_arena, krope_arena, tables,
+                             starts, lengths, scale: float,
+                             interpret: bool) -> jnp.ndarray:
+    """q_abs: (S, C, H, r) pre-absorbed chunk queries; q_rope: (S, C, H, rd);
+    ckv_arena: (NB, bs, r); krope_arena: (NB, bs, rd); tables: (S, W) int32;
+    starts / lengths: (S,) int32 as in :func:`paged_gqa_prefill_pallas`.
+    Returns the latent mix o_lat: (S, C, H, r)."""
+    S, C, H, r = q_abs.shape
+    rd = q_rope.shape[-1]
+    bs = ckv_arena.shape[1]
+    W = tables.shape[1]
+
+    grid = (S, W)
+    out = pl.pallas_call(
+        functools.partial(_mla_prefill_kernel, bs=bs, n_bt=W, scale=scale),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, C, H, r),
+                             lambda s, j, t, st, ln: (s, 0, 0, 0)),
+                pl.BlockSpec((1, C, H, rd),
+                             lambda s, j, t, st, ln: (s, 0, 0, 0)),
+                pl.BlockSpec((1, bs, r),
+                             lambda s, j, t, st, ln: (t[s, j], 0, 0)),
+                pl.BlockSpec((1, bs, rd),
+                             lambda s, j, t, st, ln: (t[s, j], 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, C, H, r),
+                                   lambda s, j, t, st, ln: (s, 0, 0, 0)),
+            scratch_shapes=[pltpu.VMEM((1, C * H), jnp.float32),
+                            pltpu.VMEM((1, C * H), jnp.float32),
+                            pltpu.VMEM((C * H, r), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((S, C, H, r), q_abs.dtype),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(tables, starts, lengths, q_abs, q_rope, ckv_arena, krope_arena)
     return out

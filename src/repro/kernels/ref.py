@@ -96,6 +96,65 @@ def paged_mla_attention_ref(q_abs, q_rope, ckv_arena, krope_arena, tables,
     return o.astype(q_abs.dtype)
 
 
+def paged_prefill_attention_ref(q, k_arena, v_arena, tables, starts, lengths,
+                                *, scale: float | None = None,
+                                logit_cap: float = 0.0) -> jnp.ndarray:
+    """Chunked-prefill attention over gathered pages (f32 softmax).
+
+    q: (S, C, H, hd) one prompt chunk per lane (rows already written to the
+    arena); tables: (S, W) int32; starts: (S,) absolute position of chunk
+    row 0; lengths: (S,) valid tokens including the chunk.  Chunk row r
+    attends causally to arena columns ``<= starts + r`` (and ``< lengths``).
+    Returns (S, C, H, hd_v); lanes with length 0 yield zeros.
+    """
+    S, C, H, hd = q.shape
+    KVH = k_arena.shape[2]
+    G = H // KVH
+    if scale is None:
+        scale = 1.0 / (hd ** 0.5)
+    k = paged_gather(k_arena, tables).astype(jnp.float32)   # (S, L, KVH, hd)
+    v = paged_gather(v_arena, tables).astype(jnp.float32)
+    qf = q.astype(jnp.float32).reshape(S, C, KVH, G, hd)
+    s = jnp.einsum("schgd,slhd->shgcl", qf, k) * scale
+    if logit_cap > 0.0:
+        s = jnp.tanh(s / logit_cap) * logit_cap
+    col = jnp.arange(k.shape[1])
+    qpos = starts[:, None] + jnp.arange(C)[None, :]         # (S, C)
+    mask = (col[None, None, :] < lengths[:, None, None]) & \
+           (col[None, None, :] <= qpos[:, :, None])         # (S, C, L)
+    s = jnp.where(mask[:, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("shgcl,slhd->schgd", p, v)
+    o = jnp.where((lengths > 0)[:, None, None, None, None], o, 0.0)
+    return o.reshape(S, C, H, v.shape[-1]).astype(q.dtype)
+
+
+def paged_mla_prefill_attention_ref(q_abs, q_rope, ckv_arena, krope_arena,
+                                    tables, starts, lengths, *,
+                                    scale: float) -> jnp.ndarray:
+    """Absorbed-MLA chunked prefill over gathered latent pages.
+
+    q_abs: (S, C, H, r); q_rope: (S, C, H, rd); ckv_arena: (NB, bs, r);
+    krope_arena: (NB, bs, rd); starts / lengths as in
+    :func:`paged_prefill_attention_ref`.  Returns o_lat (S, C, H, r).
+    """
+    S, C, H, _ = q_abs.shape
+    ckv = paged_gather(ckv_arena, tables).astype(jnp.float32)   # (S, L, r)
+    krope = paged_gather(krope_arena, tables).astype(jnp.float32)
+    s = (jnp.einsum("schr,slr->schl", q_abs.astype(jnp.float32), ckv) +
+         jnp.einsum("schd,sld->schl", q_rope.astype(jnp.float32),
+                    krope)) * scale
+    col = jnp.arange(ckv.shape[1])
+    qpos = starts[:, None] + jnp.arange(C)[None, :]
+    mask = (col[None, None, :] < lengths[:, None, None]) & \
+           (col[None, None, :] <= qpos[:, :, None])         # (S, C, L)
+    s = jnp.where(mask[:, :, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)                          # (S, C, H, L)
+    o = jnp.einsum("schl,slr->schr", p, ckv)
+    o = jnp.where((lengths > 0)[:, None, None, None], o, 0.0)
+    return o.astype(q_abs.dtype)
+
+
 def linear_attn_ref(r, k, v, logw, u) -> jnp.ndarray:
     """Exact sequential recurrence (the definition, O(S) steps).
 

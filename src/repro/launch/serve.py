@@ -105,6 +105,7 @@ def serve_continuous(arch: str = "llama3.2-1b", preset: str = "reduced",
                      seed: int = 0, execute: str = "auto",
                      dispatcher: str = "oracle",
                      adaptnet_ckpt: str = None, kv_layout: str = "auto",
+                     prefill_chunk: int = None,
                      override_cfg=None, log: bool = True):
     """Serve a request set through the continuous-batching engine.
 
@@ -117,7 +118,10 @@ def serve_continuous(arch: str = "llama3.2-1b", preset: str = "reduced",
     ``kv_layout`` selects the decode KV storage: "paged" (physical page
     arena + paged flash-decode kernel), "dense" (stacked per-slot caches),
     or "auto" (paged for attention families on TPU; dense elsewhere and
-    for recurrent-state families).
+    for recurrent-state families).  ``prefill_chunk`` (with the paged
+    layout, dense/moe families) streams each prompt into KV pages that
+    many tokens per engine step — chunked paged prefill — instead of one
+    padded-bucket call per request.
     """
     from repro.configs.registry import get_arch
     from repro.serving import EngineConfig, Request, ServingEngine
@@ -131,7 +135,8 @@ def serve_continuous(arch: str = "llama3.2-1b", preset: str = "reduced",
         temperature=temperature, top_k=top_k, seed=seed,
         src_len=prompt_len if cfg.family == "encdec" else 0,
         execute=execute, dispatcher_mode=dispatcher,
-        adaptnet_dir=adaptnet_ckpt, kv_layout=kv_layout))
+        adaptnet_dir=adaptnet_ckpt, kv_layout=kv_layout,
+        prefill_chunk=prefill_chunk))
     reqs = []
     for i in range(num_requests):
         p = rng.integers(0, cfg.vocab_size, prompt_len).astype(np.int32)
@@ -177,6 +182,10 @@ def main():
     ap.add_argument("--kv-layout", default="auto",
                     choices=["auto", "paged", "dense"],
                     help="decode KV storage: paged arena or dense slots")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help=">0: chunked paged prefill — stream each prompt "
+                         "into KV pages this many tokens per step "
+                         "(requires --kv-layout paged, dense/moe families)")
     ap.add_argument("--waves", type=int, default=0,
                     help=">0: run the legacy wave-based path instead")
     ap.add_argument("--smoke", action="store_true",
@@ -212,7 +221,8 @@ def main():
                      num_slots=a.slots, prompt_len=a.prompt_len, gen=a.gen,
                      temperature=a.temperature, top_k=a.top_k,
                      execute=a.execute, dispatcher=a.dispatcher,
-                     adaptnet_ckpt=a.adaptnet_ckpt, kv_layout=a.kv_layout)
+                     adaptnet_ckpt=a.adaptnet_ckpt, kv_layout=a.kv_layout,
+                     prefill_chunk=a.prefill_chunk or None)
 
 
 if __name__ == "__main__":

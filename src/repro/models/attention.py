@@ -359,27 +359,6 @@ def init_gqa_cache(cfg: ArchConfig, batch: int, max_len: int, dtype) -> KVCache:
 # paged decode (physically paged KV arena; kernels/paged_attn.py)
 # ---------------------------------------------------------------------------
 
-def _paged_write_rows(tables, lengths, write_mask, block_size: int,
-                      num_blocks: int):
-    """Flat arena row each lane's new token writes to.  Masked lanes (stalled
-    or empty slots) land in row 0 of the trash block — the arena's trailing
-    block, never pool-allocated — so a lane without capacity this step
-    cannot corrupt live pages (clamped gather keeps the masked lane's table
-    lookup in bounds)."""
-    S = lengths.shape[0]
-    blk = tables[jnp.arange(S), lengths // block_size]
-    rows = blk * block_size + lengths % block_size
-    return jnp.where(write_mask > 0, rows, (num_blocks - 1) * block_size)
-
-
-def _arena_write(arena: jnp.ndarray, rows: jnp.ndarray, new: jnp.ndarray):
-    """Scatter one new row per lane into the flattened (NB*bs) arena."""
-    NB, bs = arena.shape[0], arena.shape[1]
-    flat = arena.reshape((NB * bs,) + arena.shape[2:])
-    flat = flat.at[rows].set(new.astype(arena.dtype))
-    return flat.reshape(arena.shape)
-
-
 def gqa_paged_decode(params: Params, x: jnp.ndarray, positions: jnp.ndarray,
                      cfg: ArchConfig, *, k_arena, v_arena, block_tables,
                      kv_lens, write_mask):
@@ -400,10 +379,13 @@ def gqa_paged_decode(params: Params, x: jnp.ndarray, positions: jnp.ndarray,
 
     from repro.kernels import ops as kops
     NB, bs = k_arena.shape[0], k_arena.shape[1]
-    rows = _paged_write_rows(block_tables, kv_lens, write_mask, bs, NB)
-    k_arena = _arena_write(k_arena, rows, k[:, 0])
-    v_arena = _arena_write(v_arena, rows, v[:, 0])
-    attn_len = kv_lens + (write_mask > 0).astype(kv_lens.dtype)
+    # decode is the C=1 case of the chunk write: write_mask doubles as the
+    # 0/1 chunk length (masked lanes land in the trash block)
+    wm = (write_mask > 0).astype(kv_lens.dtype)
+    rows = _paged_chunk_rows(block_tables, kv_lens, wm, 1, bs, NB)
+    k_arena = _arena_write_chunk(k_arena, rows, k[:, :1])
+    v_arena = _arena_write_chunk(v_arena, rows, v[:, :1])
+    attn_len = kv_lens + wm
     o = kops.paged_attention(q[:, 0], k_arena, v_arena, block_tables,
                              attn_len, logit_cap=cfg.attn_logit_softcap)
     S = x.shape[0]
@@ -411,6 +393,111 @@ def gqa_paged_decode(params: Params, x: jnp.ndarray, positions: jnp.ndarray,
     out = hint(dense(out, params["wo"], None, cdt, site="layer.attn.out"),
                "B", None, None)
     return out, k_arena, v_arena
+
+
+def _paged_chunk_rows(tables, kv_lens, chunk_lens, num_rows: int,
+                      block_size: int, num_blocks: int):
+    """Flat arena row for each of a lane's ``num_rows`` chunk positions
+    ((S, C) int32).  Chunk row r lands at logical position
+    ``kv_lens[lane] + r``; rows at or past a lane's ``chunk_lens`` land in
+    row 0 of the trash block — the arena's trailing block, never
+    pool-allocated — so ragged lanes (and lanes with no chunk this step)
+    cannot corrupt live pages (clamped gather keeps masked lanes' table
+    lookups in bounds)."""
+    S, W = tables.shape
+    pos = kv_lens[:, None] + jnp.arange(num_rows)[None, :]      # (S, C)
+    blk = jnp.take_along_axis(tables, jnp.clip(pos // block_size, 0, W - 1),
+                              axis=1)
+    rows = blk * block_size + pos % block_size
+    valid = jnp.arange(num_rows)[None, :] < chunk_lens[:, None]
+    return jnp.where(valid, rows, (num_blocks - 1) * block_size)
+
+
+def _arena_write_chunk(arena: jnp.ndarray, rows: jnp.ndarray,
+                       new: jnp.ndarray):
+    """Scatter C new rows per lane into the flattened (NB*bs) arena.
+    rows: (S, C); new: (S, C, *feat).  Masked rows all target the trash
+    block's row 0 — colliding writes there are fine, it is discard space."""
+    NB, bs = arena.shape[0], arena.shape[1]
+    flat = arena.reshape((NB * bs,) + arena.shape[2:])
+    flat = flat.at[rows.reshape(-1)].set(
+        new.reshape((-1,) + new.shape[2:]).astype(arena.dtype))
+    return flat.reshape(arena.shape)
+
+
+def gqa_paged_prefill(params: Params, x: jnp.ndarray, positions: jnp.ndarray,
+                      cfg: ArchConfig, *, k_arena, v_arena, block_tables,
+                      kv_lens, chunk_lens):
+    """Chunked-prefill attention through the paged KV arena.
+
+    x: (S, C, d) — one prompt chunk per lane; positions: (S, C) absolute;
+    k_arena/v_arena: (NB, bs, KVH, hd) physical pages (trailing block is
+    the write-discard scratch); block_tables: (S, W) int32 pages in logical
+    order; kv_lens: (S,) rows already committed per lane (the chunk's
+    absolute start); chunk_lens: (S,) valid new rows — rows at or past a
+    lane's chunk length write to the trash block and their outputs are
+    garbage the caller discards (ragged batch: one call serves
+    heterogeneous prompt lengths).  The chunk's K/V rows are written into
+    the arena *before* attention, so chunk queries see their own keys
+    causally.  Returns (out (S, C, d), new_k_arena, new_v_arena).
+    """
+    cdt = jnp.dtype(cfg.compute_dtype)
+    q, k, v = _proj_qkv(params, x, x, cfg, cdt)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+
+    from repro.kernels import ops as kops
+    NB, bs = k_arena.shape[0], k_arena.shape[1]
+    S, C = x.shape[0], x.shape[1]
+    rows = _paged_chunk_rows(block_tables, kv_lens, chunk_lens, C, bs, NB)
+    k_arena = _arena_write_chunk(k_arena, rows, k)
+    v_arena = _arena_write_chunk(v_arena, rows, v)
+    attn_len = kv_lens + chunk_lens
+    o = kops.paged_prefill_attention(q, k_arena, v_arena, block_tables,
+                                     kv_lens, attn_len,
+                                     logit_cap=cfg.attn_logit_softcap)
+    out = hint(o.reshape(S, C, cfg.q_dim), "B", None, "M")
+    out = hint(dense(out, params["wo"], None, cdt, site="layer.attn.out"),
+               "B", None, None)
+    return out, k_arena, v_arena
+
+
+def mla_paged_prefill(params: Params, x: jnp.ndarray, positions: jnp.ndarray,
+                      cfg: ArchConfig, *, ckv_arena, krope_arena,
+                      block_tables, kv_lens, chunk_lens):
+    """Absorbed-MLA chunked prefill through the paged latent arena.
+
+    The arena stores the compressed (c_kv, k_rope) rows only; chunk queries
+    are absorbed through W_UK before the kernel and the latent mix goes
+    through W_UV/W_O after — the same formulation as
+    :func:`mla_paged_decode`, widened to C causal rows per lane.  Shapes as
+    in :func:`gqa_paged_prefill` with ckv_arena (NB, bs, kv_lora_rank) and
+    krope_arena (NB, bs, qk_rope_head_dim).
+    """
+    m = cfg.mla
+    cdt = jnp.dtype(cfg.compute_dtype)
+    S, C = x.shape[0], x.shape[1]
+    H = cfg.num_heads
+    q_nope, q_rope = _mla_q(params, x, positions, cfg, cdt)    # (S,C,H,*)
+    c_kv, k_rope = _mla_ckv(params, x, positions, cfg, cdt)    # (S,C,r/rd)
+
+    from repro.kernels import ops as kops
+    NB, bs = ckv_arena.shape[0], ckv_arena.shape[1]
+    rows = _paged_chunk_rows(block_tables, kv_lens, chunk_lens, C, bs, NB)
+    ckv_arena = _arena_write_chunk(ckv_arena, rows, c_kv)
+    krope_arena = _arena_write_chunk(krope_arena, rows, k_rope)
+
+    w_uk = params["w_uk"].reshape(m.kv_lora_rank, H, m.qk_nope_head_dim)
+    q_abs = jnp.einsum("bshd,rhd->bshr", q_nope, w_uk.astype(cdt))
+    attn_len = kv_lens + chunk_lens
+    o_lat = kops.mla_paged_prefill_attention(
+        q_abs, q_rope, ckv_arena, krope_arena, block_tables, kv_lens,
+        attn_len, qk_dim=m.qk_nope_head_dim + m.qk_rope_head_dim)
+    w_uv = params["w_uv"].reshape(m.kv_lora_rank, H, m.v_head_dim)
+    out = jnp.einsum("schr,rhd->schd", o_lat.astype(cdt), w_uv.astype(cdt))
+    out = out.reshape(S, C, H * m.v_head_dim)
+    out = dense(out, params["wo"], None, cdt, site="layer.mla.out")
+    return out, ckv_arena, krope_arena
 
 
 def mla_paged_decode(params: Params, x: jnp.ndarray, positions: jnp.ndarray,
@@ -433,13 +520,14 @@ def mla_paged_decode(params: Params, x: jnp.ndarray, positions: jnp.ndarray,
 
     from repro.kernels import ops as kops
     NB, bs = ckv_arena.shape[0], ckv_arena.shape[1]
-    rows = _paged_write_rows(block_tables, kv_lens, write_mask, bs, NB)
-    ckv_arena = _arena_write(ckv_arena, rows, c_kv[:, 0])
-    krope_arena = _arena_write(krope_arena, rows, k_rope[:, 0])
+    wm = (write_mask > 0).astype(kv_lens.dtype)
+    rows = _paged_chunk_rows(block_tables, kv_lens, wm, 1, bs, NB)
+    ckv_arena = _arena_write_chunk(ckv_arena, rows, c_kv[:, :1])
+    krope_arena = _arena_write_chunk(krope_arena, rows, k_rope[:, :1])
 
     w_uk = params["w_uk"].reshape(m.kv_lora_rank, H, m.qk_nope_head_dim)
     q_abs = jnp.einsum("bshd,rhd->bshr", q_nope, w_uk.astype(cdt))[:, 0]
-    attn_len = kv_lens + (write_mask > 0).astype(kv_lens.dtype)
+    attn_len = kv_lens + wm
     o_lat = kops.mla_paged_attention(
         q_abs, q_rope[:, 0], ckv_arena, krope_arena, block_tables, attn_len,
         qk_dim=m.qk_nope_head_dim + m.qk_rope_head_dim)       # (S, H, r)

@@ -27,7 +27,8 @@ from repro.models.attention import (KVCache, cross_attention_kv,
 from repro.models.transformer import (_embed, _frontend_embed, _maybe_remat,
                                       _scan_mamba_span, _unembed_weight,
                                       decoder_layer_apply, hybrid_layout,
-                                      paged_decoder_layer_apply, Params)
+                                      paged_decoder_layer_apply,
+                                      paged_prefill_layer_apply, Params)
 from repro.models.modules import dense, rmsnorm
 
 Cache = Dict[str, Any]
@@ -38,6 +39,13 @@ Cache = Dict[str, Any]
 # the dense slot layout — their recurrent state is O(1) in sequence length,
 # so there is nothing to page.
 PAGED_FAMILIES = ("dense", "moe", "vlm", "encdec")
+
+# Families whose *prefill* can stream through the arena in chunks
+# (paged_prefill_step): pure text-token causal self-attention stacks.  vlm
+# prepends frontend rows that are not tokens and encdec needs the encoder
+# pass + cross K/V capture, so both keep the single-shot bucketed prefill
+# whose scratch dense cache is scattered into pages (paged_prefill_write).
+CHUNKED_PREFILL_FAMILIES = ("dense", "moe")
 
 
 def _stack_cache(proto, n: int):
@@ -152,6 +160,25 @@ def paged_prefill_write(arena: Dict[str, Any], layers_cache: KVCache,
             "v": put(arena["v"], layers_cache.v)}
 
 
+def _scan_paged_layers(body, x, params: Params, arena: Dict[str, Any]):
+    """Scan a decoder stack's layer body over per-layer arena pages,
+    splitting the layer axis for MoE models with a leading dense stack
+    (deepseek-v3).  ``body(h, (layer_p, k_pages, v_pages)) -> (h, (nk,
+    nv))``; returns (x, {"k": nk, "v": nv})."""
+    if "dense_layers" in params:
+        nd = jax.tree_util.tree_leaves(params["dense_layers"])[0].shape[0]
+        x, (hk, hv) = jax.lax.scan(
+            body, x, (params["dense_layers"], arena["k"][:nd],
+                      arena["v"][:nd]))
+        x, (tk, tv) = jax.lax.scan(
+            body, x, (params["layers"], arena["k"][nd:], arena["v"][nd:]))
+        return x, {"k": jnp.concatenate([hk, tk], axis=0),
+                   "v": jnp.concatenate([hv, tv], axis=0)}
+    x, (nk, nv) = jax.lax.scan(body, x, (params["layers"], arena["k"],
+                                         arena["v"]))
+    return x, {"k": nk, "v": nv}
+
+
 def paged_decode_step(params: Params, tokens: jnp.ndarray, cfg: ArchConfig,
                       state: Dict[str, Any], arena: Dict[str, Any],
                       block_tables: jnp.ndarray, kv_lens: jnp.ndarray,
@@ -192,22 +219,55 @@ def paged_decode_step(params: Params, tokens: jnp.ndarray, cfg: ArchConfig,
         x, (nk, nv) = jax.lax.scan(
             body, x, (params["layers"], arena["k"], arena["v"],
                       state["cross_k"], state["cross_v"]))
-    elif "dense_layers" in params:
-        # leading dense stack (deepseek-v3): split the layer axis
-        nd = jax.tree_util.tree_leaves(params["dense_layers"])[0].shape[0]
-        x, (hk, hv) = jax.lax.scan(
-            body, x, (params["dense_layers"], arena["k"][:nd],
-                      arena["v"][:nd]))
-        x, (tk, tv) = jax.lax.scan(
-            body, x, (params["layers"], arena["k"][nd:], arena["v"][nd:]))
-        nk = jnp.concatenate([hk, tk], axis=0)
-        nv = jnp.concatenate([hv, tv], axis=0)
+        new_arena = {"k": nk, "v": nv}
     else:
-        x, (nk, nv) = jax.lax.scan(
-            body, x, (params["layers"], arena["k"], arena["v"]))
+        x, new_arena = _scan_paged_layers(body, x, params, arena)
 
     x = rmsnorm(x, params["ln_f"], cfg.norm_eps)
-    return _lm_head(params, x[:, -1, :], cfg), {"k": nk, "v": nv}
+    return _lm_head(params, x[:, -1, :], cfg), new_arena
+
+
+def paged_prefill_step(params: Params, tokens: jnp.ndarray, cfg: ArchConfig,
+                       arena: Dict[str, Any], block_tables: jnp.ndarray,
+                       kv_lens: jnp.ndarray, chunk_lens: jnp.ndarray
+                       ) -> Tuple[jnp.ndarray, Dict[str, Any]]:
+    """One chunked-prefill step over every lane through the paged KV arena.
+
+    tokens: (S, C) int32 — one prompt chunk per lane, right-padded;
+    block_tables: (S, W) int32; kv_lens: (S,) rows already committed per
+    lane (the chunk's absolute start position); chunk_lens: (S,) valid
+    tokens in each lane's chunk — 0 skips the lane entirely (its padded
+    rows write to the trash block and its logits row is garbage the caller
+    ignores).  Each layer writes the chunk's K/V rows directly into the
+    lane's pages, then attends causally over everything written so far —
+    no dense scratch cache, no bucket-granularity copy, so prefill KV
+    traffic is exactly the chunk's real tokens.  Returns ((S, V) logits at
+    each lane's last valid chunk row, new arena).
+    """
+    fam = cfg.family
+    if fam not in CHUNKED_PREFILL_FAMILIES:
+        raise ValueError(f"family {fam!r} cannot prefill through the paged "
+                         f"arena in chunks (supported: "
+                         f"{CHUNKED_PREFILL_FAMILIES})")
+    S, C = tokens.shape
+    x = _embed(params, tokens, cfg)
+    positions = kv_lens[:, None] + jnp.arange(C)[None, :]
+
+    def body(h, xs):
+        layer_p, ak, av = xs
+        h, nk, nv = paged_prefill_layer_apply(
+            layer_p, h, positions, cfg, k_arena=ak, v_arena=av,
+            block_tables=block_tables, kv_lens=kv_lens,
+            chunk_lens=chunk_lens)
+        return h, (nk, nv)
+
+    body = _maybe_remat(body, cfg)
+    x, new_arena = _scan_paged_layers(body, x, params, arena)
+
+    x = rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    last = jnp.clip(chunk_lens - 1, 0, C - 1)
+    h_last = jnp.take_along_axis(x, last[:, None, None], axis=1)[:, 0, :]
+    return _lm_head(params, h_last, cfg), new_arena
 
 
 # ---------------------------------------------------------------------------

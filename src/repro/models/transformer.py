@@ -137,6 +137,36 @@ def paged_decoder_layer_apply(p: Params, x, positions, cfg: ArchConfig, *,
     return x, nk, nv
 
 
+def paged_prefill_layer_apply(p: Params, x, positions, cfg: ArchConfig, *,
+                              k_arena, v_arena, block_tables, kv_lens,
+                              chunk_lens):
+    """One decoder layer's chunked-prefill pass through the paged KV arena
+    (mirrors :func:`paged_decoder_layer_apply` widened to C causal rows per
+    lane; see models/attention.py::gqa_paged_prefill for the arena
+    contract).  Returns (x, new_k_arena, new_v_arena)."""
+    from repro.models.attention import gqa_paged_prefill, mla_paged_prefill
+
+    h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+    paged = dict(block_tables=block_tables, kv_lens=kv_lens,
+                 chunk_lens=chunk_lens)
+    if cfg.attention_type == "mla":
+        a, nk, nv = mla_paged_prefill(p["attn"], h, positions, cfg,
+                                      ckv_arena=k_arena, krope_arena=v_arena,
+                                      **paged)
+    else:
+        a, nk, nv = gqa_paged_prefill(p["attn"], h, positions, cfg,
+                                      k_arena=k_arena, v_arena=v_arena,
+                                      **paged)
+    x = x + a.astype(x.dtype)
+    h2 = rmsnorm(x, p["ln2"], cfg.norm_eps)
+    if "moe" in p:
+        f, _ = moe_apply(p["moe"], h2, cfg)
+    else:
+        f = mlp_apply(p["mlp"], h2, cfg)
+    x = x + f.astype(x.dtype)
+    return x, nk, nv
+
+
 # ---------------------------------------------------------------------------
 # model init
 # ---------------------------------------------------------------------------

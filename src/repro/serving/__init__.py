@@ -5,13 +5,18 @@ utilization argument).
   kv_pool    paged KV-cache block pool + the physical page arena (KVArena)
              it meters: fixed-size blocks, per-request block tables,
              alloc/extend/free, defrag that compacts storage in place
-  scheduler  request queue + continuous batching into fixed decode slots
-  engine     ServingEngine: jitted bucketed prefill + paged flash-decode
-             through per-slot block tables (dense vmapped decode for
-             recurrent-state families), every GEMM site routed through
-             the SARA dispatch layer
+  scheduler  request queue + continuous batching into fixed decode slots,
+             with chunk-incremental page reservations under chunked prefill
+  engine     ServingEngine: chunked paged prefill (ragged per-row lengths,
+             KV rows written straight into pages) or padded-bucket prefill,
+             plus paged flash-decode through per-slot block tables (dense
+             vmapped decode for recurrent-state families); every GEMM site
+             routed through the SARA dispatch layer
   metrics    TTFT / latency percentiles / tokens-per-second / slot
-             utilization / KV rows streamed per decode step
+             utilization / KV rows streamed per decode step / prefill KV
+             rows written vs the padded-bucket equivalent
+
+See docs/SERVING.md for the request lifecycle and page accounting.
 """
 
 from repro.serving.engine import EngineConfig, ServingEngine, sample_logits

@@ -7,12 +7,24 @@ Execution model
   decodes every step with one ``jit(vmap(decode_step))`` — per-slot scalar
   positions/lengths become per-lane under vmap, so heterogeneous sequence
   lengths coexist in one batched step with no model changes.
-* Prefill runs per admitted request at a small set of padded *bucket*
-  shapes (one XLA compilation per bucket): the prompt is right-padded and
-  the true ``length`` is passed as a traced scalar, which
-  ``serving.prefill`` uses to pick the real last-token logits and correct
-  the cache lengths.  SSM/hybrid families use exact-length prefill (their
-  recurrent state integrates every input token).
+* Prefill has two paths.  The *bucketed* default runs per admitted request
+  at a small set of padded bucket shapes (one XLA compilation per bucket):
+  the prompt is right-padded and the true ``length`` is passed as a traced
+  scalar, which ``serving.prefill`` uses to pick the real last-token
+  logits and correct the cache lengths.  SSM/hybrid families use
+  exact-length prefill (their recurrent state integrates every input
+  token).  Under ``EngineConfig.prefill_chunk`` (paged layout, dense/moe
+  families) prefill is instead *chunked and paged*: every step runs ONE
+  ragged batch over all mid-prefill lanes, each contributing up to
+  ``prefill_chunk`` of its remaining context (per-row lengths — one batch
+  carries heterogeneous prompts; rows past a lane's length land in the
+  write-discard page exactly like stalled decode lanes).  Chunk KV rows
+  are written straight into the lane's pool pages — no dense scratch
+  cache, no bucket-granularity copy — so prefill KV traffic scales with
+  real prompt tokens, a long prompt streams over several steps instead of
+  monopolizing one, and a short prompt admitted alongside gets its first
+  token after one cheap chunk batch (TTFT is stamped per chunk
+  completion).
 * Every GEMM the model runs goes through the SARA dispatch layer
   (``repro.dispatch``): each prefill/decode entry point traces under a
   named registry scope with this engine's dispatcher active, so the tile
@@ -37,9 +49,11 @@ Execution model
   ``sum_lane ceil(kv_len / block_size)`` pages — it scales with live
   tokens, not ``num_slots * max_len``.  The table width shipped to the
   kernel each step is the max live page count rounded up to a power of
-  two (one compilation per width bucket).  Prefill still runs at padded
-  bucket shapes into a scratch dense cache whose first pages are then
-  scattered into the arena at bucket granularity.  Slot KV
+  two (one compilation per width bucket).  Bucketed prefill runs at
+  padded bucket shapes into a scratch dense cache whose first pages are
+  then scattered into the arena at bucket granularity; chunked prefill
+  (``prefill_chunk``) skips the scratch cache entirely and writes chunk
+  rows straight into pages.  Slot KV
   snapshot/restore disappears: stalled lanes simply don't commit (their
   new-token KV is routed to the arena's trailing write-discard page) and
   preemption frees pages without copying anything.  ``"dense"`` keeps the
@@ -135,12 +149,22 @@ def gemm_sites(cfg: ArchConfig, m_tokens: int) -> List[Tuple[str, int, int, int]
 
 @dataclass
 class EngineConfig:
+    """Serving-engine knobs (model-independent; the architecture comes from
+    the ``ArchConfig`` the engine is built with).
+
+    The defaults serve small CPU traces; production settings raise
+    ``num_slots`` / ``max_len`` / ``num_blocks`` and leave the backend-aware
+    ``"auto"`` selectors alone so the same config runs compiled Pallas +
+    paged KV on TPU and XLA + dense KV elsewhere.  See ``docs/SERVING.md``
+    for the request lifecycle each field participates in.
+    """
+
     num_slots: int = 4
     max_len: int = 96                 # per-slot token capacity (prompt+gen+1)
     block_size: int = 16              # KV pool page size (tokens)
     num_blocks: Optional[int] = None  # KV budget; None = full slot capacity
     buckets: Optional[Sequence[int]] = None   # prefill shapes; None = pow2
-    max_prefills_per_step: int = 1
+    max_prefills_per_step: int = 1    # admissions per engine step
     reserve: str = "full"             # "full" | "incremental"
     temperature: float = 0.0
     top_k: int = 0
@@ -158,9 +182,30 @@ class EngineConfig:
     # win), dense elsewhere — at CPU-test capacities the paged path's
     # fixed per-step overheads outweigh the rows it skips.
     kv_layout: str = "auto"           # "auto" | "paged" | "dense"
+    # Chunked paged prefill: stream each prompt into the arena
+    # ``prefill_chunk`` tokens per engine step instead of one padded-bucket
+    # call per request.  One ragged batch carries every mid-prefill lane
+    # (per-row lengths; short prompts finish in one chunk while long ones
+    # keep streaming), KV rows land directly in pages (no dense scratch
+    # cache, no bucket-granularity copy), and a long prompt no longer
+    # monopolizes a step.  Requires the paged layout and a
+    # CHUNKED_PREFILL_FAMILIES family (dense/moe); None keeps the padded
+    # bucketed prefill.
+    prefill_chunk: Optional[int] = None
 
 
 class ServingEngine:
+    """Continuous-batching inference engine over the repro model stack.
+
+    Construct with an ``ArchConfig`` (what model) and an ``EngineConfig``
+    (how to serve it); ``submit()`` requests and drive ``step()`` until it
+    returns False, or use ``run()`` for a whole request set.  Telemetry
+    comes out of ``summary()`` / ``metrics`` / ``dispatch_stats()`` and
+    the executed per-site tile plan out of ``gemm_plan``.  See the module
+    docstring for the execution model and ``docs/SERVING.md`` for the
+    request lifecycle (admit -> [chunked] prefill -> paged decode ->
+    retire/preempt) and the KV page accounting."""
+
     def __init__(self, cfg: ArchConfig, engine: EngineConfig = None,
                  params=None, dispatcher: Optional[SaraDispatcher] = None):
         from repro.models.api import build_model
@@ -187,6 +232,24 @@ class ServingEngine:
                 f"slot layout; kv_layout='paged' supports {PAGED_FAMILIES}")
         self.kv_layout = layout
 
+        self.prefill_chunk = e.prefill_chunk
+        if self.prefill_chunk is not None:
+            from repro.models.serving import CHUNKED_PREFILL_FAMILIES
+            if self.prefill_chunk < 1:
+                raise ValueError("prefill_chunk must be >= 1")
+            # no prompt exceeds max_len, so a larger chunk would only pad
+            # the batch with dead query rows the kernel still computes
+            self.prefill_chunk = min(self.prefill_chunk, e.max_len)
+            if layout != "paged":
+                raise ValueError(
+                    "prefill_chunk streams prompts directly into KV pages; "
+                    "it requires kv_layout='paged' (got "
+                    f"{self.kv_layout!r})")
+            if cfg.family not in CHUNKED_PREFILL_FAMILIES:
+                raise ValueError(
+                    f"family {cfg.family!r} keeps the bucketed prefill "
+                    f"(chunked prefill supports {CHUNKED_PREFILL_FAMILIES})")
+
         # vlm frontend rows share the per-slot KV cache; under the paged
         # layout they live in pool pages, so reservations must cover them
         self._fe_rows = (cfg.frontend.num_tokens
@@ -200,7 +263,7 @@ class ServingEngine:
         self.sched = ContinuousScheduler(
             e.num_slots, self.pool,
             max_prefills_per_step=e.max_prefills_per_step, reserve=e.reserve,
-            token_overhead=row_overhead)
+            token_overhead=row_overhead, prefill_chunk=self.prefill_chunk)
         self._last_tok = np.zeros((e.num_slots, 1), np.int32)
         self._prefill = jax.jit(self.model.prefill)
 
@@ -223,6 +286,8 @@ class ServingEngine:
             self._kv_rows = np.zeros((e.num_slots,), np.int32)
             self._paged_decode = jax.jit(self.model.paged_decode_step)
             self._paged_write = jax.jit(self.model.paged_prefill_write)
+            if self.prefill_chunk is not None:
+                self._chunk_prefill = jax.jit(self.model.paged_prefill_step)
             self._cache = None
         else:
             # stacked per-slot caches: leading axis = slot, lane batch=1
@@ -312,6 +377,10 @@ class ServingEngine:
 
     # -- request lifecycle ----------------------------------------------------
     def submit(self, req: Request) -> None:
+        if req.prompt_len < 1:
+            raise ValueError(f"request {req.rid}: prompt must be non-empty "
+                             "(there is no last-token position to sample "
+                             "the first token from)")
         if req.max_new_tokens < 1:
             raise ValueError(f"request {req.rid}: max_new_tokens must be >= 1 "
                              "(prefill always yields the first token)")
@@ -338,9 +407,7 @@ class ServingEngine:
 
     def _do_prefill(self, req: Request) -> None:
         e, cfg = self.ecfg, self.cfg
-        context = np.concatenate(
-            [req.prompt, np.asarray(req.generated, np.int32)]) \
-            if req.generated else req.prompt
+        context = req.context()
         n = int(context.shape[0])
         bucket = self.bucket_for(n)
         toks = np.zeros((1, bucket), np.int32)
@@ -367,7 +434,7 @@ class ServingEngine:
         with self._dispatch_scope(scope):
             logits, new_cache = jax.block_until_ready(self._prefill(
                 self.params, batch, fresh, jnp.int32(n)))
-        self.metrics.on_prefill(n, time.time() - t0)
+        dt = time.time() - t0
         self._dispatch(scope)
         if self.kv_layout == "paged":
             # commit the prefilled KV rows into this request's pool pages
@@ -380,13 +447,19 @@ class ServingEngine:
                 self.arena.leaves, new_cache["layers"],
                 jnp.asarray(table[:nblk], jnp.int32))
             self._kv_rows[req.slot] = rows
+            self.metrics.on_prefill(
+                n, dt, kv_write_rows=nblk * e.block_size,
+                kv_write_rows_padded=bucket + self._fe_rows)
             if cfg.family == "encdec":
                 self._state["cross_k"] = self._state["cross_k"].at[
                     :, req.slot].set(new_cache["cross_k"][:, 0])
                 self._state["cross_v"] = self._state["cross_v"].at[
                     :, req.slot].set(new_cache["cross_v"][:, 0])
         else:
+            self.metrics.on_prefill(n, dt)
             self._slot_restore(req.slot, new_cache)
+        req.prefill_pos = n
+        req.prefilling = False
 
         self._key, k = jax.random.split(self._key)
         tok = int(np.asarray(sample_logits(
@@ -397,6 +470,104 @@ class ServingEngine:
         if first and req.t_first_token < 0:
             req.t_first_token = self.now()
             self.metrics.on_first_token(req.arrival_time, req.t_first_token)
+
+    def _do_chunk_prefills(self) -> None:
+        """One chunked-prefill step over every mid-prefill lane.
+
+        The batch is ragged: each lane contributes up to ``prefill_chunk``
+        of its remaining context (per-row lengths), lanes with nothing to
+        stream (or whose page extension stalled) ride along with a zero
+        chunk — their rows write to the arena's trash page and their
+        logits row is ignored.  KV rows land directly in the lane's pool
+        pages; there is no dense scratch cache and no bucket-granularity
+        copy, so prefill writes scale with real prompt tokens.  A lane
+        whose final chunk lands here samples its first token (TTFT is
+        stamped per chunk completion, so short prompts admitted alongside
+        long ones stop waiting on the long prefill)."""
+        e = self.ecfg
+        C, S = self.prefill_chunk, e.num_slots
+        lanes = {s: r for s, r in self.sched.active.items() if r.prefilling}
+        if not lanes:
+            return
+        toks = np.zeros((S, C), np.int32)
+        chunk = np.zeros((S,), np.int32)
+        for slot, req in sorted(lanes.items()):
+            n = min(C, req.context_len - req.prefill_pos)
+            # the coming chunk writes n KV rows: the block table must cover
+            # them (chunk-incremental reservation extends here; a failed
+            # extension stalls the lane's prefill until pages free up)
+            if not self.sched.grow(req, req.prefill_pos + n):
+                self.metrics.stalls += 1
+                continue
+            ctx = req.context()
+            toks[slot, :n] = ctx[req.prefill_pos:req.prefill_pos + n]
+            chunk[slot] = n
+        if not chunk.any():
+            return                       # every prefilling lane stalled
+        kv = np.where(chunk > 0, self._kv_rows, 0).astype(np.int32)
+        # fixed table width -> the chunk step compiles exactly once.  Unlike
+        # decode (where narrow tables ARE the read-scaling win), a chunk
+        # must attend over its lane's whole prefix anyway, and dead table
+        # columns cost (almost) nothing in the kernel: the DMA is elided
+        # for repeated trailing ids and `j*bs < kv_len` skips the compute.
+        width = self._max_blocks_per_slot
+        rids = [lanes[s].rid if chunk[s] > 0 else None for s in range(S)]
+        tables = self.pool.dense_block_table(rids, width)
+
+        scope = "prefill_chunk"
+        t0 = time.time()
+        with self._dispatch_scope(scope):
+            logits, leaves = jax.block_until_ready(self._chunk_prefill(
+                self.params, jnp.asarray(toks), self.arena.leaves,
+                jnp.asarray(tables), jnp.asarray(kv), jnp.asarray(chunk)))
+        dt = time.time() - t0
+        self.arena.leaves = leaves
+        self._dispatch(scope)
+
+        total = int(chunk.sum())
+        # padded-bucket equivalent accrues proportionally per chunk
+        # (telescoping integer shares that sum to bucket_for(ctx) over a
+        # complete stream), so a request preempted mid-prefill has
+        # contributed to both sides of the reduction ratio symmetrically —
+        # and contributes again when it re-streams after readmission
+        padded = 0
+        for slot, req in lanes.items():
+            n = int(chunk[slot])
+            if n == 0:
+                continue
+            ctx, pos = req.context_len, req.prefill_pos
+            b = self.bucket_for(ctx)
+            padded += (b * (pos + n)) // ctx - (b * pos) // ctx
+        self.metrics.on_prefill(total, dt, kv_write_rows=total,
+                                kv_write_rows_padded=padded)
+        # only a lane whose FINAL chunk landed this step consumes logits;
+        # skip the key split + sampling entirely when none did (keeps the
+        # hot loop lean and the RNG stream free of discarded draws)
+        sampled = None
+        if any(chunk[s] and r.prefill_pos + chunk[s] >= r.context_len
+               for s, r in lanes.items()):
+            self._key, k = jax.random.split(self._key)
+            sampled = np.asarray(sample_logits(
+                k, logits, e.temperature, e.top_k))
+        for slot, req in sorted(lanes.items()):
+            n = int(chunk[slot])
+            if n == 0:
+                continue
+            req.prefill_pos += n
+            self._kv_rows[slot] += n
+            if req.prefill_pos < req.context_len:
+                continue                 # more chunks to stream next step
+            req.prefilling = False
+            tok = int(sampled[slot])
+            first = not req.generated
+            req.generated.append(tok)
+            self._last_tok[slot, 0] = tok
+            if first and req.t_first_token < 0:
+                req.t_first_token = self.now()
+                self.metrics.on_first_token(req.arrival_time,
+                                            req.t_first_token)
+            if req.done():
+                self._retire(req)
 
     def _retire(self, req: Request) -> None:
         slot = req.slot
@@ -423,20 +594,28 @@ class ServingEngine:
 
     # -- main loop ------------------------------------------------------------
     def step(self) -> bool:
-        """One engine step: admissions+prefills, then one batched decode.
-        Returns False when there is nothing left to do."""
+        """One engine step: admissions + prefill work (one padded-bucket
+        call per admitted request, or one ragged chunk batch over every
+        mid-prefill lane under chunked prefill), then one batched decode
+        over the fully-prefilled lanes.  Returns False when there is
+        nothing left to do."""
         if self.sched.idle():
             return False
         plan = self.sched.plan(self.now())
-        for req in plan.prefills:
-            self._do_prefill(req)
-            if req.done():
-                self._retire(req)
+        if self.prefill_chunk is not None:
+            self._do_chunk_prefills()
+        else:
+            for req in plan.prefills:
+                self._do_prefill(req)
+                if req.done():
+                    self._retire(req)
 
-        # a request can finish at prefill (first token == budget/EOS), so
-        # re-check the planned decode slots against the live set
+        # a request can finish at prefill (first token == budget/EOS) and
+        # chunked lanes may still be mid-prefill, so re-check the planned
+        # decode slots against the live, fully-prefilled set
         active = {s: self.sched.active[s] for s in plan.decode_slots
-                  if s in self.sched.active}
+                  if s in self.sched.active
+                  and not self.sched.active[s].prefilling}
         if active:
             # decide stalls BEFORE decoding: the coming step writes the KV of
             # each lane's pending token, so its block table must cover
@@ -487,9 +666,12 @@ class ServingEngine:
                 len(active), self.ecfg.num_slots, committed, dt,
                 kv_read_tokens=kv_read,
                 kv_read_tokens_dense=self._dense_kv_rows)
-            if self.sched.active and \
-                    all(r.stalled for r in self.sched.active.values()):
-                self._preempt_newest()
+        # every live lane stalled — whether on a decode-step block-table
+        # extension or a prefill-chunk one — preempt the newest request so
+        # the rest can make progress
+        if self.sched.active and \
+                all(r.stalled for r in self.sched.active.values()):
+            self._preempt_newest()
         self._vtime += 1.0
         return True
 
@@ -501,7 +683,11 @@ class ServingEngine:
         wm = np.zeros((S,), np.int32)
         for slot, req in active.items():
             wm[slot] = 0 if req.stalled else 1
-        kv = self._kv_rows.astype(np.int32)
+        # lanes outside the decode set (empty slots, mid-prefill lanes
+        # under chunked prefill) contribute no pages: length 0 masks them
+        # in the kernel and their rows are never streamed
+        kv = np.where([s in active for s in range(S)],
+                      self._kv_rows, 0).astype(np.int32)
         # pages each lane touches this step (stalled lanes attend without
         # their pending token; empty lanes touch nothing)
         need = [self.pool.blocks_for(int(kv[s]) + int(wm[s]))
@@ -511,8 +697,7 @@ class ServingEngine:
         # columns, which is what makes decode cost track live tokens
         width = KVBlockPool.table_width(max(need),
                                         self._max_blocks_per_slot)
-        rids = [self.sched.active[s].rid if s in self.sched.active else None
-                for s in range(S)]
+        rids = [active[s].rid if s in active else None for s in range(S)]
         tables = self.pool.dense_block_table(rids, width)
         toks = jnp.asarray(self._last_tok)                   # (S, 1)
         t0 = time.time()

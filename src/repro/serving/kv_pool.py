@@ -90,7 +90,17 @@ class BlockTable:
 
 
 class KVBlockPool:
-    """Fixed-size-block KV allocator with per-request block tables."""
+    """Fixed-size-block KV allocator with per-request block tables.
+
+    The admission-control half of paged KV: ``alloc`` / ``extend`` /
+    ``free`` move blocks between the free list and per-request
+    :class:`BlockTable`\\ s, ``can_alloc`` / ``blocks_for`` answer the
+    scheduler's budget questions, ``dense_block_table`` materializes the
+    (slots, width) int32 tables the paged kernels consume, and ``defrag``
+    compacts live blocks to the front (mirroring moves into the bound
+    :class:`KVArena`'s storage when one is attached via ``bind_arena``).
+    ``check()`` asserts the ownership invariants; tests call it after
+    every scenario."""
 
     def __init__(self, num_blocks: int, block_size: int):
         if num_blocks <= 0 or block_size <= 0:

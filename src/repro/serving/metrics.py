@@ -37,6 +37,11 @@ class ServingMetrics:
     # over full slot capacity would stream (the paged-arena win)
     kv_read_tokens: int = 0
     kv_read_tokens_dense: int = 0
+    # KV rows prefill actually wrote into pages vs the padded-bucket
+    # equivalent (the chunked-prefill win: writes scale with real prompt
+    # tokens, not bucket shapes)
+    prefill_kv_write_rows: int = 0
+    prefill_kv_write_rows_padded: int = 0
 
     # -- recording ------------------------------------------------------------
     def on_first_token(self, arrival: float, t: float) -> None:
@@ -47,9 +52,17 @@ class ServingMetrics:
         self.queue_delay.append(admit - arrival)
         self.completed += 1
 
-    def on_prefill(self, tokens: int, seconds: float) -> None:
+    def on_prefill(self, tokens: int, seconds: float,
+                   kv_write_rows: int = 0,
+                   kv_write_rows_padded: int = 0) -> None:
+        """One prefill call (a whole padded bucket, or one chunk batch).
+        ``kv_write_rows`` counts KV rows committed to the paged arena;
+        ``kv_write_rows_padded`` is what the padded-bucket path streams for
+        the same work (bucket-shape rows per request)."""
         self.prefill_tokens += tokens
         self.prefill_s += seconds
+        self.prefill_kv_write_rows += kv_write_rows
+        self.prefill_kv_write_rows_padded += kv_write_rows_padded
 
     def on_decode_step(self, active: int, slots: int, tokens: int,
                        seconds: float, kv_read_tokens: int = 0,
@@ -87,6 +100,12 @@ class ServingMetrics:
             "kv_read_reduction_x": (self.kv_read_tokens_dense
                                     / max(self.kv_read_tokens, 1)
                                     if self.kv_read_tokens_dense else 1.0),
+            "prefill_kv_write_rows": self.prefill_kv_write_rows,
+            "prefill_kv_write_rows_padded": self.prefill_kv_write_rows_padded,
+            "prefill_kv_write_reduction_x": (
+                self.prefill_kv_write_rows_padded
+                / max(self.prefill_kv_write_rows, 1)
+                if self.prefill_kv_write_rows_padded else 1.0),
         }
         if sara_cache:
             hits = sara_cache.get("hits", 0)

@@ -37,6 +37,14 @@ from repro.serving.kv_pool import KVBlockPool, PoolError
 
 @dataclass
 class Request:
+    """One serving request: immutable inputs + engine-owned runtime state.
+
+    ``prompt`` is the (prompt_len,) int32 token array; ``extras`` carries
+    per-request model inputs for the non-text families (vlm patch embeds,
+    encdec source features) at batch size 1.  The engine mutates the
+    runtime fields; callers should treat them as read-only telemetry.
+    """
+
     rid: str
     prompt: np.ndarray                  # (prompt_len,) int32
     max_new_tokens: int
@@ -48,6 +56,12 @@ class Request:
     generated: List[int] = field(default_factory=list)
     slot: int = -1
     stalled: bool = False
+    # prefill phase: ``prefilling`` is set at admission and cleared when the
+    # prefill completes (bucketed: same step; chunked: after the final
+    # chunk); ``prefill_pos`` counts context tokens already streamed into
+    # the cache during the current prefill
+    prefilling: bool = False
+    prefill_pos: int = 0
     t_admit: float = -1.0
     t_first_token: float = -1.0
     t_done: float = -1.0
@@ -61,6 +75,15 @@ class Request:
         """Tokens a (re-)prefill must cover: prompt plus anything already
         generated before a preemption."""
         return self.prompt_len + len(self.generated)
+
+    def context(self) -> np.ndarray:
+        """The (context_len,) token array a (re-)prefill streams — the
+        recompute-on-readmit contract shared by the bucketed and chunked
+        prefill paths."""
+        if not self.generated:
+            return self.prompt
+        return np.concatenate(
+            [self.prompt, np.asarray(self.generated, np.int32)])
 
     def done(self) -> bool:
         if len(self.generated) >= self.max_new_tokens:
@@ -76,9 +99,23 @@ class StepPlan:
 
 
 class ContinuousScheduler:
+    """Admission control for the serving engine: maps queued requests to
+    decode slots and meters their KV pages through the shared
+    :class:`~repro.serving.kv_pool.KVBlockPool`.
+
+    ``prefill_chunk`` (when the engine streams prompts in chunks) makes
+    incremental-mode page reservations *chunk-incremental*: admission
+    reserves only the first chunk's pages and each later chunk extends the
+    table via :meth:`grow`, so a request preempted mid-prefill frees
+    exactly the pages it has written — not a full-prompt reservation it
+    never used.  Full-prompt reservation at admission (the pre-chunking
+    behaviour) assumed the whole prompt lands in pages the same step it is
+    admitted."""
+
     def __init__(self, num_slots: int, pool: KVBlockPool,
                  max_prefills_per_step: int = 1, reserve: str = "full",
-                 token_overhead: int = 0):
+                 token_overhead: int = 0,
+                 prefill_chunk: Optional[int] = None):
         if reserve not in ("full", "incremental"):
             raise ValueError(reserve)
         self.num_slots = num_slots
@@ -90,6 +127,7 @@ class ContinuousScheduler:
         # arena stores them in pool pages (0 under the dense layout, where
         # that overhead lives outside the metered budget)
         self.token_overhead = token_overhead
+        self.prefill_chunk = prefill_chunk
         self.waiting: deque = deque()
         self.active: Dict[int, Request] = {}
         self._free_slots = list(range(num_slots - 1, -1, -1))
@@ -108,6 +146,13 @@ class ContinuousScheduler:
     def _reservation(self, req: Request) -> int:
         if self.reserve == "full":
             return self.token_overhead + req.prompt_len + req.max_new_tokens + 1
+        if self.prefill_chunk:
+            # chunk-incremental: admission covers only the first chunk's
+            # rows (+ the per-request overhead); every later chunk and
+            # decoded token extends through grow(), so mid-prefill
+            # preemption frees exactly what was written
+            return self.token_overhead + min(self.prefill_chunk,
+                                             req.context_len)
         return self.token_overhead + req.context_len + 1
 
     def plan(self, now: float = float("inf")) -> StepPlan:
@@ -123,6 +168,8 @@ class ContinuousScheduler:
             self.waiting.popleft()
             req.slot = self._free_slots.pop()
             req.t_admit = now if now != float("inf") else req.arrival_time
+            req.prefilling = True
+            req.prefill_pos = 0
             self.pool.alloc(req.rid, self._reservation(req))
             self.active[req.slot] = req
             prefills.append(req)
@@ -168,5 +215,7 @@ class ContinuousScheduler:
         self._free_slots.append(req.slot)
         req.slot = -1
         req.stalled = False
+        req.prefilling = False       # recompute-on-readmit streams anew
+        req.prefill_pos = 0
         req.t_done = -1.0
         self.waiting.appendleft(req)
