@@ -141,7 +141,9 @@ def run(n_requests: int = 12, slots: int = 4, seed: int = 0,
          "value": round(probe_ratio, 5),
          "derived": f"{M}x{K}x{N} (N>10^4: unrepresentable pre-logbucket)"},
     ]
-    return emit(rows, "bench_adaptnet_serving")
+    return emit(rows, "bench_adaptnet_serving",
+                config={"n_requests": n_requests, "slots": slots,
+                        "seed": seed, "samples": samples, "epochs": epochs})
 
 
 if __name__ == "__main__":

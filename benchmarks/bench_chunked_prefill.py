@@ -124,6 +124,9 @@ def run(n_long: int = 2, n_short: int = 6, long_len: int = 384,
             {"name": f"bench_chunked_prefill.{name}.gemm_shapes_executed",
              "value": div["executed"],
              "derived": "distinct (M,K,N) in the site registry"},
+            {"name": f"bench_chunked_prefill.{name}.jit_compiles",
+             "value": eng.dispatch_stats()["jit_compiles"],
+             "derived": "engine-level retraces (JitWatch counter)"},
         ]
     # greedy parity across all three variants rides along with the numbers
     for name in ("bucketed_paged", "chunked_paged"):
@@ -131,7 +134,10 @@ def run(n_long: int = 2, n_short: int = 6, long_len: int = 384,
             np.testing.assert_array_equal(outputs[name][rid], toks)
     rows.append({"name": "bench_chunked_prefill.greedy_parity", "value": 1,
                  "derived": "all variants emit identical tokens"})
-    return emit(rows, "bench_chunked_prefill")
+    return emit(rows, "bench_chunked_prefill",
+                config={"n_long": n_long, "n_short": n_short,
+                        "long_len": long_len, "short_len": short_len,
+                        "chunk": chunk, "arch": ARCH})
 
 
 def smoke():
@@ -155,9 +161,16 @@ def smoke():
     s = eng_c.summary()
     assert s["prefill_kv_write_rows"] == sum(plens), s
     assert s["prefill_kv_write_reduction_x"] > 1.0, s
+    # compile accounting (always-on JitWatch counter): a fresh engine must
+    # have traced at least chunk-prefill + paged-decode once, and the count
+    # must be bounded — chunking standardizes prefill GEMM shapes, so
+    # retraces cannot exceed one per engine entry point per width bucket
+    compiles = eng_c.dispatch_stats()["jit_compiles"]
+    assert 2 <= compiles <= 16, f"jit_compiles={compiles}"
     print(f"chunked-prefill smoke OK (greedy parity, kv writes "
           f"{s['prefill_kv_write_rows']} rows == real prompt tokens, "
-          f"{s['prefill_kv_write_reduction_x']:.2f}x under bucketed)")
+          f"{s['prefill_kv_write_reduction_x']:.2f}x under bucketed, "
+          f"{compiles} jit compiles)")
 
 
 def main():

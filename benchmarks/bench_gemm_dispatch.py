@@ -103,7 +103,7 @@ def run(smoke: bool = False, arch: str = "llama3.2-1b"):
     if smoke:
         assert max_err < 1e-4, f"dispatch parity broke: {max_err}"
         print(f"# dispatch smoke OK (max err {max_err:.2e})")
-    return emit(rows, "gemm_dispatch")
+    return emit(rows, "gemm_dispatch", config={"arch": arch, "smoke": smoke})
 
 
 if __name__ == "__main__":

@@ -45,4 +45,4 @@ def run():
     rows.append({"name": "kernels.adaptnetx.max_err",
                  "value": float(jnp.max(jnp.abs(lg - gold))),
                  "derived": f"cycles@1GHz={AdaptNetXDesign().cycles(108)}"})
-    return emit(rows, "kernels")
+    return emit(rows, "kernels", config={"shapes": "512^3,2048x1024x256,300x7000x120"})

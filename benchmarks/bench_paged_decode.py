@@ -122,7 +122,9 @@ def run(slots: int = 4, capacity: int = 256, block_size: int = 16,
              "value": round(d_ms / max(p_ms, 1e-9), 3),
              "derived": "dense_ms / paged_ms (>1 = paged faster)"},
         ]
-    return emit(rows, "bench_paged_decode")
+    return emit(rows, "bench_paged_decode",
+                config={"slots": slots, "capacity": capacity,
+                        "block_size": block_size, "steps": steps})
 
 
 def smoke():

@@ -19,4 +19,4 @@ def run():
         rows.append({"name": f"sara_tpu.shard_plan.{dims[0]}x{dims[1]}x{dims[2]}",
                      "value": p.name,
                      "derived": f"t={p.time_s:.2e}s comm={p.comm_bytes:.2e}B"})
-    return emit(rows, "sara_tpu")
+    return emit(rows, "sara_tpu", config={"n_samples": 120_000, "epochs": 12})

@@ -142,7 +142,9 @@ def run(n_requests: int = 12, slots: int = 4, seed: int = 0):
                  "value": round(1.0 - cont["decode_steps"]
                                 / max(wave["decode_steps"], 1), 4),
                  "derived": "fewer decode steps vs wave"})
-    return emit(rows, "bench_serving")
+    return emit(rows, "bench_serving",
+                config={"n_requests": n_requests, "slots": slots,
+                        "seed": seed})
 
 
 if __name__ == "__main__":

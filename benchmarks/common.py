@@ -1,17 +1,77 @@
-"""Shared benchmark helpers: timing + row emission."""
+"""Shared benchmark helpers: timing, row emission, and the standardized
+result schema.
+
+Every benchmark emits two artifacts under ``benchmarks/results/``:
+
+  * ``<name>.json`` — the legacy CSV-mirror row list (kept for
+    EXPERIMENTS.md citations);
+  * ``<name>.result.json`` — the standardized schema
+    ``{name, schema, config, metrics, suite_rev}`` that
+    ``benchmarks/run.py --aggregate`` merges into the perf-trajectory
+    file (``results/trajectory.jsonl``), so the repo's performance
+    history is reconstructable instead of living in commit messages.
+
+``emit(rows, name, config=...)`` writes both: ``metrics`` is derived
+from the rows (``{row name: value}``), ``config`` is whatever knobs the
+benchmark ran with, and ``suite_rev`` is the git revision (``unknown``
+outside a checkout).
+"""
 import json
+import subprocess
 import time
 from pathlib import Path
 
 RESULTS_DIR = Path(__file__).parent / "results"
 RESULTS_DIR.mkdir(exist_ok=True)
 
+SCHEMA_VERSION = 1
 
-def emit(rows, name):
-    """Print CSV rows (name,value,derived) and persist JSON."""
+
+def suite_rev() -> str:
+    """Short git revision of the benchmark suite (or 'unknown')."""
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            cwd=Path(__file__).parent, capture_output=True, text=True,
+            timeout=10)
+        return out.stdout.strip() or "unknown"
+    except (OSError, subprocess.SubprocessError):
+        return "unknown"
+
+
+def write_result(name: str, metrics: dict, config: dict = None) -> dict:
+    """Persist one standardized benchmark result document."""
+    doc = {"name": name, "schema": SCHEMA_VERSION,
+           "config": config or {}, "metrics": metrics,
+           "suite_rev": suite_rev()}
+    (RESULTS_DIR / f"{name}.result.json").write_text(
+        json.dumps(doc, indent=1))
+    return doc
+
+
+def validate_result(doc) -> list:
+    """Schema check for a standardized result document (tests + the
+    aggregator use this); returns a list of problems (empty = valid)."""
+    errs = []
+    if not isinstance(doc, dict):
+        return ["result must be an object"]
+    for key, typ in (("name", str), ("config", dict), ("metrics", dict),
+                     ("suite_rev", str)):
+        if not isinstance(doc.get(key), typ):
+            errs.append(f"missing or wrong-type field {key!r}")
+    for k, v in (doc.get("metrics") or {}).items():
+        if not isinstance(v, (int, float, str, type(None))):
+            errs.append(f"metric {k!r} is not a scalar")
+    return errs
+
+
+def emit(rows, name, config: dict = None):
+    """Print CSV rows (name,value,derived), persist the legacy row JSON,
+    and write the standardized ``<name>.result.json``."""
     for r in rows:
         print(f"{r['name']},{r['value']},{r.get('derived','')}")
     (RESULTS_DIR / f"{name}.json").write_text(json.dumps(rows, indent=1))
+    write_result(name, {r["name"]: r["value"] for r in rows}, config)
     return rows
 
 

@@ -1,12 +1,62 @@
 """Benchmark harness: one function per paper table/figure.
 
 Prints ``name,value,derived`` CSV rows; JSON persisted per figure under
-benchmarks/results/ (EXPERIMENTS.md cites these).
+benchmarks/results/ (EXPERIMENTS.md cites these).  Each benchmark also
+writes the standardized ``<name>.result.json`` schema
+(``{name, config, metrics, suite_rev}`` — see ``benchmarks/common.py``);
+``aggregate()`` merges every standardized result into
+``results/trajectory.jsonl`` (one line per suite snapshot) so the perf
+history of the repo accumulates across revisions instead of being
+overwritten in place.
+
+  python -m benchmarks.run               # full suite + aggregate
+  python -m benchmarks.run --aggregate   # only merge existing results
 """
+import argparse
+import json
 import time
+from pathlib import Path
+
+
+def aggregate(quiet: bool = False) -> dict:
+    """Merge benchmarks/results/*.result.json into one trajectory
+    snapshot appended to results/trajectory.jsonl.  Invalid documents
+    are reported and skipped, never silently merged."""
+    from benchmarks.common import RESULTS_DIR, suite_rev, validate_result
+
+    snapshot = {"record": "suite_snapshot", "suite_rev": suite_rev(),
+                "wall_time": time.time(), "results": {}}
+    skipped = []
+    for path in sorted(RESULTS_DIR.glob("*.result.json")):
+        doc = json.loads(path.read_text())
+        errs = validate_result(doc)
+        if errs:
+            skipped.append((path.name, errs))
+            continue
+        snapshot["results"][doc["name"]] = {"config": doc["config"],
+                                            "metrics": doc["metrics"],
+                                            "suite_rev": doc["suite_rev"]}
+    out = Path(RESULTS_DIR) / "trajectory.jsonl"
+    with out.open("a") as f:
+        f.write(json.dumps(snapshot) + "\n")
+    if not quiet:
+        print(f"# trajectory: {len(snapshot['results'])} results "
+              f"@ {snapshot['suite_rev']} -> {out}")
+        for name, errs in skipped:
+            print(f"# trajectory: SKIPPED {name}: {'; '.join(errs)}")
+    return snapshot
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--aggregate", action="store_true",
+                    help="only merge existing results/*.result.json into "
+                         "the trajectory file (no benchmarks run)")
+    args = ap.parse_args()
+    if args.aggregate:
+        aggregate()
+        return
+
     t0 = time.time()
     from benchmarks import (bench_adaptnet_serving, bench_chunked_prefill,
                             bench_gemm_dispatch, bench_kernels,
@@ -32,6 +82,7 @@ def main() -> None:
     bench_paged_decode.run()
     bench_chunked_prefill.run()
     bench_adaptnet_serving.run()
+    aggregate()
     print(f"# benchmarks done in {time.time() - t0:.0f}s")
 
 

@@ -16,6 +16,12 @@ python -m pytest -x -q
 echo "== serving smoke =="
 python -m repro.launch.serve --arch llama3.2-1b --smoke
 
+echo "== trace smoke (serve --trace-out -> schema + category validation) =="
+TRACE_SMOKE="$(mktemp -d)/trace.json"
+python -m repro.launch.serve --arch llama3.2-1b --smoke \
+    --trace-out "$TRACE_SMOKE"
+python scripts/check_trace.py "$TRACE_SMOKE"
+
 echo "== dispatch-parity smoke (xla vs pallas per-site plan) =="
 python -m benchmarks.bench_gemm_dispatch --smoke
 

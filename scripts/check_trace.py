@@ -1,0 +1,43 @@
+#!/usr/bin/env python
+"""CI gate: validate a serve-smoke trace against the obs event schema.
+
+  PYTHONPATH=src python scripts/check_trace.py /tmp/trace.json
+
+Loads the Chrome/Perfetto trace-event JSON written by
+``repro.launch.serve --trace-out`` and runs
+``repro.obs.validate_trace`` requiring at least one event of every
+category (request, step, dispatch, compile, arena) — so any PR that
+silently drops a whole instrumentation layer fails here, not in a
+profiling session weeks later.  Exits non-zero with the problem list on
+failure.
+"""
+import json
+import sys
+
+
+def main() -> int:
+    if len(sys.argv) != 2:
+        print(__doc__)
+        return 2
+    from repro.obs import CATEGORIES, validate_trace
+
+    path = sys.argv[1]
+    try:
+        doc = json.loads(open(path).read())
+    except (OSError, ValueError) as e:
+        print(f"check_trace: cannot load {path}: {e}")
+        return 1
+    errs = validate_trace(doc, require_categories=CATEGORIES)
+    if errs:
+        print(f"check_trace: {path} FAILED ({len(errs)} problems):")
+        for e in errs:
+            print(f"  - {e}")
+        return 1
+    n = len(doc.get("traceEvents", []))
+    cats = sorted({e.get("cat") for e in doc["traceEvents"] if e.get("cat")})
+    print(f"check_trace: {path} OK — {n} events, categories: {', '.join(cats)}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -51,12 +51,20 @@ class SiteRecord:
 
 
 class SiteRegistry:
-    """Scope -> site-name -> SiteRecord, insertion-ordered."""
+    """Scope -> site-name -> SiteRecord, insertion-ordered.
 
-    def __init__(self) -> None:
+    When a ``recorder`` (:class:`repro.obs.trace.TraceRecorder`) is
+    attached, every ``record()`` also emits one ``dispatch`` trace event
+    — site, (M, K, N), the executed tile, recommendation provenance and
+    the analytic cost of the chosen vs best config — so the trace shows
+    *which* GEMM site a plan change or a bad recommendation came from.
+    """
+
+    def __init__(self, recorder=None) -> None:
         self._scopes: Dict[str, Dict[str, SiteRecord]] = {}
         self._stack: List[str] = []
         self.records: int = 0          # total record() calls (trace events)
+        self.recorder = recorder
 
     # -- scoping -------------------------------------------------------------
     @contextlib.contextmanager
@@ -86,7 +94,26 @@ class SiteRegistry:
             key = f"{site}[{m}x{k}x{n}]"
         scope[key] = rec
         self.records += 1
+        if self.recorder is not None:
+            self._emit(rec)
         return rec
+
+    def _emit(self, rec: SiteRecord) -> None:
+        """One ``dispatch`` trace event per recorded site (trace time)."""
+        self.recorder.count("dispatch_records")
+        if not self.recorder.spans:
+            return
+        from repro.core.tpu_costmodel import tile_cost_seconds
+        costs = tile_cost_seconds(rec.m, rec.k, rec.n)
+        self.recorder.instant(
+            "dispatch", f"{self.current_scope()}/{rec.site}",
+            track="dispatch", site=rec.site, scope=self.current_scope(),
+            m=rec.m, k=rec.k, n=rec.n,
+            block_m=rec.block_m, block_n=rec.block_n, block_k=rec.block_k,
+            mode=DATAFLOW_NAMES[rec.mode], backend=rec.backend,
+            source=rec.source,
+            cost_s=float(costs[rec.cfg.class_id]),
+            cost_best_s=float(costs.min()))
 
     # -- read-back -----------------------------------------------------------
     def scopes(self) -> Tuple[str, ...]:

@@ -105,7 +105,7 @@ def serve_continuous(arch: str = "llama3.2-1b", preset: str = "reduced",
                      seed: int = 0, execute: str = "auto",
                      dispatcher: str = "oracle",
                      adaptnet_ckpt: str = None, kv_layout: str = "auto",
-                     prefill_chunk: int = None,
+                     prefill_chunk: int = None, trace_out: str = None,
                      override_cfg=None, log: bool = True):
     """Serve a request set through the continuous-batching engine.
 
@@ -121,7 +121,10 @@ def serve_continuous(arch: str = "llama3.2-1b", preset: str = "reduced",
     for recurrent-state families).  ``prefill_chunk`` (with the paged
     layout, dense/moe families) streams each prompt into KV pages that
     many tokens per engine step — chunked paged prefill — instead of one
-    padded-bucket call per request.
+    padded-bucket call per request.  ``trace_out`` enables full span
+    recording (``EngineConfig.trace``) and writes a Chrome/Perfetto
+    trace-event JSON (plus a ``.jsonl`` event stream) to that path after
+    the run — load it at https://ui.perfetto.dev or chrome://tracing.
     """
     from repro.configs.registry import get_arch
     from repro.serving import EngineConfig, Request, ServingEngine
@@ -136,7 +139,7 @@ def serve_continuous(arch: str = "llama3.2-1b", preset: str = "reduced",
         src_len=prompt_len if cfg.family == "encdec" else 0,
         execute=execute, dispatcher_mode=dispatcher,
         adaptnet_dir=adaptnet_ckpt, kv_layout=kv_layout,
-        prefill_chunk=prefill_chunk))
+        prefill_chunk=prefill_chunk, trace=trace_out is not None))
     reqs = []
     for i in range(num_requests):
         p = rng.integers(0, cfg.vocab_size, prompt_len).astype(np.int32)
@@ -158,6 +161,11 @@ def serve_continuous(arch: str = "llama3.2-1b", preset: str = "reduced",
         print("  executed gemm plan (last step):")
         for site, desc in engine.gemm_plan.items():
             print(f"    {site:<24} {desc}")
+    if trace_out is not None:
+        jsonl = engine.export_trace(trace_out)
+        if log:
+            print(f"  trace: {trace_out} (+ {jsonl}) — "
+                  f"{len(engine.obs)} events, open in ui.perfetto.dev")
     return outputs, engine
 
 
@@ -186,6 +194,9 @@ def main():
                     help=">0: chunked paged prefill — stream each prompt "
                          "into KV pages this many tokens per step "
                          "(requires --kv-layout paged, dense/moe families)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="enable span tracing and write a Chrome/Perfetto "
+                         "trace-event JSON here after the run")
     ap.add_argument("--waves", type=int, default=0,
                     help=">0: run the legacy wave-based path instead")
     ap.add_argument("--smoke", action="store_true",
@@ -195,7 +206,8 @@ def main():
         outputs, engine = serve_continuous(
             arch=a.arch, num_requests=3, num_slots=2, prompt_len=12, gen=6,
             temperature=0.0, execute=a.execute, dispatcher=a.dispatcher,
-            adaptnet_ckpt=a.adaptnet_ckpt, kv_layout=a.kv_layout)
+            adaptnet_ckpt=a.adaptnet_ckpt, kv_layout=a.kv_layout,
+            trace_out=a.trace_out)
         assert all(len(v) == 6 for v in outputs.values()), outputs
         engine.pool.check()
         assert engine.pool.num_free == engine.pool.num_blocks
@@ -222,7 +234,8 @@ def main():
                      temperature=a.temperature, top_k=a.top_k,
                      execute=a.execute, dispatcher=a.dispatcher,
                      adaptnet_ckpt=a.adaptnet_ckpt, kv_layout=a.kv_layout,
-                     prefill_chunk=a.prefill_chunk or None)
+                     prefill_chunk=a.prefill_chunk or None,
+                     trace_out=a.trace_out)
 
 
 if __name__ == "__main__":

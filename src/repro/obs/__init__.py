@@ -1,0 +1,27 @@
+"""Serving observability: request-lifecycle spans, engine-step timeline,
+dispatch / compile / KV-arena event tracing, Perfetto export.
+
+  trace    TraceRecorder (ring-buffered events + always-on counters and
+           gauges), JitWatch (compile/retrace detection on jitted calls)
+  spans    RequestTracker (per-request lifecycle state machine with
+           close-exactly-once invariants), StepTimeline (per-step phase
+           breakdown)
+  export   Chrome/Perfetto trace-event JSON + structured JSONL writers
+           and the trace schema validator the CI smoke runs
+
+Everything funnels into one :class:`TraceRecorder` owned by the
+``ServingEngine`` (``EngineConfig.trace`` / ``serve.py --trace-out``);
+see docs/OBSERVABILITY.md for the event taxonomy and how to open a
+trace in Perfetto.
+"""
+
+from repro.obs.export import (to_chrome_trace, validate_trace,
+                              write_chrome_trace, write_jsonl)
+from repro.obs.spans import RequestTracker, StepTimeline
+from repro.obs.trace import (CATEGORIES, JitWatch, TraceError, TraceEvent,
+                             TraceRecorder)
+
+__all__ = ["CATEGORIES", "JitWatch", "TraceError", "TraceEvent",
+           "TraceRecorder", "RequestTracker", "StepTimeline",
+           "to_chrome_trace", "validate_trace", "write_chrome_trace",
+           "write_jsonl"]

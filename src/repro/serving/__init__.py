@@ -12,11 +12,17 @@ utilization argument).
              plus paged flash-decode through per-slot block tables (dense
              vmapped decode for recurrent-state families); every GEMM site
              routed through the SARA dispatch layer
-  metrics    TTFT / latency percentiles / tokens-per-second / slot
-             utilization / KV rows streamed per decode step / prefill KV
-             rows written vs the padded-bucket equivalent
+  metrics    TTFT / latency percentiles (lifetime + rolling-window twins)
+             / tokens-per-second / slot utilization / KV rows streamed per
+             decode step / prefill KV rows written vs the padded-bucket
+             equivalent
 
-See docs/SERVING.md for the request lifecycle and page accounting.
+Every layer also reports into the ``repro.obs`` trace recorder the engine
+owns: request-lifecycle spans, a per-step phase timeline, KV-arena and
+jit-compile events — exportable as a Chrome/Perfetto trace when
+``EngineConfig.trace`` (``serve --trace-out``) is set.  See
+docs/SERVING.md for the request lifecycle and page accounting,
+docs/OBSERVABILITY.md for the trace schema.
 """
 
 from repro.serving.engine import EngineConfig, ServingEngine, sample_logits

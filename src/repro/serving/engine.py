@@ -90,6 +90,8 @@ from repro.configs.base import ArchConfig
 from repro.core.sara import SaraDispatcher
 from repro.dispatch import SiteRegistry
 from repro.models.serving import PAGED_FAMILIES
+from repro.obs import (JitWatch, RequestTracker, StepTimeline, TraceRecorder,
+                       write_chrome_trace, write_jsonl)
 from repro.serving.kv_pool import KVArena, KVBlockPool
 from repro.serving.metrics import ServingMetrics
 from repro.serving.scheduler import ContinuousScheduler, Request
@@ -192,6 +194,13 @@ class EngineConfig:
     # CHUNKED_PREFILL_FAMILIES family (dense/moe); None keeps the padded
     # bucketed prefill.
     prefill_chunk: Optional[int] = None
+    # Observability (repro.obs): counters/gauges are ALWAYS on (a dict
+    # update per event); ``trace=True`` additionally records span/instant
+    # events — request lifecycle, step phases, dispatch/compile/arena —
+    # into a ring buffer of ``trace_capacity`` events, exportable via
+    # ``export_trace()`` (serve.py --trace-out).
+    trace: bool = False
+    trace_capacity: int = 65536
 
 
 class ServingEngine:
@@ -218,6 +227,13 @@ class ServingEngine:
         self.dispatcher = dispatcher if dispatcher is not None \
             else self._build_dispatcher(self.ecfg)
         self.metrics = ServingMetrics()
+        # observability: one recorder for every layer (engine steps,
+        # request spans, dispatch/compile/arena events); counters always
+        # on, span recording behind EngineConfig.trace
+        self.obs = TraceRecorder(capacity=self.ecfg.trace_capacity,
+                                 spans=self.ecfg.trace)
+        self.req_spans = RequestTracker(self.obs)
+        self.timeline = StepTimeline(self.obs)
 
         e = self.ecfg
         layout = e.kv_layout
@@ -260,12 +276,15 @@ class ServingEngine:
         num_blocks = (e.num_blocks if e.num_blocks is not None
                       else e.num_slots * blocks_per_slot)
         self.pool = KVBlockPool(num_blocks, e.block_size)
+        self.pool.attach_recorder(self.obs)
         self.sched = ContinuousScheduler(
             e.num_slots, self.pool,
             max_prefills_per_step=e.max_prefills_per_step, reserve=e.reserve,
-            token_overhead=row_overhead, prefill_chunk=self.prefill_chunk)
+            token_overhead=row_overhead, prefill_chunk=self.prefill_chunk,
+            tracker=self.req_spans)
         self._last_tok = np.zeros((e.num_slots, 1), np.int32)
-        self._prefill = jax.jit(self.model.prefill)
+        self._prefill = JitWatch(jax.jit(self.model.prefill), "prefill",
+                                 self.obs)
 
         if layout == "paged":
             # physical page arena (pool pages + one write-discard scratch
@@ -284,10 +303,16 @@ class ServingEngine:
             self._state = self.model.init_paged_state(e.num_slots,
                                                       src_len=e.src_len)
             self._kv_rows = np.zeros((e.num_slots,), np.int32)
-            self._paged_decode = jax.jit(self.model.paged_decode_step)
-            self._paged_write = jax.jit(self.model.paged_prefill_write)
+            self._paged_decode = JitWatch(
+                jax.jit(self.model.paged_decode_step), "paged_decode",
+                self.obs)
+            self._paged_write = JitWatch(
+                jax.jit(self.model.paged_prefill_write), "paged_write",
+                self.obs)
             if self.prefill_chunk is not None:
-                self._chunk_prefill = jax.jit(self.model.paged_prefill_step)
+                self._chunk_prefill = JitWatch(
+                    jax.jit(self.model.paged_prefill_step), "chunk_prefill",
+                    self.obs)
             self._cache = None
         else:
             # stacked per-slot caches: leading axis = slot, lane batch=1
@@ -297,8 +322,9 @@ class ServingEngine:
             self._cache = jax.tree_util.tree_map(
                 lambda a: jnp.broadcast_to(
                     a, (e.num_slots,) + a.shape).copy(), proto)
-            self._decode = jax.jit(jax.vmap(self.model.decode_step,
-                                            in_axes=(None, 0, 0)))
+            self._decode = JitWatch(
+                jax.jit(jax.vmap(self.model.decode_step,
+                                 in_axes=(None, 0, 0))), "decode", self.obs)
         # what one masked-dense decode step would stream: every slot's full
         # capacity (recurrent-state families have no KV rows to speak of)
         self._dense_kv_rows = (e.num_slots * self._cache_len
@@ -309,8 +335,9 @@ class ServingEngine:
         # registry-backed executed-plan bookkeeping: each traced entry point
         # (one per prefill bucket + one for the vmapped decode) records its
         # sites under a scope; _dispatch() reads the plan back (memoized per
-        # scope) instead of re-running any recommendation sweep.
-        self.registry = SiteRegistry()
+        # scope) instead of re-running any recommendation sweep.  The
+        # recorder hook turns each record into a "dispatch" trace event.
+        self.registry = SiteRegistry(recorder=self.obs)
         self.gemm_plan: Dict[str, str] = {}
         self.plan_changes = 0
         self._plan_memo: Dict[str, Dict[str, str]] = {}
@@ -431,10 +458,15 @@ class ServingEngine:
         scope = f"prefill:m{bucket}"
         fresh = self.model.init_cache(1, self._prefill_rows, src_len=e.src_len)
         t0 = time.time()
-        with self._dispatch_scope(scope):
-            logits, new_cache = jax.block_until_ready(self._prefill(
-                self.params, batch, fresh, jnp.int32(n)))
+        with self._dispatch_scope(scope), \
+                self.timeline.phase("prefill", rid=req.rid, bucket=bucket):
+            logits, new_cache = self._prefill(
+                self.params, batch, fresh, jnp.int32(n))
+        with self.timeline.phase("sync"):
+            logits, new_cache = jax.block_until_ready((logits, new_cache))
         dt = time.time() - t0
+        self.obs.add_scope_wall(scope, dt)
+        self.req_spans.on_prefill_chunk(req.rid, n, dt, bucket=bucket)
         self._dispatch(scope)
         if self.kv_layout == "paged":
             # commit the prefilled KV rows into this request's pool pages
@@ -470,6 +502,7 @@ class ServingEngine:
         if first and req.t_first_token < 0:
             req.t_first_token = self.now()
             self.metrics.on_first_token(req.arrival_time, req.t_first_token)
+            self.req_spans.on_first_token(req.rid)
 
     def _do_chunk_prefills(self) -> None:
         """One chunked-prefill step over every mid-prefill lane.
@@ -516,13 +549,22 @@ class ServingEngine:
 
         scope = "prefill_chunk"
         t0 = time.time()
-        with self._dispatch_scope(scope):
-            logits, leaves = jax.block_until_ready(self._chunk_prefill(
+        with self._dispatch_scope(scope), \
+                self.timeline.phase("prefill_chunk",
+                                    lanes=int((chunk > 0).sum())):
+            logits, leaves = self._chunk_prefill(
                 self.params, jnp.asarray(toks), self.arena.leaves,
-                jnp.asarray(tables), jnp.asarray(kv), jnp.asarray(chunk)))
+                jnp.asarray(tables), jnp.asarray(kv), jnp.asarray(chunk))
+        with self.timeline.phase("sync"):
+            logits, leaves = jax.block_until_ready((logits, leaves))
         dt = time.time() - t0
+        self.obs.add_scope_wall(scope, dt)
         self.arena.leaves = leaves
         self._dispatch(scope)
+        for slot, req in sorted(lanes.items()):
+            if chunk[slot] > 0:
+                self.req_spans.on_prefill_chunk(req.rid, int(chunk[slot]),
+                                                dt, pos=req.prefill_pos)
 
         total = int(chunk.sum())
         # padded-bucket equivalent accrues proportionally per chunk
@@ -566,6 +608,7 @@ class ServingEngine:
                 req.t_first_token = self.now()
                 self.metrics.on_first_token(req.arrival_time,
                                             req.t_first_token)
+                self.req_spans.on_first_token(req.rid)
             if req.done():
                 self._retire(req)
 
@@ -601,7 +644,23 @@ class ServingEngine:
         nothing left to do."""
         if self.sched.idle():
             return False
-        plan = self.sched.plan(self.now())
+        self.timeline.begin()
+        try:
+            self._step_body()
+        finally:
+            e = self.ecfg
+            self.obs.gauge("kv_pages_in_use", self.pool.num_in_use)
+            self.obs.gauge("kv_fragmentation", self.pool.fragmentation())
+            self.obs.gauge("slot_occupancy",
+                           len(self.sched.active) / e.num_slots)
+            self.timeline.end(active=len(self.sched.active),
+                              waiting=self.sched.pending())
+        self._vtime += 1.0
+        return True
+
+    def _step_body(self) -> None:
+        with self.timeline.phase("schedule"):
+            plan = self.sched.plan(self.now())
         if self.prefill_chunk is not None:
             self._do_chunk_prefills()
         else:
@@ -632,36 +691,43 @@ class ServingEngine:
             else:
                 toks = jnp.asarray(self._last_tok)[:, :, None]  # (S, 1, 1)
                 t0 = time.time()
-                with self._dispatch_scope("decode"):
-                    logits, self._cache = jax.block_until_ready(self._decode(
-                        self.params, toks, self._cache))
+                with self._dispatch_scope("decode"), \
+                        self.timeline.phase("decode", lanes=len(active)):
+                    logits, cache = self._decode(
+                        self.params, toks, self._cache)
+                with self.timeline.phase("sync"):
+                    logits, self._cache = jax.block_until_ready(
+                        (logits, cache))
                 dt = time.time() - t0
+                self.obs.add_scope_wall("decode", dt)
                 logits = logits[:, 0, :]
                 kv_read = self._dense_kv_rows
             self._dispatch("decode")
-            self._key, k = jax.random.split(self._key)
-            sampled = np.asarray(sample_logits(
-                k, logits, self.ecfg.temperature, self.ecfg.top_k))
-            committed = 0
-            for slot, req in sorted(active.items()):
-                if req.stalled:
-                    # the lane replays this token once the pool can cover
-                    # it; paged lanes wrote nothing (trash page), dense
-                    # lanes roll back to the pre-step snapshot
-                    if self.kv_layout == "dense":
-                        self._slot_restore(slot, snaps[slot])
-                    continue
-                req.generated.append(int(sampled[slot]))
-                self._last_tok[slot, 0] = req.generated[-1]
-                if self.kv_layout == "paged":
-                    self._kv_rows[slot] += 1
-                committed += 1
-                if req.t_first_token < 0:
-                    req.t_first_token = self.now()
-                    self.metrics.on_first_token(req.arrival_time,
-                                                req.t_first_token)
-                if req.done():
-                    self._retire(req)
+            with self.timeline.phase("sample"):
+                self._key, k = jax.random.split(self._key)
+                sampled = np.asarray(sample_logits(
+                    k, logits, self.ecfg.temperature, self.ecfg.top_k))
+                committed = 0
+                for slot, req in sorted(active.items()):
+                    if req.stalled:
+                        # the lane replays this token once the pool can
+                        # cover it; paged lanes wrote nothing (trash page),
+                        # dense lanes roll back to the pre-step snapshot
+                        if self.kv_layout == "dense":
+                            self._slot_restore(slot, snaps[slot])
+                        continue
+                    req.generated.append(int(sampled[slot]))
+                    self._last_tok[slot, 0] = req.generated[-1]
+                    if self.kv_layout == "paged":
+                        self._kv_rows[slot] += 1
+                    committed += 1
+                    if req.t_first_token < 0:
+                        req.t_first_token = self.now()
+                        self.metrics.on_first_token(req.arrival_time,
+                                                    req.t_first_token)
+                        self.req_spans.on_first_token(req.rid)
+                    if req.done():
+                        self._retire(req)
             self.metrics.on_decode_step(
                 len(active), self.ecfg.num_slots, committed, dt,
                 kv_read_tokens=kv_read,
@@ -672,8 +738,6 @@ class ServingEngine:
         if self.sched.active and \
                 all(r.stalled for r in self.sched.active.values()):
             self._preempt_newest()
-        self._vtime += 1.0
-        return True
 
     def _decode_paged(self, active: Dict[int, Request]):
         """One batched decode over every lane through the page arena.
@@ -700,14 +764,20 @@ class ServingEngine:
         rids = [active[s].rid if s in active else None for s in range(S)]
         tables = self.pool.dense_block_table(rids, width)
         toks = jnp.asarray(self._last_tok)                   # (S, 1)
+        self.obs.gauge("decode_table_width", width)
         t0 = time.time()
-        with self._dispatch_scope("decode"):
-            logits, leaves = jax.block_until_ready(self._paged_decode(
+        with self._dispatch_scope("decode"), \
+                self.timeline.phase("paged_decode", lanes=len(active),
+                                    width=width):
+            logits, leaves = self._paged_decode(
                 self.params, toks, self._state, self.arena.leaves,
-                jnp.asarray(tables), jnp.asarray(kv), jnp.asarray(wm)))
+                jnp.asarray(tables), jnp.asarray(kv), jnp.asarray(wm))
+        with self.timeline.phase("sync"):
+            logits, leaves = jax.block_until_ready((logits, leaves))
+        dt = time.time() - t0
+        self.obs.add_scope_wall("decode", dt)
         self.arena.leaves = leaves
-        return np.asarray(logits), time.time() - t0, \
-            e.block_size * sum(need)
+        return np.asarray(logits), dt, e.block_size * sum(need)
 
     def run(self, requests: Sequence[Request]) -> Dict[str, np.ndarray]:
         """Serve a request set to completion; returns {rid: generated}."""
@@ -733,7 +803,12 @@ class ServingEngine:
                 "gemm_xla_sites": backends.get("xla", 0),
                 "rec_adaptnet_sites": sources.get("adaptnet", 0),
                 "rec_oracle_sites": sources.get("oracle", 0),
-                "rec_fallback_sites": sources.get("oracle_fallback", 0)}
+                "rec_fallback_sites": sources.get("oracle_fallback", 0),
+                # retraces, from the compile-event counter: the signal a
+                # shape-diversity regression shows up in directly, instead
+                # of having to be inferred from wall time
+                "jit_compiles": int(self.obs.counters.get("jit_compiles",
+                                                          0))}
 
     def defrag(self) -> int:
         """Compact live KV pages to the front of the arena between steps:
@@ -751,3 +826,31 @@ class ServingEngine:
         s["kv_fragmentation"] = self.pool.fragmentation()
         s["kv_defrag_block_moves"] = self.pool.defrag_moves
         return s
+
+    # -- observability export -------------------------------------------------
+    def site_timings(self) -> Dict[str, Dict]:
+        """Measured wall time per traced scope joined with the sites that
+        scope executes — the raw material for profile-calibrated dispatch
+        (the ROADMAP item this subsystem feeds): every (site, M, K, N,
+        tile) gets the wall-clock of the compiled call it ran inside."""
+        out: Dict[str, Dict] = {}
+        for scope, (calls, secs) in self.obs.scope_wall.items():
+            sites = {name: {"m": r.m, "k": r.k, "n": r.n,
+                            "tile": r.describe(), "source": r.source}
+                     for name, r in self.registry.sites(scope).items()}
+            out[scope] = {"calls": calls, "seconds": secs, "sites": sites}
+        return out
+
+    def export_trace(self, path: str) -> str:
+        """Write the trace as Chrome/Perfetto trace-event JSON at ``path``
+        plus a structured JSONL sibling (``.jsonl``).  Loadable in
+        https://ui.perfetto.dev or chrome://tracing; see
+        docs/OBSERVABILITY.md.  Returns the JSONL path."""
+        meta = {"arch": self.cfg.name, "kv_layout": self.kv_layout,
+                "prefill_chunk": self.prefill_chunk,
+                "dispatcher_mode": self.ecfg.dispatcher_mode,
+                "site_timings": self.site_timings()}
+        write_chrome_trace(path, self.obs, meta)
+        jsonl = (path[:-5] if path.endswith(".json") else path) + ".jsonl"
+        write_jsonl(jsonl, self.obs, meta)
+        return jsonl

@@ -113,6 +113,19 @@ class KVBlockPool:
         self.peak_in_use = 0
         self.arena: Optional[KVArena] = None
         self.defrag_moves = 0          # lifetime pages moved by defrag()
+        # optional trace sink (repro.obs.TraceRecorder): reserve / grow /
+        # free / defrag land as "arena" events + always-on counters
+        self.recorder = None
+
+    def attach_recorder(self, recorder) -> None:
+        self.recorder = recorder
+
+    def _trace(self, name: str, rid: str, blocks: int, **args) -> None:
+        if self.recorder is None:
+            return
+        self.recorder.count(f"kv_{name}_blocks", blocks)
+        self.recorder.instant("arena", name, track="arena", rid=rid,
+                              blocks=blocks, in_use=self.num_in_use, **args)
 
     def bind_arena(self, arena: KVArena) -> None:
         """Attach physical page storage; defrag() moves now mirror into it."""
@@ -206,6 +219,7 @@ class KVBlockPool:
         t.num_tokens = num_tokens
         self._tables[request_id] = t
         self.peak_in_use = max(self.peak_in_use, self.num_in_use)
+        self._trace("reserve", request_id, need, tokens=num_tokens)
         return t
 
     def extend(self, request_id: str, num_tokens: int) -> List[int]:
@@ -221,6 +235,8 @@ class KVBlockPool:
         t.blocks.extend(new)
         t.num_tokens = num_tokens
         self.peak_in_use = max(self.peak_in_use, self.num_in_use)
+        if new:
+            self._trace("grow", request_id, len(new), tokens=num_tokens)
         return new
 
     def free(self, request_id: str) -> int:
@@ -231,6 +247,7 @@ class KVBlockPool:
                 raise PoolError(f"block {bid} not owned by {request_id}")
             self._owner[bid] = None
             self._free.append(bid)
+        self._trace("free", request_id, len(t.blocks))
         return len(t.blocks)
 
     # -- defrag --------------------------------------------------------------
@@ -259,6 +276,8 @@ class KVBlockPool:
             # when storage is bound (unbound defrag is table bookkeeping)
             self.arena.apply_moves(moves)
             self.defrag_moves += len(moves)
+        self._trace("defrag", "_pool", len(moves),
+                    storage_moved=self.arena is not None)
         return moves
 
     # -- invariant check (tests / debug) -------------------------------------

@@ -9,14 +9,23 @@ them to be consistent.
 
 from __future__ import annotations
 
+from collections import deque
 from dataclasses import dataclass, field
-from typing import Dict, List
+from typing import Dict, List, Optional
 
 import numpy as np
 
 
-def percentile(xs: List[float], q: float) -> float:
-    return float(np.percentile(np.asarray(xs, np.float64), q)) if xs else 0.0
+def percentile(xs, q: float) -> Optional[float]:
+    """Percentile of a sample list, or ``None`` when there are no samples.
+
+    ``None`` (not 0.0) is load-bearing: a run where no request ever
+    completed must not report a perfect p99 — "no measurement" and "a
+    measured zero" are different facts, and the old 0.0 silently
+    conflated them."""
+    if not len(xs):
+        return None
+    return float(np.percentile(np.asarray(xs, np.float64), q))
 
 
 @dataclass
@@ -42,13 +51,29 @@ class ServingMetrics:
     # tokens, not bucket shapes)
     prefill_kv_write_rows: int = 0
     prefill_kv_write_rows_padded: int = 0
+    # Rolling windows (last ``rolling_window`` samples) so a long run's
+    # summary reports live behaviour, not lifetime averages: a regression
+    # an hour in is invisible in a lifetime p99 but jumps out of a
+    # 64-sample one.
+    rolling_window: int = 64
+    _ttft_win: deque = field(default_factory=lambda: deque(maxlen=64))
+    _latency_win: deque = field(default_factory=lambda: deque(maxlen=64))
+    _decode_win: deque = field(default_factory=lambda: deque(maxlen=64))
+
+    def __post_init__(self) -> None:
+        if self.rolling_window != 64:
+            self._ttft_win = deque(maxlen=self.rolling_window)
+            self._latency_win = deque(maxlen=self.rolling_window)
+            self._decode_win = deque(maxlen=self.rolling_window)
 
     # -- recording ------------------------------------------------------------
     def on_first_token(self, arrival: float, t: float) -> None:
         self.ttft.append(t - arrival)
+        self._ttft_win.append(t - arrival)
 
     def on_retire(self, arrival: float, admit: float, t: float) -> None:
         self.latency.append(t - arrival)
+        self._latency_win.append(t - arrival)
         self.queue_delay.append(admit - arrival)
         self.completed += 1
 
@@ -70,6 +95,7 @@ class ServingMetrics:
         self.decode_steps += 1
         self.decode_tokens += tokens
         self.decode_s += seconds
+        self._decode_win.append((tokens, seconds))
         self.slot_occupancy.append(active / slots if slots else 0.0)
         self.kv_read_tokens += kv_read_tokens
         self.kv_read_tokens_dense += kv_read_tokens_dense
@@ -77,6 +103,13 @@ class ServingMetrics:
     # -- summary --------------------------------------------------------------
     def summary(self, sara_cache: Dict = None,
                 dispatch: Dict = None) -> Dict[str, float]:
+        """Lifetime aggregates + ``*_roll`` rolling-window twins.
+
+        Percentile keys are ``None`` when no sample exists (e.g. a run
+        where nothing completed) — callers that format or compare must
+        treat ``None`` as "not measured", never as zero."""
+        win_tok = sum(t for t, _ in self._decode_win)
+        win_s = sum(s for _, s in self._decode_win)
         out = {
             "completed": self.completed,
             "decode_steps": self.decode_steps,
@@ -85,6 +118,12 @@ class ServingMetrics:
             "latency_p50_s": percentile(self.latency, 50),
             "latency_p99_s": percentile(self.latency, 99),
             "queue_delay_p50_s": percentile(self.queue_delay, 50),
+            # rolling-window (last rolling_window samples) live behaviour
+            "ttft_p50_s_roll": percentile(self._ttft_win, 50),
+            "ttft_p99_s_roll": percentile(self._ttft_win, 99),
+            "latency_p99_s_roll": percentile(self._latency_win, 99),
+            "decode_tok_s_roll": (win_tok / max(win_s, 1e-9)
+                                  if self._decode_win else None),
             "decode_tok_s": self.decode_tokens / max(self.decode_s, 1e-9),
             "prefill_tok_s": self.prefill_tokens / max(self.prefill_s, 1e-9),
             "slot_utilization": (float(np.mean(self.slot_occupancy))
@@ -118,6 +157,8 @@ class ServingMetrics:
 
     def report(self, sara_cache: Dict = None, dispatch: Dict = None) -> str:
         s = self.summary(sara_cache, dispatch)
-        lines = [f"  {k:<22} {v:.4g}" if isinstance(v, float)
-                 else f"  {k:<22} {v}" for k, v in s.items()]
-        return "\n".join(lines)
+        def fmt(v):
+            if v is None:
+                return "n/a (no samples)"
+            return f"{v:.4g}" if isinstance(v, float) else str(v)
+        return "\n".join(f"  {k:<22} {fmt(v)}" for k, v in s.items())

@@ -115,11 +115,16 @@ class ContinuousScheduler:
     def __init__(self, num_slots: int, pool: KVBlockPool,
                  max_prefills_per_step: int = 1, reserve: str = "full",
                  token_overhead: int = 0,
-                 prefill_chunk: Optional[int] = None):
+                 prefill_chunk: Optional[int] = None,
+                 tracker=None):
         if reserve not in ("full", "incremental"):
             raise ValueError(reserve)
         self.num_slots = num_slots
         self.pool = pool
+        # request-lifecycle span tracker (repro.obs.RequestTracker): the
+        # scheduler owns the admit/preempt/retire transitions, so it is
+        # the layer that stamps them into the trace
+        self.tracker = tracker
         self.max_prefills_per_step = max_prefills_per_step
         self.reserve = reserve
         # extra KV rows every request's block table must also cover beyond
@@ -135,6 +140,9 @@ class ContinuousScheduler:
     # -- queue ----------------------------------------------------------------
     def submit(self, req: Request) -> None:
         self.waiting.append(req)
+        if self.tracker is not None:
+            self.tracker.on_submit(req.rid, prompt_len=req.prompt_len,
+                                   max_new=req.max_new_tokens)
 
     def pending(self) -> int:
         return len(self.waiting)
@@ -173,6 +181,8 @@ class ContinuousScheduler:
             self.pool.alloc(req.rid, self._reservation(req))
             self.active[req.slot] = req
             prefills.append(req)
+            if self.tracker is not None:
+                self.tracker.on_admit(req.rid, slot=req.slot)
         return StepPlan(prefills, sorted(self.active))
 
     # -- per-token growth (incremental mode) ----------------------------------
@@ -201,6 +211,8 @@ class ContinuousScheduler:
         self._free_slots.append(req.slot)
         req.t_done = now
         req.slot = -1
+        if self.tracker is not None:
+            self.tracker.on_retire(req.rid, tokens=len(req.generated))
 
     # -- preemption -----------------------------------------------------------
     def preempt(self, req: Request) -> None:
@@ -219,3 +231,5 @@ class ContinuousScheduler:
         req.prefill_pos = 0
         req.t_done = -1.0
         self.waiting.appendleft(req)
+        if self.tracker is not None:
+            self.tracker.on_preempt(req.rid, tokens=len(req.generated))
