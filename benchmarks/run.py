@@ -60,7 +60,8 @@ def main() -> None:
     t0 = time.time()
     from benchmarks import (bench_adaptnet_serving, bench_chunked_prefill,
                             bench_gemm_dispatch, bench_kernels,
-                            bench_paged_decode, bench_sara_tpu,
+                            bench_paged_decode, bench_prefix_cache,
+                            bench_sara_tpu,
                             bench_serving, fig3_motivation, fig7_classifiers,
                             fig8_adaptnet, fig9_adaptnetx, fig11_workloads,
                             fig12_histograms, fig13_ppa, fig14_sigma,
@@ -81,6 +82,7 @@ def main() -> None:
     bench_serving.run()
     bench_paged_decode.run()
     bench_chunked_prefill.run()
+    bench_prefix_cache.run()
     bench_adaptnet_serving.run()
     aggregate()
     print(f"# benchmarks done in {time.time() - t0:.0f}s")

@@ -31,6 +31,13 @@ python -m benchmarks.bench_paged_decode --smoke
 echo "== chunked-prefill smoke (chunked paged engine == dense greedy) =="
 python -m benchmarks.bench_chunked_prefill --smoke
 
+echo "== prefix-cache smoke (COW page sharing == cache-off greedy) =="
+PREFIX_SMOKE="$(mktemp -d)/trace.json"
+python -m repro.launch.serve --arch llama3.2-1b --smoke --prefix-cache \
+    --trace-out "$PREFIX_SMOKE"
+python scripts/check_trace.py --require-event cache_hit "$PREFIX_SMOKE"
+python -m benchmarks.bench_prefix_cache --smoke
+
 echo "== self-adaptive smoke (train -> save -> load -> serve adaptnet) =="
 ADAPTNET_SMOKE_DIR="$(mktemp -d)/adaptnet_ckpt"
 python -m repro.launch.train_adaptnet --samples 8000 --epochs 2 \

@@ -2,32 +2,47 @@
 """CI gate: validate a serve-smoke trace against the obs event schema.
 
   PYTHONPATH=src python scripts/check_trace.py /tmp/trace.json
+  PYTHONPATH=src python scripts/check_trace.py --require-event cache_hit \\
+      /tmp/trace.json
 
 Loads the Chrome/Perfetto trace-event JSON written by
 ``repro.launch.serve --trace-out`` and runs
 ``repro.obs.validate_trace`` requiring at least one event of every
 category (request, step, dispatch, compile, arena) — so any PR that
 silently drops a whole instrumentation layer fails here, not in a
-profiling session weeks later.  Exits non-zero with the problem list on
-failure.
+profiling session weeks later.  ``--require-event NAME`` (repeatable)
+additionally demands at least one event with that name — the
+prefix-cache smoke uses it to prove ``cache_hit`` instants landed on the
+request tracks.  Exits non-zero with the problem list on failure.
 """
 import json
 import sys
 
 
 def main() -> int:
-    if len(sys.argv) != 2:
+    argv, require_events = sys.argv[1:], []
+    while "--require-event" in argv:
+        i = argv.index("--require-event")
+        if i + 1 >= len(argv):
+            print(__doc__)
+            return 2
+        require_events.append(argv[i + 1])
+        del argv[i:i + 2]
+    if len(argv) != 1:
         print(__doc__)
         return 2
     from repro.obs import CATEGORIES, validate_trace
 
-    path = sys.argv[1]
+    path = argv[0]
     try:
         doc = json.loads(open(path).read())
     except (OSError, ValueError) as e:
         print(f"check_trace: cannot load {path}: {e}")
         return 1
     errs = validate_trace(doc, require_categories=CATEGORIES)
+    names = {e.get("name") for e in doc.get("traceEvents", [])}
+    errs += [f"required event {name!r} absent from trace"
+             for name in require_events if name not in names]
     if errs:
         print(f"check_trace: {path} FAILED ({len(errs)} problems):")
         for e in errs:

@@ -145,6 +145,52 @@ def paged_attention(q, k_arena, v_arena, tables, lengths, *,
     return o.reshape(S, H, v_arena.shape[-1])
 
 
+@functools.partial(jax.jit, static_argnames=("logit_cap", "impl",
+                                             "interpret"))
+def shared_paged_attention(q, k_arena, v_arena, unique_tables, unique_lens,
+                           prefix_pages, prefix_lens, *,
+                           logit_cap: float = 0.0,
+                           impl: Optional[str] = None,
+                           interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Cascade decode for shared prefixes: one softmax pass over a lane's
+    shared-prefix rows (streamed ONCE for every sharing lane via
+    ``prefix_pages``) plus one over its unique suffix rows (per-lane
+    ``unique_tables``), merged by online-softmax state.  Mathematically
+    equal to :func:`paged_attention` over the concatenated page lists, but
+    the merge reassociates the softmax so the result is not
+    bitwise-identical to the single-pass kernel.
+
+    q: (S, H, hd) one query token per lane; prefix_pages: (P,) int32 pages
+    every sharing lane's table starts with (tail-pad with the last id);
+    prefix_lens: (S,) int32 prefix rows lane s attends (0 = lane not in
+    the sharing group); unique_tables: (S, W) int32 each lane's pages PAST
+    the prefix (its full table shifted left; non-members keep their whole
+    table here); unique_lens: (S,) int32 valid suffix rows.  Returns
+    (S, H, hd_v); lanes empty in both phases yield zeros.
+    """
+    S, H, hd = q.shape
+    KVH = k_arena.shape[2]
+    scale = 1.0 / (hd ** 0.5)
+    if _paged_impl(impl) == "xla":
+        from repro.kernels.ref import shared_paged_attention_ref
+        return shared_paged_attention_ref(
+            q, k_arena, v_arena, unique_tables, unique_lens, prefix_pages,
+            prefix_lens, scale=scale, logit_cap=logit_cap)
+    from repro.kernels.paged_attn import (paged_gqa_decode_lse_pallas,
+                                          paged_gqa_prefix_pallas)
+    from repro.kernels.ref import merge_softmax_states
+    qg = q.reshape(S, KVH, H // KVH, hd)
+    itp = _interpret(interpret)
+    o_p, m_p, l_p = paged_gqa_prefix_pallas(
+        qg, k_arena, v_arena, prefix_pages, prefix_lens, scale, itp,
+        logit_cap=logit_cap)
+    o_u, m_u, l_u = paged_gqa_decode_lse_pallas(
+        qg, k_arena, v_arena, unique_tables, unique_lens, scale, itp,
+        logit_cap=logit_cap)
+    o, _, _ = merge_softmax_states(o_p, m_p, l_p, o_u, m_u, l_u)
+    return o.astype(q.dtype).reshape(S, H, v_arena.shape[-1])
+
+
 @functools.partial(jax.jit, static_argnames=("qk_dim", "impl", "interpret"))
 def mla_paged_attention(q_abs, q_rope, ckv_arena, krope_arena, tables,
                         lengths, *, qk_dim: int,

@@ -366,6 +366,215 @@ def _mla_prefill_kernel(tables, starts, lengths, qa_ref, qr_ref, ckv_ref,
         o_ref[0] = o.reshape(C, H, o_ref.shape[-1])
 
 
+def _gqa_lse_kernel(tables, lengths, q_ref, k_ref, v_ref, o_ref, m_ref,
+                    l_ref, m_scr, l_scr, acc_scr, *, bs, n_bt, scale,
+                    logit_cap):
+    lane = pl.program_id(0)
+    j = pl.program_id(2)
+    kv_len = lengths[lane]
+
+    @pl.when(j == 0)
+    def _reset():
+        m_scr[...] = jnp.full_like(m_scr, NEG)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    @pl.when(j * bs < kv_len)
+    def _accumulate():
+        q = q_ref[0, 0]                                    # (G, hd)
+        k = k_ref[0, :, 0, :]                              # (bs, hd)
+        v = v_ref[0, :, 0, :]                              # (bs, hd_v)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if logit_cap > 0.0:
+            s = jnp.tanh(s / logit_cap) * logit_cap
+        col = j * bs + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(col < kv_len, s, NEG)
+        m_prev, l_prev = m_scr[0], l_scr[0]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        acc_scr[...] = acc_scr[...] * corr[:, None] + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[0] = m_new
+        l_scr[0] = l_prev * corr + jnp.sum(p, axis=-1)
+
+    @pl.when(j == n_bt - 1)
+    def _emit():
+        # empty lanes (kv_len == 0) never accumulate: the (0, NEG, 0) state
+        # makes the softmax-state merge degenerate to the other phase
+        l = jnp.maximum(l_scr[0], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+        m_ref[0, 0] = m_scr[0]
+        l_ref[0, 0] = l_scr[0]
+
+
+def paged_gqa_decode_lse_pallas(q, k_arena, v_arena, tables, lengths,
+                                scale: float, interpret: bool,
+                                logit_cap: float = 0.0):
+    """:func:`paged_gqa_decode_pallas` that also emits the online-softmax
+    state — the per-lane *unique* phase of cascade decode, whose result is
+    merged with the shared-prefix phase outside the kernel.  Returns
+    (o (S, KVH, G, hd_v) normalized, m (S, KVH, G) f32 running max,
+    l (S, KVH, G) f32 exp-sum)."""
+    S, KVH, G, hd = q.shape
+    bs = k_arena.shape[1]
+    hd_v = v_arena.shape[-1]
+    W = tables.shape[1]
+
+    grid = (S, KVH, W)
+    out, m, l = pl.pallas_call(
+        functools.partial(_gqa_lse_kernel, bs=bs, n_bt=W, scale=scale,
+                          logit_cap=logit_cap),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, G, hd),
+                             lambda s, h, j, t, ln: (s, h, 0, 0)),
+                pl.BlockSpec((1, bs, 1, hd),
+                             lambda s, h, j, t, ln: (t[s, j], 0, h, 0)),
+                pl.BlockSpec((1, bs, 1, hd_v),
+                             lambda s, h, j, t, ln: (t[s, j], 0, h, 0)),
+            ],
+            out_specs=[
+                pl.BlockSpec((1, 1, G, hd_v),
+                             lambda s, h, j, t, ln: (s, h, 0, 0)),
+                pl.BlockSpec((1, 1, G), lambda s, h, j, t, ln: (s, h, 0)),
+                pl.BlockSpec((1, 1, G), lambda s, h, j, t, ln: (s, h, 0)),
+            ],
+            scratch_shapes=[pltpu.VMEM((1, G), jnp.float32),
+                            pltpu.VMEM((1, G), jnp.float32),
+                            pltpu.VMEM((G, hd_v), jnp.float32)],
+        ),
+        out_shape=[jax.ShapeDtypeStruct((S, KVH, G, hd_v), q.dtype),
+                   jax.ShapeDtypeStruct((S, KVH, G), jnp.float32),
+                   jax.ShapeDtypeStruct((S, KVH, G), jnp.float32)],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(tables, lengths, q, k_arena, v_arena)
+    return out, m, l
+
+
+# ---------------------------------------------------------------------------
+# shared-prefix (cascade) decode: one walk over the hot pages for all lanes
+# ---------------------------------------------------------------------------
+
+def _gqa_prefix_kernel(tables, nlive, plen_ref, q_ref, k_ref, v_ref,
+                       o_ref, m_ref, l_ref, m_scr, l_scr, acc_scr, *,
+                       bs, n_bt, scale, logit_cap):
+    j = pl.program_id(1)
+    S, G = q_ref.shape[0], q_ref.shape[2]
+    SG = S * G
+
+    @pl.when(j == 0)
+    def _reset():
+        m_scr[...] = jnp.full_like(m_scr, NEG)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    @pl.when(j * bs < nlive[0])
+    def _accumulate():
+        # every lane's queries stacked into one MXU call against the SAME
+        # page: the page DMA happens once per (kv_head, page) grid step,
+        # not once per lane — that is the cascade win
+        q = q_ref[:, 0].reshape(SG, q_ref.shape[-1])       # (S*G, hd)
+        k = k_ref[0, :, 0, :]                              # (bs, hd)
+        v = v_ref[0, :, 0, :]                              # (bs, hd_v)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if logit_cap > 0.0:
+            s = jnp.tanh(s / logit_cap) * logit_cap
+        col = j * bs + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        # flat row i belongs to lane i // G; its prefix_len gates how much
+        # of the shared run it attends (0 = lane outside the group).  The
+        # explicit mask on p — not just on s — keeps fully-masked rows at
+        # l == 0: with m == NEG every masked exp(s - m) would be exp(0)
+        plen = jnp.broadcast_to(plen_ref[...], (S, G)).reshape(SG, 1)
+        live = col < plen
+        s = jnp.where(live, s, NEG)
+        m_prev, l_prev = m_scr[0], l_scr[0]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.where(live, jnp.exp(s - m_new[:, None]), 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        acc_scr[...] = acc_scr[...] * corr[:, None] + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[0] = m_new
+        l_scr[0] = l_prev * corr + jnp.sum(p, axis=-1)
+
+    @pl.when(j == n_bt - 1)
+    def _emit():
+        l = jnp.maximum(l_scr[0], 1e-30)
+        o = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+        o_ref[:, 0] = o.reshape(S, G, o_ref.shape[-1])
+        m_ref[:, 0] = m_scr[0].reshape(S, G)
+        l_ref[:, 0] = l_scr[0].reshape(S, G)
+
+
+def paged_gqa_prefix_pallas(q, k_arena, v_arena, prefix_pages, prefix_lens,
+                            scale: float, interpret: bool,
+                            logit_cap: float = 0.0):
+    """Shared-prefix phase of cascade decode: ONE grid walk over the hot
+    prefix pages serves every lane at once.
+
+    q: (S, KVH, G, hd); prefix_pages: (P,) int32 physical pages of the
+    shared prefix in logical order (tail-pad with the last id);
+    prefix_lens: (S,) int32 prefix rows lane s attends (0 = lane not in the
+    sharing group).  The grid is (KVH, P) — lanes are NOT a grid dimension;
+    all S lanes' queries hit each page block together, so a prefix shared
+    by k lanes is streamed once instead of k times.  Returns (o (S, KVH, G,
+    hd_v) normalized, m (S, KVH, G) f32, l (S, KVH, G) f32); lanes with
+    prefix_lens == 0 come back as (0, NEG, 0) so the merge degenerates to
+    the unique phase."""
+    S, KVH, G, hd = q.shape
+    bs = k_arena.shape[1]
+    hd_v = v_arena.shape[-1]
+    P = prefix_pages.shape[0]
+    # scalar skip bound for padded tail columns (every sharing lane spans
+    # the same page run, so max == the run's row count)
+    nlive = jnp.max(prefix_lens).astype(jnp.int32).reshape(1)
+    # per-lane lengths ride as a VMEM operand (not scalar prefetch): the
+    # kernel needs them as a vector to mask the stacked (S*G, bs) scores
+    plens2d = prefix_lens.astype(jnp.int32).reshape(S, 1)
+
+    grid = (KVH, P)
+    out, m, l = pl.pallas_call(
+        functools.partial(_gqa_prefix_kernel, bs=bs, n_bt=P, scale=scale,
+                          logit_cap=logit_cap),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((S, 1), lambda h, j, t, nl: (0, 0)),
+                pl.BlockSpec((S, 1, G, hd), lambda h, j, t, nl: (0, h, 0, 0)),
+                pl.BlockSpec((1, bs, 1, hd),
+                             lambda h, j, t, nl: (t[j], 0, h, 0)),
+                pl.BlockSpec((1, bs, 1, hd_v),
+                             lambda h, j, t, nl: (t[j], 0, h, 0)),
+            ],
+            out_specs=[
+                pl.BlockSpec((S, 1, G, hd_v),
+                             lambda h, j, t, nl: (0, h, 0, 0)),
+                pl.BlockSpec((S, 1, G), lambda h, j, t, nl: (0, h, 0)),
+                pl.BlockSpec((S, 1, G), lambda h, j, t, nl: (0, h, 0)),
+            ],
+            scratch_shapes=[pltpu.VMEM((1, S * G), jnp.float32),
+                            pltpu.VMEM((1, S * G), jnp.float32),
+                            pltpu.VMEM((S * G, hd_v), jnp.float32)],
+        ),
+        out_shape=[jax.ShapeDtypeStruct((S, KVH, G, hd_v), q.dtype),
+                   jax.ShapeDtypeStruct((S, KVH, G), jnp.float32),
+                   jax.ShapeDtypeStruct((S, KVH, G), jnp.float32)],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(prefix_pages, nlive, plens2d, q, k_arena, v_arena)
+    return out, m, l
+
+
 def paged_mla_prefill_pallas(q_abs, q_rope, ckv_arena, krope_arena, tables,
                              starts, lengths, scale: float,
                              interpret: bool) -> jnp.ndarray:

@@ -105,7 +105,10 @@ def serve_continuous(arch: str = "llama3.2-1b", preset: str = "reduced",
                      seed: int = 0, execute: str = "auto",
                      dispatcher: str = "oracle",
                      adaptnet_ckpt: str = None, kv_layout: str = "auto",
-                     prefill_chunk: int = None, trace_out: str = None,
+                     prefill_chunk: int = None, prefix_cache: bool = False,
+                     shared_prefix_decode: bool = False,
+                     defrag_threshold: float = None,
+                     shared_prefix_len: int = 0, trace_out: str = None,
                      override_cfg=None, log: bool = True):
     """Serve a request set through the continuous-batching engine.
 
@@ -125,6 +128,11 @@ def serve_continuous(arch: str = "llama3.2-1b", preset: str = "reduced",
     recording (``EngineConfig.trace``) and writes a Chrome/Perfetto
     trace-event JSON (plus a ``.jsonl`` event stream) to that path after
     the run — load it at https://ui.perfetto.dev or chrome://tracing.
+    ``prefix_cache`` (requires ``prefill_chunk``) turns on the
+    cross-request prefix cache: prompts that open with an
+    already-served token run map those KV pages refcounted/copy-on-write
+    instead of recomputing them; ``shared_prefix_decode`` additionally
+    batches decode attention over the common physical prefix (cascade).
     """
     from repro.configs.registry import get_arch
     from repro.serving import EngineConfig, Request, ServingEngine
@@ -139,10 +147,20 @@ def serve_continuous(arch: str = "llama3.2-1b", preset: str = "reduced",
         src_len=prompt_len if cfg.family == "encdec" else 0,
         execute=execute, dispatcher_mode=dispatcher,
         adaptnet_dir=adaptnet_ckpt, kv_layout=kv_layout,
-        prefill_chunk=prefill_chunk, trace=trace_out is not None))
+        prefill_chunk=prefill_chunk, prefix_cache=prefix_cache,
+        shared_prefix_decode=shared_prefix_decode,
+        defrag_threshold=defrag_threshold, trace=trace_out is not None))
+    # ``shared_prefix_len`` > 0 makes every prompt open with the same token
+    # run (a system-prompt-style workload) so the cross-request prefix cache
+    # has something to hit; the tail stays per-request random.
+    shared = (rng.integers(0, cfg.vocab_size,
+                           min(shared_prefix_len, prompt_len)).astype(np.int32)
+              if shared_prefix_len > 0 else None)
     reqs = []
     for i in range(num_requests):
         p = rng.integers(0, cfg.vocab_size, prompt_len).astype(np.int32)
+        if shared is not None:
+            p[:len(shared)] = shared
         extras = None
         if cfg.family == "encdec":
             extras = {"src_features": rng.standard_normal(
@@ -194,6 +212,24 @@ def main():
                     help=">0: chunked paged prefill — stream each prompt "
                          "into KV pages this many tokens per step "
                          "(requires --kv-layout paged, dense/moe families)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="cross-request prefix cache: refcounted "
+                         "copy-on-write KV pages shared across prompts "
+                         "with a common token prefix (requires "
+                         "--prefill-chunk and the paged layout)")
+    ap.add_argument("--shared-prefix-decode", action="store_true",
+                    help="with --prefix-cache: cascade decode attention — "
+                         "one pass over the common physical prefix pages "
+                         "+ per-lane unique suffixes, merged by softmax "
+                         "state (reassociates the softmax; opt-in)")
+    ap.add_argument("--defrag-threshold", type=float, default=None,
+                    help="auto-defragment the KV pool from the engine "
+                         "step loop when fragmentation exceeds this "
+                         "fraction (0..1)")
+    ap.add_argument("--shared-prefix-len", type=int, default=0,
+                    help=">0: every request's prompt opens with the same "
+                         "token run of this length (system-prompt-style "
+                         "workload for exercising --prefix-cache)")
     ap.add_argument("--trace-out", default=None, metavar="PATH",
                     help="enable span tracing and write a Chrome/Perfetto "
                          "trace-event JSON here after the run")
@@ -202,6 +238,39 @@ def main():
     ap.add_argument("--smoke", action="store_true",
                     help="fast CI smoke: tiny trace, assert completion")
     a = ap.parse_args()
+    if a.smoke and a.prefix_cache:
+        # Prefix-cache smoke: a shared-prefix workload served twice —
+        # cache off, then cache on (+ optional cascade) — must agree
+        # token-for-token under greedy sampling while the cached run
+        # actually reuses pages.
+        common = dict(
+            arch=a.arch, num_requests=4, num_slots=2, prompt_len=24,
+            gen=6, temperature=0.0, execute=a.execute,
+            dispatcher=a.dispatcher, adaptnet_ckpt=a.adaptnet_ckpt,
+            kv_layout="paged", prefill_chunk=a.prefill_chunk or 8,
+            shared_prefix_len=16, defrag_threshold=a.defrag_threshold,
+            log=False)
+        base, _ = serve_continuous(**common)
+        outputs, engine = serve_continuous(
+            **common, prefix_cache=True,
+            shared_prefix_decode=a.shared_prefix_decode,
+            trace_out=a.trace_out)
+        assert all(len(v) == 6 for v in outputs.values()), outputs
+        assert set(outputs) == set(base)
+        for rid in base:
+            assert np.array_equal(outputs[rid], base[rid]), \
+                (rid, outputs[rid], base[rid])
+        stats = engine.prefix_cache.stats()
+        assert stats["prefix_cache_hits"] > 0, stats
+        assert stats["prefix_cache_reused_pages"] > 0, stats
+        assert engine.metrics.cache_hit_tokens > 0
+        engine.prefix_cache.clear()
+        engine.pool.check()
+        assert engine.pool.num_free == engine.pool.num_blocks
+        print(f"prefix-cache smoke OK (hit_rate="
+              f"{stats['prefix_cache_hit_rate']:.2f}, reused_pages="
+              f"{stats['prefix_cache_reused_pages']}, greedy parity)")
+        return
     if a.smoke:
         outputs, engine = serve_continuous(
             arch=a.arch, num_requests=3, num_slots=2, prompt_len=12, gen=6,
@@ -235,6 +304,10 @@ def main():
                      execute=a.execute, dispatcher=a.dispatcher,
                      adaptnet_ckpt=a.adaptnet_ckpt, kv_layout=a.kv_layout,
                      prefill_chunk=a.prefill_chunk or None,
+                     prefix_cache=a.prefix_cache,
+                     shared_prefix_decode=a.shared_prefix_decode,
+                     defrag_threshold=a.defrag_threshold,
+                     shared_prefix_len=a.shared_prefix_len,
                      trace_out=a.trace_out)
 
 

@@ -73,6 +73,15 @@ class Model:
                                          arena, block_tables, kv_lens,
                                          write_mask)
 
+    def paged_shared_decode_step(self, params, tokens, state, arena,
+                                 block_tables, kv_lens, write_mask,
+                                 prefix_pages, prefix_lens, unique_tables,
+                                 unique_lens):
+        return serving.paged_shared_decode_step(
+            params, tokens, self.cfg, state, arena, block_tables, kv_lens,
+            write_mask, prefix_pages, prefix_lens, unique_tables,
+            unique_lens)
+
 
 def build_model(cfg: ArchConfig) -> Model:
     return Model(cfg)

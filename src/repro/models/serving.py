@@ -28,7 +28,9 @@ from repro.models.transformer import (_embed, _frontend_embed, _maybe_remat,
                                       _scan_mamba_span, _unembed_weight,
                                       decoder_layer_apply, hybrid_layout,
                                       paged_decoder_layer_apply,
-                                      paged_prefill_layer_apply, Params)
+                                      paged_prefill_layer_apply,
+                                      paged_shared_decoder_layer_apply,
+                                      Params)
 from repro.models.modules import dense, rmsnorm
 
 Cache = Dict[str, Any]
@@ -222,6 +224,49 @@ def paged_decode_step(params: Params, tokens: jnp.ndarray, cfg: ArchConfig,
         new_arena = {"k": nk, "v": nv}
     else:
         x, new_arena = _scan_paged_layers(body, x, params, arena)
+
+    x = rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    return _lm_head(params, x[:, -1, :], cfg), new_arena
+
+
+def paged_shared_decode_step(params: Params, tokens: jnp.ndarray,
+                             cfg: ArchConfig, state: Dict[str, Any],
+                             arena: Dict[str, Any],
+                             block_tables: jnp.ndarray, kv_lens: jnp.ndarray,
+                             write_mask: jnp.ndarray,
+                             prefix_pages: jnp.ndarray,
+                             prefix_lens: jnp.ndarray,
+                             unique_tables: jnp.ndarray,
+                             unique_lens: jnp.ndarray
+                             ) -> Tuple[jnp.ndarray, Dict[str, Any]]:
+    """Cascade decode: like :func:`paged_decode_step`, but each lane's
+    attention splits into a shared-prefix phase (the hot ``prefix_pages``
+    are streamed ONCE per step for every lane in the sharing group) and a
+    per-lane unique phase over ``unique_tables``/``unique_lens``, merged by
+    online-softmax state.  The KV write still goes through the full
+    ``block_tables``.  GQA text families only (absorbed MLA and the
+    frontend families keep the plain paged path).  Returns ((S, V) logits,
+    new arena)."""
+    fam = cfg.family
+    if fam not in CHUNKED_PREFILL_FAMILIES or cfg.attention_type == "mla":
+        raise ValueError(f"family {fam!r}/{cfg.attention_type} cannot run "
+                         "shared-prefix cascade decode (GQA text families "
+                         "only)")
+    x = _embed(params, tokens, cfg)
+    positions = kv_lens[:, None]
+    wm = write_mask.astype(jnp.int32)
+
+    def body(h, xs):
+        layer_p, ak, av = xs
+        h, nk, nv = paged_shared_decoder_layer_apply(
+            layer_p, h, positions, cfg, k_arena=ak, v_arena=av,
+            block_tables=block_tables, kv_lens=kv_lens, write_mask=wm,
+            prefix_pages=prefix_pages, prefix_lens=prefix_lens,
+            unique_tables=unique_tables, unique_lens=unique_lens)
+        return h, (nk, nv)
+
+    body = _maybe_remat(body, cfg)
+    x, new_arena = _scan_paged_layers(body, x, params, arena)
 
     x = rmsnorm(x, params["ln_f"], cfg.norm_eps)
     return _lm_head(params, x[:, -1, :], cfg), new_arena

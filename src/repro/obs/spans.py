@@ -90,6 +90,14 @@ class RequestTracker:
         self.rec.slice("request", "prefill_chunk", self.rec.now() - dur,
                        dur, self._track(rid), rid=rid, tokens=tokens, **args)
 
+    def on_cache_hit(self, rid: str, **args) -> None:
+        """Prefix-cache hit at admission: the request's first ``tokens``
+        context tokens were mapped from cached pages instead of
+        prefilled."""
+        self._need(rid, ACTIVE)
+        self.rec.instant("request", "cache_hit", self._track(rid),
+                         rid=rid, **args)
+
     def on_first_token(self, rid: str, **args) -> None:
         self._need(rid, ACTIVE)
         self.rec.instant("request", "first_token", self._track(rid),

@@ -92,8 +92,9 @@ from repro.dispatch import SiteRegistry
 from repro.models.serving import PAGED_FAMILIES
 from repro.obs import (JitWatch, RequestTracker, StepTimeline, TraceRecorder,
                        write_chrome_trace, write_jsonl)
-from repro.serving.kv_pool import KVArena, KVBlockPool
+from repro.serving.kv_pool import KVArena, KVBlockPool, PoolError
 from repro.serving.metrics import ServingMetrics
+from repro.serving.prefix_cache import PrefixCache
 from repro.serving.scheduler import ContinuousScheduler, Request
 
 
@@ -194,6 +195,24 @@ class EngineConfig:
     # CHUNKED_PREFILL_FAMILIES family (dense/moe); None keeps the padded
     # bucketed prefill.
     prefill_chunk: Optional[int] = None
+    # Cross-request prefix caching (serving/prefix_cache.py): admission
+    # matches each prompt's longest cached page prefix, maps those pages
+    # into the new request's table (refcounted, copy-on-write on first
+    # write) and prefills only the suffix.  Requires prefill_chunk — cache
+    # hits admit mid-prompt, and only the chunked path can resume a
+    # prefill from a per-lane offset.
+    prefix_cache: bool = False
+    # Cascade decode: when >= 2 decode lanes' block tables start with the
+    # same physical pages, stream that shared prefix ONCE per step for the
+    # whole group (two-phase online-softmax merge) instead of once per
+    # lane.  Opt-in on top of prefix_cache: the merged softmax is
+    # mathematically exact but reassociated, so greedy parity with
+    # cache-off holds numerically rather than bitwise.  GQA text families
+    # only (absorbed MLA keeps the plain paged decode).
+    shared_prefix_decode: bool = False
+    # Auto-defrag: compact the pool after any step that leaves
+    # fragmentation() above this threshold (None = manual defrag() only).
+    defrag_threshold: Optional[float] = None
     # Observability (repro.obs): counters/gauges are ALWAYS on (a dict
     # update per event); ``trace=True`` additionally records span/instant
     # events — request lifecycle, step phases, dispatch/compile/arena —
@@ -277,11 +296,25 @@ class ServingEngine:
                       else e.num_slots * blocks_per_slot)
         self.pool = KVBlockPool(num_blocks, e.block_size)
         self.pool.attach_recorder(self.obs)
+        self.prefix_cache: Optional[PrefixCache] = None
+        if e.prefix_cache:
+            if self.prefill_chunk is None:
+                raise ValueError(
+                    "prefix_cache requires prefill_chunk: a cache hit "
+                    "admits a request mid-prompt, and only the chunked "
+                    "prefill path can resume from a per-lane offset")
+            self.prefix_cache = PrefixCache(self.pool, recorder=self.obs)
         self.sched = ContinuousScheduler(
             e.num_slots, self.pool,
             max_prefills_per_step=e.max_prefills_per_step, reserve=e.reserve,
             token_overhead=row_overhead, prefill_chunk=self.prefill_chunk,
-            tracker=self.req_spans)
+            tracker=self.req_spans, prefix_cache=self.prefix_cache)
+        # analytic per-token prefill cost (2*M*K*N over every GEMM site at
+        # M=1, layer sites times the stack depth) — what each cache-hit
+        # token avoids recomputing; feeds metrics.prefill_flops_saved
+        self._flops_per_token = float(sum(
+            2 * m * k * n * (1 if name == "lm_head" else cfg.num_layers)
+            for name, m, k, n in gemm_sites(cfg, 1)))
         self._last_tok = np.zeros((e.num_slots, 1), np.int32)
         self._prefill = JitWatch(jax.jit(self.model.prefill), "prefill",
                                  self.obs)
@@ -313,6 +346,19 @@ class ServingEngine:
                 self._chunk_prefill = JitWatch(
                     jax.jit(self.model.paged_prefill_step), "chunk_prefill",
                     self.obs)
+            self._paged_shared_decode = None
+            if e.shared_prefix_decode:
+                if self.prefix_cache is None:
+                    raise ValueError(
+                        "shared_prefix_decode needs prefix_cache: shared "
+                        "page runs only arise from cache-hit admissions")
+                if cfg.attention_type == "mla":
+                    raise ValueError(
+                        "shared_prefix_decode is GQA-only (absorbed MLA "
+                        "keeps the plain paged decode)")
+                self._paged_shared_decode = JitWatch(
+                    jax.jit(self.model.paged_shared_decode_step),
+                    "paged_shared_decode", self.obs)
             self._cache = None
         else:
             # stacked per-slot caches: leading axis = slot, lane batch=1
@@ -532,6 +578,9 @@ class ServingEngine:
             if not self.sched.grow(req, req.prefill_pos + n):
                 self.metrics.stalls += 1
                 continue
+            if not self._cow_chunk_pages(req, req.prefill_pos, n):
+                self.metrics.stalls += 1
+                continue
             ctx = req.context()
             toks[slot, :n] = ctx[req.prefill_pos:req.prefill_pos + n]
             chunk[slot] = n
@@ -600,6 +649,15 @@ class ServingEngine:
             if req.prefill_pos < req.context_len:
                 continue                 # more chunks to stream next step
             req.prefilling = False
+            if self.prefix_cache is not None:
+                # index the finished prompt's fully-covered pages; its
+                # content is frozen by construction from here on (decode
+                # only appends rows >= prompt_len) so pinning is safe.
+                # Spans already cached keep their existing page.
+                nfull = req.prompt_len // e.block_size
+                if nfull:
+                    self.prefix_cache.insert(
+                        req.prompt, self.pool.table(req.rid).blocks[:nfull])
             tok = int(sampled[slot])
             first = not req.generated
             req.generated.append(tok)
@@ -611,6 +669,32 @@ class ServingEngine:
                 self.req_spans.on_first_token(req.rid)
             if req.done():
                 self._retire(req)
+
+    def _cow_chunk_pages(self, req: Request, pos: int, n: int) -> bool:
+        """Copy-on-write gate for the pages the coming chunk writes (rows
+        ``[pos, pos + n)``).  A cache-hit lane's first recomputed token can
+        land inside a shared or pinned page (the minus-one resume offset,
+        or a readmitted lane re-streaming over pages it donated to the
+        cache), and writing through the arena would corrupt every other
+        owner — so each target page is made private first.  A COW that
+        cannot get a free page evicts cache entries; if the pool is still
+        dry the lane stalls exactly like a failed ``grow()``."""
+        if self.prefix_cache is None or n <= 0:
+            return True
+        bs = self.ecfg.block_size
+        for pi in range(pos // bs, (pos + n - 1) // bs + 1):
+            while True:
+                try:
+                    self.pool.ensure_writable(req.rid, pi)
+                    break
+                except PoolError:
+                    # ensure_writable only raises when the free list is
+                    # empty; any successful eviction guarantees progress
+                    if self.prefix_cache.evict(1) == 0:
+                        req.stalled = True
+                        return False
+        req.stalled = False
+        return True
 
     def _retire(self, req: Request) -> None:
         slot = req.slot
@@ -647,6 +731,10 @@ class ServingEngine:
         self.timeline.begin()
         try:
             self._step_body()
+            thr = self.ecfg.defrag_threshold
+            if thr is not None and self.pool.fragmentation() > thr:
+                self.obs.count("kv_defrag_auto", 1)
+                self.defrag()
         finally:
             e = self.ecfg
             self.obs.gauge("kv_pages_in_use", self.pool.num_in_use)
@@ -661,6 +749,18 @@ class ServingEngine:
     def _step_body(self) -> None:
         with self.timeline.phase("schedule"):
             plan = self.sched.plan(self.now())
+        for req in plan.prefills:
+            if req.cached_prefix_tokens:
+                # cache-hit admission: the lane's first pages arrived
+                # pre-written (shared), so decode bookkeeping and the chunk
+                # stream both resume at the cached offset
+                self._kv_rows[req.slot] = req.prefill_pos
+                self.metrics.on_cache_hit(req.cached_prefix_tokens,
+                                          req.cached_pages,
+                                          self._flops_per_token)
+                self.req_spans.on_cache_hit(req.rid,
+                                            tokens=req.cached_prefix_tokens,
+                                            pages=req.cached_pages)
         if self.prefill_chunk is not None:
             self._do_chunk_prefills()
         else:
@@ -765,19 +865,102 @@ class ServingEngine:
         tables = self.pool.dense_block_table(rids, width)
         toks = jnp.asarray(self._last_tok)                   # (S, 1)
         self.obs.gauge("decode_table_width", width)
+        group = None
+        if self._paged_shared_decode is not None:
+            group = self._shared_prefix_group(active, kv, wm)
         t0 = time.time()
-        with self._dispatch_scope("decode"), \
-                self.timeline.phase("paged_decode", lanes=len(active),
-                                    width=width):
-            logits, leaves = self._paged_decode(
-                self.params, toks, self._state, self.arena.leaves,
-                jnp.asarray(tables), jnp.asarray(kv), jnp.asarray(wm))
+        if group is not None:
+            prefix_pages, prefix_lens, utables, ulens, kv_read, npages = group
+            self.obs.count("shared_prefix_steps", 1)
+            self.obs.gauge("shared_prefix_lanes",
+                           int((prefix_lens > 0).sum()))
+            with self._dispatch_scope("decode"), \
+                    self.timeline.phase("paged_decode", lanes=len(active),
+                                        width=width, shared_pages=npages):
+                logits, leaves = self._paged_shared_decode(
+                    self.params, toks, self._state, self.arena.leaves,
+                    jnp.asarray(tables), jnp.asarray(kv), jnp.asarray(wm),
+                    jnp.asarray(prefix_pages), jnp.asarray(prefix_lens),
+                    jnp.asarray(utables), jnp.asarray(ulens))
+        else:
+            kv_read = e.block_size * sum(need)
+            with self._dispatch_scope("decode"), \
+                    self.timeline.phase("paged_decode", lanes=len(active),
+                                        width=width):
+                logits, leaves = self._paged_decode(
+                    self.params, toks, self._state, self.arena.leaves,
+                    jnp.asarray(tables), jnp.asarray(kv), jnp.asarray(wm))
         with self.timeline.phase("sync"):
             logits, leaves = jax.block_until_ready((logits, leaves))
         dt = time.time() - t0
         self.obs.add_scope_wall("decode", dt)
         self.arena.leaves = leaves
-        return np.asarray(logits), dt, e.block_size * sum(need)
+        return np.asarray(logits), dt, kv_read
+
+    def _shared_prefix_group(self, active: Dict[int, Request],
+                             kv: np.ndarray, wm: np.ndarray):
+        """Detect the hottest shared page run among the decode lanes: the
+        largest group (>= 2 lanes) whose block tables begin with the same
+        physical pages, with >= 1 fully-written common page.  Returns the
+        cascade-kernel operands ``(prefix_pages, prefix_lens,
+        unique_tables, unique_lens, kv_read_rows, n_prefix_pages)`` —
+        padded to power-of-two widths like the plain decode tables — or
+        ``None`` when no group exists this step."""
+        e = self.ecfg
+        S, bs = e.num_slots, e.block_size
+        blocks = {s: self.pool.table(r.rid).blocks
+                  for s, r in active.items()}
+        groups: Dict[int, List[int]] = {}
+        for s, b in blocks.items():
+            # only fully-written pages can sit in the shared phase (it
+            # reads whole pages), so a lane needs >= bs committed rows
+            if b and int(kv[s]) >= bs:
+                groups.setdefault(b[0], []).append(s)
+        if not groups:
+            return None
+        best = max(groups.values(), key=len)
+        if len(best) < 2:
+            return None
+        # longest common physical prefix, capped at each member's fully
+        # written pages — the pending token's row must stay in the unique
+        # phase (it is written this very step)
+        P = min(min(int(kv[s]) // bs for s in best),
+                min(len(blocks[s]) for s in best))
+        first = blocks[best[0]]
+        i = 0
+        while i < P and all(blocks[s][i] == first[i] for s in best[1:]):
+            i += 1
+        P = i
+        if P < 1:
+            return None
+        members = set(best)
+        prefix_lens = np.zeros((S,), np.int32)
+        ulens = np.zeros((S,), np.int32)
+        for s in active:
+            attn = int(kv[s]) + int(wm[s])
+            if s in members:
+                prefix_lens[s] = P * bs
+                ulens[s] = attn - P * bs
+            else:
+                ulens[s] = attn
+        uneed = max(self.pool.blocks_for(int(n)) for n in ulens)
+        uw = KVBlockPool.table_width(max(uneed, 1),
+                                     self._max_blocks_per_slot)
+        utables = np.zeros((S, uw), np.int32)
+        for s in active:
+            off = P if s in members else 0
+            b = blocks[s][off:off + uw]
+            if b:
+                utables[s, :len(b)] = b
+                utables[s, len(b):] = b[-1]
+        pw = KVBlockPool.table_width(P, self._max_blocks_per_slot)
+        prefix_pages = np.full((pw,), first[P - 1], np.int32)
+        prefix_pages[:P] = first[:P]
+        # the measured win: the P shared pages stream once for the whole
+        # group instead of once per member lane
+        kv_read = bs * (P + sum(self.pool.blocks_for(int(n))
+                                for n in ulens))
+        return prefix_pages, prefix_lens, utables, ulens, kv_read, P
 
     def run(self, requests: Sequence[Request]) -> Dict[str, np.ndarray]:
         """Serve a request set to completion; returns {rid: generated}."""
@@ -825,6 +1008,11 @@ class ServingEngine:
         s["kv_peak_blocks"] = self.pool.peak_in_use
         s["kv_fragmentation"] = self.pool.fragmentation()
         s["kv_defrag_block_moves"] = self.pool.defrag_moves
+        s["kv_defrag_auto"] = int(self.obs.counters.get("kv_defrag_auto", 0))
+        s["kv_shared_pages"] = self.pool.shared_pages
+        s["kv_cow_copies"] = self.pool.cow_copies
+        if self.prefix_cache is not None:
+            s.update(self.prefix_cache.stats())
         return s
 
     # -- observability export -------------------------------------------------

@@ -20,6 +20,19 @@ applies it to the bound arena as one batched gather over the page axis, so
 the freed tail is physically contiguous (the flashinfer-style layout the
 ROADMAP named).  Unbound pools (the engine's dense fallback layout) keep
 defrag as pure bookkeeping, exactly as before.
+
+Sharing (prefix caching): pages are *refcounted*.  ``share(rid, pages)``
+maps already-written pages into a new request's table without copying —
+the vLLM block-pool move that makes cross-request prefix reuse free.  Two
+counters guard each page: ``_refs`` (how many block tables name it) and
+``_pins`` (whether the prefix cache holds it); a page returns to the free
+list only when both hit zero.  ``ensure_writable(rid, i)`` is the
+copy-on-write gate: before a request writes into logical page ``i``, a
+page that is shared (refs > 1) or cached (pinned) is replaced by a fresh
+private copy (one page gather in the bound arena), so the sibling readers
+never observe the write.  ``defrag()`` moves only exclusively-owned,
+unpinned pages — shared/pinned pages are landmarks other tables and the
+cache index at by physical id.
 """
 
 from __future__ import annotations
@@ -76,6 +89,12 @@ class KVArena:
                        for name, leaf in self.leaves.items()}
         return len(moves)
 
+    def copy_page(self, src: int, dst: int) -> None:
+        """Copy one physical page (copy-on-write divergence): every leaf's
+        page ``dst`` becomes a copy of page ``src``."""
+        self.leaves = {name: leaf.at[:, dst].set(leaf[:, src])
+                       for name, leaf in self.leaves.items()}
+
 
 @dataclass
 class BlockTable:
@@ -100,7 +119,12 @@ class KVBlockPool:
     compacts live blocks to the front (mirroring moves into the bound
     :class:`KVArena`'s storage when one is attached via ``bind_arena``).
     ``check()`` asserts the ownership invariants; tests call it after
-    every scenario."""
+    every scenario.
+
+    Pages are refcounted for cross-request sharing: ``share`` maps live
+    pages into a new table, ``pin``/``unpin`` add a cache reference, and
+    ``ensure_writable`` performs copy-on-write before a request mutates a
+    page other owners can still see."""
 
     def __init__(self, num_blocks: int, block_size: int):
         if num_blocks <= 0 or block_size <= 0:
@@ -108,13 +132,16 @@ class KVBlockPool:
         self.num_blocks = num_blocks
         self.block_size = block_size
         self._free: deque = deque(range(num_blocks))
-        self._owner: List[Optional[str]] = [None] * num_blocks
+        self._refs: List[int] = [0] * num_blocks   # block-table references
+        self._pins: List[int] = [0] * num_blocks   # prefix-cache references
         self._tables: Dict[str, BlockTable] = {}
         self.peak_in_use = 0
         self.arena: Optional[KVArena] = None
         self.defrag_moves = 0          # lifetime pages moved by defrag()
+        self.shared_pages = 0          # lifetime pages mapped via share()
+        self.cow_copies = 0            # lifetime copy-on-write divergences
         # optional trace sink (repro.obs.TraceRecorder): reserve / grow /
-        # free / defrag land as "arena" events + always-on counters
+        # free / defrag / share / cow land as "arena" events + counters
         self.recorder = None
 
     def attach_recorder(self, recorder) -> None:
@@ -197,13 +224,20 @@ class KVBlockPool:
                 t[i, len(blocks):] = blocks[-1]
         return t
 
+    def refcount(self, bid: int) -> int:
+        return self._refs[bid]
+
+    def pincount(self, bid: int) -> int:
+        return self._pins[bid]
+
     # -- alloc / extend / free ----------------------------------------------
     def _take_block(self, request_id: str) -> int:
         bid = self._free.popleft()
-        if self._owner[bid] is not None:
+        if self._refs[bid] or self._pins[bid]:
             raise PoolError(f"block {bid} double-allocated "
-                            f"({self._owner[bid]} -> {request_id})")
-        self._owner[bid] = request_id
+                            f"(refs={self._refs[bid]} pins={self._pins[bid]} "
+                            f"-> {request_id})")
+        self._refs[bid] = 1
         return bid
 
     def alloc(self, request_id: str, num_tokens: int) -> BlockTable:
@@ -240,56 +274,155 @@ class KVBlockPool:
         return new
 
     def free(self, request_id: str) -> int:
-        """Return every block owned by the request; returns the count."""
+        """Release the request's reference on every block in its table;
+        returns the number of pages actually reclaimed (a shared or pinned
+        page outlives the release — its last owner reclaims it)."""
         t = self._tables.pop(request_id)
+        released = 0
         for bid in t.blocks:
-            if self._owner[bid] != request_id:
-                raise PoolError(f"block {bid} not owned by {request_id}")
-            self._owner[bid] = None
+            if self._refs[bid] <= 0:
+                raise PoolError(f"block {bid} freed with refcount 0 "
+                                f"({request_id})")
+            self._refs[bid] -= 1
+            if self._refs[bid] == 0 and self._pins[bid] == 0:
+                self._free.append(bid)
+                released += 1
+        self._trace("free", request_id, released, held=len(t.blocks))
+        return released
+
+    # -- sharing: refcounts, pins, copy-on-write -----------------------------
+    def share(self, request_id: str, pages: Sequence[int]) -> BlockTable:
+        """Map already-written live pages into a new request's table without
+        copying (one new table reference per page).  The table's initial
+        ``num_tokens`` is the shared pages' full capacity; the caller
+        ``extend``\\ s it for the suffix it still has to prefill."""
+        if request_id in self._tables:
+            raise PoolError(f"request {request_id} already has a block table")
+        t = BlockTable(request_id)
+        for bid in pages:
+            if not 0 <= bid < self.num_blocks or \
+                    (self._refs[bid] == 0 and self._pins[bid] == 0):
+                raise PoolError(f"cannot share dead page {bid}")
+            self._refs[bid] += 1
+            t.blocks.append(bid)
+        t.num_tokens = len(t.blocks) * self.block_size
+        self._tables[request_id] = t
+        self.shared_pages += len(t.blocks)
+        self.peak_in_use = max(self.peak_in_use, self.num_in_use)
+        if t.blocks:
+            self._trace("share", request_id, len(t.blocks))
+        return t
+
+    def pin(self, bid: int) -> None:
+        """Add a cache reference: the page survives (and never moves) after
+        every table releases it, until ``unpin``."""
+        if self._refs[bid] == 0 and self._pins[bid] == 0:
+            raise PoolError(f"cannot pin free block {bid}")
+        self._pins[bid] += 1
+
+    def unpin(self, bid: int) -> bool:
+        """Drop a cache reference; returns True when that reclaimed the
+        page (no table references it either)."""
+        if self._pins[bid] <= 0:
+            raise PoolError(f"block {bid} not pinned")
+        self._pins[bid] -= 1
+        if self._pins[bid] == 0 and self._refs[bid] == 0:
             self._free.append(bid)
-        self._trace("free", request_id, len(t.blocks))
-        return len(t.blocks)
+            return True
+        return False
+
+    def ensure_writable(self, request_id: str, page_index: int) -> int:
+        """Copy-on-write gate: make logical page ``page_index`` of the
+        request's table safe to mutate.  Exclusive unpinned pages pass
+        through; a shared or pinned page is swapped for a fresh private
+        copy (page gather in the bound arena).  Returns the physical id
+        the caller may now write.  Raises :class:`PoolError` when no free
+        block is available for the copy (caller may evict cache entries
+        and retry)."""
+        t = self._tables[request_id]
+        bid = t.blocks[page_index]
+        if self._refs[bid] == 1 and self._pins[bid] == 0:
+            return bid
+        if not self._free:
+            raise PoolError(f"OOM: copy-on-write of block {bid} needs a "
+                            f"free block")
+        new = self._take_block(request_id)
+        if self.arena is not None:
+            self.arena.copy_page(bid, new)
+        t.blocks[page_index] = new
+        self._refs[bid] -= 1
+        if self._refs[bid] == 0 and self._pins[bid] == 0:
+            self._free.append(bid)
+        self.cow_copies += 1
+        self.peak_in_use = max(self.peak_in_use, self.num_in_use)
+        self._trace("cow", request_id, 1, src=bid, dst=new,
+                    page_index=page_index)
+        return new
 
     # -- defrag --------------------------------------------------------------
     def defrag(self) -> Dict[int, int]:
-        """Compact live blocks to the lowest physical ids (stable order:
-        table order within request, requests by first block) and mirror the
-        moves into the bound arena's page storage (a single batched gather
-        per K/V leaf).  Returns the {old_id: new_id} move map; afterwards
-        the free list is the contiguous tail."""
+        """Compact exclusively-owned live blocks to the lowest physical ids
+        (stable order: table order within request, requests by first block)
+        and mirror the moves into the bound arena's page storage (a single
+        batched gather per K/V leaf).  Shared (refcount > 1) and pinned
+        pages never move: other tables and the prefix-cache index hold
+        them by physical id.  With no sharing this degenerates to full
+        compaction with a contiguous free tail.  Returns the
+        {old_id: new_id} move map."""
+        immovable = {bid for bid in range(self.num_blocks)
+                     if self._pins[bid] > 0 or self._refs[bid] > 1}
         order = sorted(self._tables.values(),
                        key=lambda t: t.blocks[0] if t.blocks else 0)
         moves: Dict[int, int] = {}
+        occupied = set(immovable)
         nxt = 0
-        new_owner: List[Optional[str]] = [None] * self.num_blocks
         for t in order:
             for i, bid in enumerate(t.blocks):
+                if bid in immovable:
+                    continue
+                while nxt in immovable:
+                    nxt += 1
                 if bid != nxt:
                     moves[bid] = nxt
                 t.blocks[i] = nxt
-                new_owner[nxt] = t.request_id
+                occupied.add(nxt)
                 nxt += 1
-        self._owner = new_owner
-        self._free = deque(range(nxt, self.num_blocks))
+        new_refs = [0] * self.num_blocks
+        for t in self._tables.values():
+            for bid in t.blocks:
+                new_refs[bid] += 1
+        self._refs = new_refs
+        self._free = deque(b for b in range(self.num_blocks)
+                           if b not in occupied)
         if self.arena is not None:
             # the counter records physical page moves, so it only advances
             # when storage is bound (unbound defrag is table bookkeeping)
             self.arena.apply_moves(moves)
             self.defrag_moves += len(moves)
         self._trace("defrag", "_pool", len(moves),
-                    storage_moved=self.arena is not None)
+                    storage_moved=self.arena is not None,
+                    pinned_landmarks=len(immovable))
         return moves
 
     # -- invariant check (tests / debug) -------------------------------------
     def check(self) -> None:
-        seen: Dict[int, str] = {}
+        refs = [0] * self.num_blocks
         for t in self._tables.values():
+            if len(set(t.blocks)) != len(t.blocks):
+                raise PoolError(f"table {t.request_id} names a page twice")
             for bid in t.blocks:
-                if bid in seen:
-                    raise PoolError(f"block {bid} owned by both "
-                                    f"{seen[bid]} and {t.request_id}")
-                if self._owner[bid] != t.request_id:
-                    raise PoolError(f"owner mismatch for block {bid}")
-                seen[bid] = t.request_id
-        if len(seen) + len(self._free) != self.num_blocks:
-            raise PoolError("free list + live tables do not cover the pool")
+                refs[bid] += 1
+        if refs != self._refs:
+            bad = [b for b in range(self.num_blocks)
+                   if refs[b] != self._refs[b]]
+            raise PoolError(f"refcount drift on blocks {bad[:8]}")
+        if any(p < 0 for p in self._pins):
+            raise PoolError("negative pin count")
+        free = sorted(self._free)
+        if len(free) != len(set(free)):
+            raise PoolError("free list names a block twice")
+        expect = [b for b in range(self.num_blocks)
+                  if refs[b] == 0 and self._pins[b] == 0]
+        if free != expect:
+            raise PoolError("free list does not equal the unreferenced, "
+                            "unpinned block set")

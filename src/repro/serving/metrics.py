@@ -51,6 +51,13 @@ class ServingMetrics:
     # tokens, not bucket shapes)
     prefill_kv_write_rows: int = 0
     prefill_kv_write_rows_padded: int = 0
+    # Cross-request prefix cache (serving/prefix_cache.py): prompt tokens /
+    # pages an admission mapped from cached pages instead of recomputing,
+    # and the analytic prefill FLOPs that avoided (per-token GEMM cost
+    # summed over the model's sites at M=1)
+    cache_hit_tokens: int = 0
+    cache_hit_pages: int = 0
+    prefill_flops_saved: float = 0.0
     # Rolling windows (last ``rolling_window`` samples) so a long run's
     # summary reports live behaviour, not lifetime averages: a regression
     # an hour in is invisible in a lifetime p99 but jumps out of a
@@ -88,6 +95,14 @@ class ServingMetrics:
         self.prefill_s += seconds
         self.prefill_kv_write_rows += kv_write_rows
         self.prefill_kv_write_rows_padded += kv_write_rows_padded
+
+    def on_cache_hit(self, tokens: int, pages: int,
+                     flops_per_token: float = 0.0) -> None:
+        """One admission that matched a cached prefix: ``tokens`` context
+        tokens arrived pre-written in ``pages`` shared pages."""
+        self.cache_hit_tokens += tokens
+        self.cache_hit_pages += pages
+        self.prefill_flops_saved += tokens * flops_per_token
 
     def on_decode_step(self, active: int, slots: int, tokens: int,
                        seconds: float, kv_read_tokens: int = 0,
@@ -145,6 +160,9 @@ class ServingMetrics:
                 self.prefill_kv_write_rows_padded
                 / max(self.prefill_kv_write_rows, 1)
                 if self.prefill_kv_write_rows_padded else 1.0),
+            "cache_hit_tokens": self.cache_hit_tokens,
+            "cache_hit_pages": self.cache_hit_pages,
+            "prefill_flops_saved": self.prefill_flops_saved,
         }
         if sara_cache:
             hits = sara_cache.get("hits", 0)

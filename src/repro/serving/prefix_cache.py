@@ -1,0 +1,194 @@
+"""Cross-request prefix cache: a page-granular radix trie over token ids.
+
+Most serving traffic at scale shares prompt *prefixes* — system prompts,
+few-shot preambles, conversation history.  This index remembers, per
+completed prefill, which physical KV pages hold which token-id page
+(``block_size`` tokens), keyed by the exact token bytes, so a later
+request whose prompt starts with the same tokens can ``share`` those
+pages instead of recomputing and rewriting them (the vLLM/SGLang
+radix-cache move on top of this repo's refcounted block pool).
+
+Granularity is one pool page: a trie node holds the physical page id for
+one ``block_size``-token span, children keyed by the *next* span's token
+bytes.  ``match`` walks the longest cached prefix of a prompt;
+``insert`` pins a finished request's fully-covered prompt pages into the
+trie (pin = cache reference in :class:`~repro.serving.kv_pool.KVBlockPool`
+— the page survives table frees and never moves in defrag); ``evict``
+drops least-recently-used *leaf* entries whose page no live table still
+references, walking leaves-first so an interior page is never orphaned
+while a longer cached prefix still needs it.
+
+Correctness leans on one immutability argument: a cached page covers only
+rows ``< floor(prompt_len / block_size) * block_size``, and its donor
+only ever writes rows ``>= prompt_len`` after insertion (decode appends),
+so a pinned page's content is frozen by construction; writers that *do*
+touch a shared page (the suffix chunk of a whole-prompt hit) go through
+the pool's copy-on-write gate first.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from .kv_pool import KVBlockPool
+
+
+class _Node:
+    __slots__ = ("key", "page", "parent", "children", "stamp")
+
+    def __init__(self, key: Optional[bytes], page: int,
+                 parent: Optional["_Node"]):
+        self.key = key
+        self.page = page
+        self.parent = parent
+        self.children: Dict[bytes, "_Node"] = {}
+        self.stamp = 0
+
+
+class PrefixCache:
+    """Radix/trie index from token-id prefixes to pinned pool pages."""
+
+    def __init__(self, pool: KVBlockPool, recorder=None):
+        self.pool = pool
+        self.block_size = pool.block_size
+        self.recorder = recorder
+        self._root = _Node(None, -1, None)
+        self._clock = 0                 # monotone LRU stamp
+        self.hits = 0                   # submits that matched >= 1 page
+        self.misses = 0
+        self.reused_pages = 0           # lifetime pages returned by match
+        self.inserted_pages = 0
+        self.evicted_pages = 0
+
+    # -- lookup --------------------------------------------------------------
+    def _page_keys(self, tokens: np.ndarray, limit: Optional[int] = None):
+        n_full = len(tokens) // self.block_size
+        if limit is not None:
+            n_full = min(n_full, limit)
+        for i in range(n_full):
+            yield tokens[i * self.block_size:(i + 1) * self.block_size] \
+                .astype(np.int32, copy=False).tobytes()
+
+    def match(self, tokens: np.ndarray) -> List[int]:
+        """Longest cached prefix of ``tokens``, full pages only.  Returns
+        the physical page ids in logical order (possibly empty) and
+        touches every node on the path for LRU.  Pure lookup — the
+        scheduler calls :meth:`record_lookup` once per *admission*, so a
+        request re-tried across steps is not double-counted."""
+        node, pages = self._root, []
+        for key in self._page_keys(tokens):
+            child = node.children.get(key)
+            if child is None:
+                break
+            self._clock += 1
+            child.stamp = self._clock
+            pages.append(child.page)
+            node = child
+        return pages
+
+    def record_lookup(self, matched_pages: int) -> None:
+        """Account one admission-time lookup in the hit/miss counters."""
+        if matched_pages > 0:
+            self.hits += 1
+            self.reused_pages += matched_pages
+        else:
+            self.misses += 1
+
+    # -- insert --------------------------------------------------------------
+    def insert(self, tokens: np.ndarray, blocks: List[int]) -> int:
+        """Index a finished prefill: pin ``blocks[i]`` as the page for the
+        i-th full token page of ``tokens``.  Spans already cached keep
+        their existing page (the donor's copy — possibly a COW divergence
+        of the cached one — is simply not indexed).  Returns the number of
+        newly pinned pages."""
+        node, added = self._root, 0
+        n_full = min(len(tokens) // self.block_size, len(blocks))
+        for i, key in enumerate(self._page_keys(tokens, n_full)):
+            child = node.children.get(key)
+            if child is None:
+                page = blocks[i]
+                self.pool.pin(page)
+                child = _Node(key, page, node)
+                node.children[key] = child
+                added += 1
+            self._clock += 1
+            child.stamp = self._clock
+            node = child
+        self.inserted_pages += added
+        if added and self.recorder is not None:
+            self.recorder.count("prefix_cache_inserted_pages", added)
+        return added
+
+    # -- eviction ------------------------------------------------------------
+    def _leaves(self) -> List[_Node]:
+        out, stack = [], list(self._root.children.values())
+        while stack:
+            n = stack.pop()
+            if n.children:
+                stack.extend(n.children.values())
+            else:
+                out.append(n)
+        return out
+
+    def evict(self, need_pages: int) -> int:
+        """Unpin least-recently-used cached prefixes until ``need_pages``
+        pool pages have actually been reclaimed (only pages no live table
+        references free immediately).  Leaves evict first so interior
+        pages are never orphaned.  Returns the number of pages freed."""
+        freed = 0
+        while freed < need_pages:
+            best = None
+            for leaf in self._leaves():
+                if self.pool.refcount(leaf.page) == 0 and \
+                        (best is None or leaf.stamp < best.stamp):
+                    best = leaf
+            if best is None:
+                break
+            del best.parent.children[best.key]
+            self.pool.unpin(best.page)
+            freed += 1
+            self.evicted_pages += 1
+        if freed and self.recorder is not None:
+            self.recorder.count("prefix_cache_evicted_pages", freed)
+        return freed
+
+    def clear(self) -> int:
+        """Drop every cache entry (unpinning all pages); returns the
+        number of entries removed.  Tests and shutdown paths use this to
+        return the pool to the fully-free state."""
+        dropped = 0
+        stack = list(self._root.children.values())
+        while stack:
+            n = stack.pop()
+            stack.extend(n.children.values())
+            self.pool.unpin(n.page)
+            dropped += 1
+        self._root.children.clear()
+        return dropped
+
+    # -- stats ---------------------------------------------------------------
+    @property
+    def num_entries(self) -> int:
+        count, stack = 0, list(self._root.children.values())
+        while stack:
+            n = stack.pop()
+            count += 1
+            stack.extend(n.children.values())
+        return count
+
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+    def stats(self) -> Dict[str, float]:
+        return {
+            "prefix_cache_hits": self.hits,
+            "prefix_cache_misses": self.misses,
+            "prefix_cache_hit_rate": round(self.hit_rate(), 4),
+            "prefix_cache_reused_pages": self.reused_pages,
+            "prefix_cache_inserted_pages": self.inserted_pages,
+            "prefix_cache_evicted_pages": self.evicted_pages,
+            "prefix_cache_entries": self.num_entries,
+        }

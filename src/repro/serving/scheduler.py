@@ -62,6 +62,10 @@ class Request:
     # the cache during the current prefill
     prefilling: bool = False
     prefill_pos: int = 0
+    # prefix-cache telemetry: tokens / pages the current admission mapped
+    # from the cache instead of recomputing (reset on preempt)
+    cached_prefix_tokens: int = 0
+    cached_pages: int = 0
     t_admit: float = -1.0
     t_first_token: float = -1.0
     t_done: float = -1.0
@@ -116,7 +120,7 @@ class ContinuousScheduler:
                  max_prefills_per_step: int = 1, reserve: str = "full",
                  token_overhead: int = 0,
                  prefill_chunk: Optional[int] = None,
-                 tracker=None):
+                 tracker=None, prefix_cache=None):
         if reserve not in ("full", "incremental"):
             raise ValueError(reserve)
         self.num_slots = num_slots
@@ -133,12 +137,25 @@ class ContinuousScheduler:
         # that overhead lives outside the metered budget)
         self.token_overhead = token_overhead
         self.prefill_chunk = prefill_chunk
+        # optional PrefixCache (serving/prefix_cache.py): admission matches
+        # each prompt's longest cached prefix, shares those pages into the
+        # new table, and reserves pool blocks only for the suffix
+        self.prefix_cache = prefix_cache
         self.waiting: deque = deque()
         self.active: Dict[int, Request] = {}
         self._free_slots = list(range(num_slots - 1, -1, -1))
 
     # -- queue ----------------------------------------------------------------
     def submit(self, req: Request) -> None:
+        # a prompt whose pages alone exceed the whole pool can never be
+        # admitted under any reservation policy: admission would retry (or
+        # chunk-grow would stall) forever — reject up front instead of
+        # livelocking the queue head
+        floor = self.pool.blocks_for(self.token_overhead + req.prompt_len)
+        if floor > self.pool.num_blocks:
+            raise PoolError(
+                f"request {req.rid}: prompt needs {floor} blocks, pool has "
+                f"{self.pool.num_blocks} — can never be admitted")
         self.waiting.append(req)
         if self.tracker is not None:
             self.tracker.on_submit(req.rid, prompt_len=req.prompt_len,
@@ -151,17 +168,35 @@ class ContinuousScheduler:
         return not self.waiting and not self.active
 
     # -- planning -------------------------------------------------------------
-    def _reservation(self, req: Request) -> int:
+    def _reservation(self, req: Request, cached_tokens: int = 0) -> int:
         if self.reserve == "full":
             return self.token_overhead + req.prompt_len + req.max_new_tokens + 1
         if self.prefill_chunk:
             # chunk-incremental: admission covers only the first chunk's
             # rows (+ the per-request overhead); every later chunk and
             # decoded token extends through grow(), so mid-prefill
-            # preemption frees exactly what was written
-            return self.token_overhead + min(self.prefill_chunk,
+            # preemption frees exactly what was written.  A cache hit
+            # starts the first chunk at the cached offset, so the
+            # reservation covers the shared pages plus one chunk.
+            return self.token_overhead + min(cached_tokens + self.prefill_chunk,
                                              req.context_len)
         return self.token_overhead + req.context_len + 1
+
+    def _match_prefix(self, req: Request):
+        """(pages, cached_offset) for the head-of-queue request: the
+        longest cached prefix's pages and the context position prefill
+        resumes from.  The offset is capped at ``prompt_len - 1`` so at
+        least one suffix token is always recomputed — the final chunk must
+        emit first-token logits even when the cache covers the whole
+        prompt (the write into that last shared page is what exercises
+        copy-on-write)."""
+        if self.prefix_cache is None or not self.prefill_chunk:
+            return [], 0
+        pages = self.prefix_cache.match(req.prompt)
+        if not pages:
+            return [], 0
+        offset = min(len(pages) * self.pool.block_size, req.prompt_len - 1)
+        return pages, offset
 
     def plan(self, now: float = float("inf")) -> StepPlan:
         """Admit up to ``max_prefills_per_step`` arrived requests into free
@@ -171,14 +206,35 @@ class ContinuousScheduler:
                and self._free_slots and self.waiting
                and self.waiting[0].arrival_time <= now):
             req = self.waiting[0]
-            if not self.pool.can_alloc(self._reservation(req)):
-                break                    # FCFS: don't starve the head
+            pages, offset = self._match_prefix(req)
+            reservation = self._reservation(req, cached_tokens=offset)
+            need_new = self.pool.blocks_for(reservation) - len(pages)
+            if need_new > self.pool.num_free:
+                # pool pressure: reclaim LRU unpinned cache entries before
+                # giving up on the queue head
+                if self.prefix_cache is not None:
+                    self.prefix_cache.evict(need_new - self.pool.num_free)
+                if need_new > self.pool.num_free:
+                    break                # FCFS: don't starve the head
             self.waiting.popleft()
             req.slot = self._free_slots.pop()
             req.t_admit = now if now != float("inf") else req.arrival_time
             req.prefilling = True
-            req.prefill_pos = 0
-            self.pool.alloc(req.rid, self._reservation(req))
+            if pages:
+                # map the cached prefix pages, then reserve the suffix
+                self.pool.share(req.rid, pages)
+                self.pool.extend(req.rid, max(
+                    reservation, len(pages) * self.pool.block_size))
+                req.prefill_pos = offset
+                req.cached_prefix_tokens = offset
+                req.cached_pages = len(pages)
+            else:
+                self.pool.alloc(req.rid, reservation)
+                req.prefill_pos = 0
+                req.cached_prefix_tokens = 0
+                req.cached_pages = 0
+            if self.prefix_cache is not None and self.prefill_chunk:
+                self.prefix_cache.record_lookup(len(pages))
             self.active[req.slot] = req
             prefills.append(req)
             if self.tracker is not None:
@@ -196,6 +252,9 @@ class ContinuousScheduler:
             table.num_tokens = max(table.num_tokens, total_tokens)
             req.stalled = False
             return True
+        need = self.pool.blocks_for(total_tokens) - len(table.blocks)
+        if need > self.pool.num_free and self.prefix_cache is not None:
+            self.prefix_cache.evict(need - self.pool.num_free)
         try:
             self.pool.extend(req.rid, total_tokens)
             req.stalled = False
@@ -229,6 +288,8 @@ class ContinuousScheduler:
         req.stalled = False
         req.prefilling = False       # recompute-on-readmit streams anew
         req.prefill_pos = 0
+        req.cached_prefix_tokens = 0
+        req.cached_pages = 0
         req.t_done = -1.0
         self.waiting.appendleft(req)
         if self.tracker is not None:
