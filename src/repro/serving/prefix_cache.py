@@ -28,7 +28,8 @@ the pool's copy-on-write gate first.
 
 from __future__ import annotations
 
-from typing import Dict, List, Optional
+import heapq
+from typing import Dict, Iterable, List, Optional
 
 import numpy as np
 
@@ -132,24 +133,42 @@ class PrefixCache:
                 out.append(n)
         return out
 
-    def evict(self, need_pages: int) -> int:
+    def evict(self, need_pages: int,
+              exclude: Optional[Iterable[int]] = None) -> int:
         """Unpin least-recently-used cached prefixes until ``need_pages``
         pool pages have actually been reclaimed (only pages no live table
         references free immediately).  Leaves evict first so interior
-        pages are never orphaned.  Returns the number of pages freed."""
+        pages are never orphaned.  ``exclude`` names physical pages that
+        must survive this call even when otherwise evictable — the
+        scheduler passes the pages a just-matched prefix is about to
+        ``share``, which no table references yet.  Returns the number of
+        pages freed.
+
+        One trie walk collects the candidate leaves into a min-stamp
+        heap; evicting a node pushes its parent when that exposes a new
+        leaf, so the cost is O(trie + freed * log leaves) per call rather
+        than a full rescan per freed page.  Refcounts cannot change while
+        this runs (nothing here touches tables), so a candidate skipped
+        as referenced or excluded stays skipped."""
+        skip = frozenset(exclude) if exclude is not None else frozenset()
         freed = 0
-        while freed < need_pages:
-            best = None
-            for leaf in self._leaves():
-                if self.pool.refcount(leaf.page) == 0 and \
-                        (best is None or leaf.stamp < best.stamp):
-                    best = leaf
-            if best is None:
-                break
-            del best.parent.children[best.key]
-            self.pool.unpin(best.page)
+        heap, tie = [], 0
+        for leaf in self._leaves():
+            heap.append((leaf.stamp, tie, leaf))
+            tie += 1
+        heapq.heapify(heap)
+        while freed < need_pages and heap:
+            _, _, node = heapq.heappop(heap)
+            if node.page in skip or self.pool.refcount(node.page) != 0:
+                continue
+            parent = node.parent
+            del parent.children[node.key]
+            self.pool.unpin(node.page)
             freed += 1
             self.evicted_pages += 1
+            if parent is not self._root and not parent.children:
+                tie += 1
+                heapq.heappush(heap, (parent.stamp, tie, parent))
         if freed and self.recorder is not None:
             self.recorder.count("prefix_cache_evicted_pages", freed)
         return freed

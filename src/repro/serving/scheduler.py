@@ -147,14 +147,24 @@ class ContinuousScheduler:
 
     # -- queue ----------------------------------------------------------------
     def submit(self, req: Request) -> None:
-        # a prompt whose pages alone exceed the whole pool can never be
-        # admitted under any reservation policy: admission would retry (or
-        # chunk-grow would stall) forever — reject up front instead of
-        # livelocking the queue head
-        floor = self.pool.blocks_for(self.token_overhead + req.prompt_len)
+        # a request whose admission-time reservation exceeds the whole
+        # pool can never be admitted: plan() would break on it (FCFS)
+        # forever — reject up front instead of livelocking the queue
+        # head.  The floor follows the reservation policy: full mode
+        # reserves worst-case (prompt + max_new + 1) at admit time, so
+        # that whole footprint must fit; incremental modes only ever
+        # need the prompt's pages live at once to finish a prefill.
+        if self.reserve == "full":
+            floor_tokens = (self.token_overhead + req.prompt_len
+                            + req.max_new_tokens + 1)
+            what = "worst-case reservation"
+        else:
+            floor_tokens = self.token_overhead + req.prompt_len
+            what = "prompt"
+        floor = self.pool.blocks_for(floor_tokens)
         if floor > self.pool.num_blocks:
             raise PoolError(
-                f"request {req.rid}: prompt needs {floor} blocks, pool has "
+                f"request {req.rid}: {what} needs {floor} blocks, pool has "
                 f"{self.pool.num_blocks} — can never be admitted")
         self.waiting.append(req)
         if self.tracker is not None:
@@ -211,9 +221,24 @@ class ContinuousScheduler:
             need_new = self.pool.blocks_for(reservation) - len(pages)
             if need_new > self.pool.num_free:
                 # pool pressure: reclaim LRU unpinned cache entries before
-                # giving up on the queue head
+                # giving up on the queue head.  The matched pages are
+                # excluded — no table references them yet (pin-only), so
+                # eviction of their trie descendants would otherwise
+                # expose them as evictable leaves and share() below would
+                # hit a dead page.
                 if self.prefix_cache is not None:
-                    self.prefix_cache.evict(need_new - self.pool.num_free)
+                    self.prefix_cache.evict(need_new - self.pool.num_free,
+                                            exclude=pages)
+                if need_new > self.pool.num_free and pages:
+                    # still short while protecting the hit: give the hit
+                    # up and retry as a cache miss, which makes the
+                    # matched pages themselves reclaimable
+                    pages, offset = [], 0
+                    reservation = self._reservation(req, cached_tokens=0)
+                    need_new = self.pool.blocks_for(reservation)
+                    if need_new > self.pool.num_free:
+                        self.prefix_cache.evict(
+                            need_new - self.pool.num_free)
                 if need_new > self.pool.num_free:
                     break                # FCFS: don't starve the head
             self.waiting.popleft()

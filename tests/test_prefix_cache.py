@@ -209,6 +209,19 @@ def test_prefix_cache_lru_evicts_leaf_first_and_skips_referenced():
     assert cache.evicted_pages == 4 - 1          # chain(2) + solo(1)
 
 
+def test_prefix_cache_evict_exclude_protects_pages():
+    pool = KVBlockPool(num_blocks=8, block_size=4)
+    cache = PrefixCache(pool)
+    chain = _cached_prompt(pool, cache, "d",
+                           np.arange(12, dtype=np.int32))  # 3-node chain
+    # excluding the head spares it even once eviction exposes it as a leaf
+    assert cache.evict(3, exclude=chain[:1]) == 2
+    assert cache.match(np.arange(12, dtype=np.int32)) == chain[:1]
+    assert cache.evict(3) == 1
+    assert pool.num_free == pool.num_blocks
+    pool.check()
+
+
 def test_prefix_cache_clear_returns_pool_to_free():
     pool = KVBlockPool(num_blocks=8, block_size=4)
     cache = PrefixCache(pool)
@@ -341,6 +354,79 @@ def test_scheduler_cache_hit_reserves_suffix_only():
     cache.clear()
     pool.check()
     assert pool.num_free == pool.num_blocks
+
+
+def test_scheduler_pressure_eviction_spares_matched_pages():
+    """Regression: under pool pressure plan() evicts cache entries to
+    admit the head, but the pages ``_match_prefix`` just returned are
+    pin-only (no table references them yet) — once their trie
+    descendants evicted they became evictable leaves themselves, and
+    ``share()`` then raised ``cannot share dead page`` out of plan().
+    The matched pages must survive the eviction pass."""
+    pool = KVBlockPool(num_blocks=8, block_size=4)
+    cache = PrefixCache(pool)
+    donor_prompt = np.arange(16, dtype=np.int32)
+    pages = _cached_prompt(pool, cache, "donor", donor_prompt)  # 4 pinned
+    pool.alloc("live", 16)                       # 4 blocks held -> 0 free
+
+    sched = ContinuousScheduler(2, pool, reserve="incremental",
+                                prefill_chunk=4, prefix_cache=cache)
+    prompt = np.concatenate([donor_prompt[:8],
+                             np.arange(90, 102, dtype=np.int32)])
+    req = Request("hit", prompt.astype(np.int32), 4)
+    sched.submit(req)
+    plan = sched.plan(0.0)                       # must not raise
+    assert plan.prefills == [req]
+    # the two matched pages head the table; only the unmatched chain
+    # tail (donor page 3) was evicted to fund the suffix chunk
+    assert pool.table("hit").blocks[:2] == pages[:2]
+    assert req.cached_pages == 2 and cache.hits == 1
+    assert cache.evicted_pages == 1
+    pool.check()
+
+
+def test_scheduler_pressure_falls_back_to_cache_miss():
+    """When sparing the matched pages cannot free enough pool, admission
+    gives the hit up and retries as a cache miss (the matched pages
+    become reclaimable) instead of crashing or starving the head."""
+    pool = KVBlockPool(num_blocks=8, block_size=4)
+    cache = PrefixCache(pool)
+    donor_prompt = np.arange(16, dtype=np.int32)
+    _cached_prompt(pool, cache, "donor", donor_prompt)  # 4 pinned pages
+    pool.alloc("live", 16)                       # 4 blocks held -> 0 free
+
+    # chunk 12: the hit path needs 5 blocks (8 cached + one chunk) with
+    # only the two unmatched tail pages evictable — short by one
+    sched = ContinuousScheduler(2, pool, reserve="incremental",
+                                prefill_chunk=12, prefix_cache=cache)
+    prompt = np.concatenate([donor_prompt[:8],
+                             np.arange(90, 102, dtype=np.int32)])
+    req = Request("fb", prompt.astype(np.int32), 4)
+    sched.submit(req)
+    plan = sched.plan(0.0)                       # must not raise
+    assert plan.prefills == [req]
+    assert req.cached_pages == 0 and req.cached_prefix_tokens == 0
+    assert len(pool.table("fb").blocks) == 3     # fresh first-chunk table
+    assert cache.misses == 1 and cache.hits == 0
+    assert cache.evicted_pages == 3              # tail pair + one matched
+    pool.check()
+
+
+def test_scheduler_submit_full_reserve_rejects_impossible_reservation():
+    """reserve='full' reserves prompt + max_new + 1 at admission, so a
+    request whose full reservation exceeds the pool livelocked at the
+    queue head even though the prompt alone fits; the submit floor now
+    follows the reservation policy."""
+    pool = KVBlockPool(num_blocks=2, block_size=4)
+    sched = ContinuousScheduler(1, pool, reserve="full")
+    with pytest.raises(PoolError, match="can never be admitted"):
+        sched.submit(Request("big", np.zeros((4,), np.int32), 16))
+    assert sched.pending() == 0
+    # the same request is admissible under incremental reservations
+    # (it can stop at EOS well inside the pool)
+    inc = ContinuousScheduler(1, pool, reserve="incremental")
+    inc.submit(Request("ok", np.zeros((4,), np.int32), 16, eos_id=0))
+    assert inc.pending() == 1
 
 
 # ---------------------------------------------------------------------------
