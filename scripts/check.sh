@@ -10,11 +10,18 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 echo "== docs consistency (package map + snippet parse + links) =="
 python scripts/check_docs.py
 
+echo "== static analysis (saralint contract checks, fail on any finding) =="
+python -m repro.analysis src/repro
+
 echo "== tier-1 tests =="
 python -m pytest -x -q
 
 echo "== serving smoke =="
 python -m repro.launch.serve --arch llama3.2-1b --smoke
+
+echo "== sanitizer smoke (poison/generation/leak traps stay silent) =="
+python -m repro.launch.serve --arch llama3.2-1b --smoke --sanitize \
+    --kv-layout paged
 
 echo "== trace smoke (serve --trace-out -> schema + category validation) =="
 TRACE_SMOKE="$(mktemp -d)/trace.json"

@@ -1,0 +1,28 @@
+"""saralint: contract-checking static analysis for this repo.
+
+The stack's correctness rests on cross-cutting contracts no single test
+enumerates: every model GEMM must route through ``dispatch.gemm`` (or
+ADAPTNET never observes the shape), every arena write into a shared page
+must pass the ``ensure_writable`` copy-on-write gate, every Pallas
+``BlockSpec`` index map must agree with its grid rank and scalar-prefetch
+count, trace taxonomy strings must match ``obs/trace.py``, and jit entry
+points must not be fed retrace hazards.  ``saralint`` walks the AST and
+enforces those contracts; ``python -m repro.analysis src/repro`` is the
+CI gate.
+
+See ``docs/ANALYSIS.md`` for the check taxonomy and the
+``# saralint: ok[check-id] <reason>`` suppression syntax.
+"""
+
+from .core import (  # noqa: F401
+    CHECKS,
+    Context,
+    Finding,
+    SourceFile,
+    collect_files,
+    register,
+    run_paths,
+)
+
+# Importing the package registers every built-in check.
+from . import checks  # noqa: F401,E402

@@ -1,0 +1,7 @@
+"""Built-in saralint checks.  Importing this package registers all five."""
+
+from . import cow_gate  # noqa: F401
+from . import dispatch_escape  # noqa: F401
+from . import obs_taxonomy  # noqa: F401
+from . import pallas_contract  # noqa: F401
+from . import retrace_hazard  # noqa: F401

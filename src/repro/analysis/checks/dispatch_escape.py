@@ -1,0 +1,114 @@
+"""dispatch-escape: model GEMMs must route through ``dispatch.gemm``.
+
+The paper's 99.93%-of-best result assumes ADAPTNET observes *every*
+layer GEMM shape; a raw ``jnp.einsum``/``@``/``jnp.dot``/``jnp.matmul``
+in model code is a shape the recommender never sees and a tile choice
+the RSA never makes.  This pass flags every raw contraction in
+``models/`` and ``core/adaptnet.py``:
+
+* **error** when an operand looks like a *weight* (``w_uk``, ``w1``,
+  ``params["w2"]``, ``kernel`` ...) — a true escape that should be
+  rerouted through ``dispatch.gemm``;
+* **warning** otherwise — typically an activation-activation contraction
+  (attention scores, recurrence mixes) that dispatch legitimately does
+  not own, to be annotated with a
+  ``# saralint: ok[dispatch-escape] <reason>`` pragma.
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+from typing import Iterable, List
+
+from ..core import Context, ERROR, Finding, SourceFile, WARNING, register
+
+GEMM_FUNCS = {
+    "jax.numpy.einsum", "jax.numpy.dot", "jax.numpy.matmul",
+    "jax.numpy.tensordot",
+    "numpy.einsum", "numpy.dot", "numpy.matmul", "numpy.tensordot",
+}
+
+_WEIGHT_NAME = re.compile(r"^(w|wt|weight|kernel|proj)(_|\d|$)")
+
+#: layout/cast wrappers to look through when deciding weight-likeness
+_TRANSPARENT_ATTRS = {"astype", "reshape", "transpose", "swapaxes", "T"}
+
+
+def _in_scope(sf: SourceFile) -> bool:
+    return sf.rel.startswith("models/") or sf.rel == "core/adaptnet.py"
+
+
+def _weight_like(node: ast.AST) -> bool:
+    while True:
+        if isinstance(node, ast.Call) and isinstance(node.func, ast.Attribute) \
+                and node.func.attr in _TRANSPARENT_ATTRS:
+            node = node.func.value
+        elif isinstance(node, ast.Attribute) and node.attr in _TRANSPARENT_ATTRS:
+            node = node.value
+        else:
+            break
+    if isinstance(node, ast.Name):
+        return bool(_WEIGHT_NAME.match(node.id))
+    if isinstance(node, ast.Attribute):
+        return bool(_WEIGHT_NAME.match(node.attr))
+    if isinstance(node, ast.Subscript):
+        s = node.slice
+        if isinstance(s, ast.Constant) and isinstance(s.value, str):
+            return bool(_WEIGHT_NAME.match(s.value))
+    return False
+
+
+def _operands(call: ast.Call) -> List[ast.AST]:
+    """Tensor operands of a contraction call (skip einsum's spec string)."""
+    ops = []
+    for a in call.args:
+        if isinstance(a, ast.Constant) and isinstance(a.value, str):
+            continue
+        if isinstance(a, ast.Starred):
+            continue
+        ops.append(a)
+    return ops
+
+
+@register("dispatch-escape",
+          "model GEMMs not routed through dispatch.gemm")
+def check(ctx: Context) -> Iterable[Finding]:
+    for sf in ctx.files:
+        if not _in_scope(sf):
+            continue
+        for node in ast.walk(sf.tree):
+            if isinstance(node, ast.Call):
+                dotted = sf.dotted(node.func)
+                if dotted not in GEMM_FUNCS:
+                    continue
+                fn = dotted.rsplit(".", 1)[-1]
+                weighted = any(_weight_like(a) for a in _operands(node))
+                spec = ""
+                if node.args and isinstance(node.args[0], ast.Constant) \
+                        and isinstance(node.args[0].value, str):
+                    spec = f' "{node.args[0].value}"'
+                yield Finding(
+                    check="dispatch-escape",
+                    severity=ERROR if weighted else WARNING,
+                    path=sf.rel, line=node.lineno,
+                    message=(f"raw {fn}{spec} "
+                             + ("contracts a weight operand — route it "
+                                "through dispatch.gemm(site=...)"
+                                if weighted else
+                                "bypasses the dispatch layer — route "
+                                "through dispatch.gemm or annotate why "
+                                "dispatch does not own this contraction")))
+            elif isinstance(node, ast.BinOp) and isinstance(node.op, ast.MatMult):
+                weighted = _weight_like(node.right) or _weight_like(node.left)
+                yield Finding(
+                    check="dispatch-escape",
+                    severity=ERROR if weighted else WARNING,
+                    path=sf.rel, line=node.lineno,
+                    message=("raw @ matmul "
+                             + ("against a weight operand — route it "
+                                "through dispatch.gemm(site=...)"
+                                if weighted else
+                                "bypasses the dispatch layer — route "
+                                "through dispatch.gemm or annotate why "
+                                "dispatch does not own this contraction")))

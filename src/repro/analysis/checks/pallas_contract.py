@@ -1,0 +1,217 @@
+"""pallas-contract: BlockSpec/grid/prefetch arithmetic and ref twins.
+
+Every ``pl.pallas_call`` site encodes the same arithmetic by hand:
+
+* each ``BlockSpec`` index-map lambda takes ``grid rank +
+  num_scalar_prefetch`` arguments (grid indices first, then the
+  prefetched scalar refs);
+* the index map returns one coordinate per block-shape dimension;
+* the immediately-invoked call receives ``num_scalar_prefetch +
+  len(in_specs)`` operands.
+
+And cross-file: every public ``kernels/ops.py`` wrapper that lowers to a
+``*_pallas`` kernel must keep a registered XLA twin in
+``kernels/ref.py`` (``<wrapper>_ref``) or reference the ref module
+directly in its fallback branch — the parity suites and serving XLA
+paths depend on the twin existing.
+
+Static resolution is best-effort: a grid/in_specs expression the pass
+cannot resolve to a literal (e.g. built dynamically) is skipped, never
+guessed — the check aims for zero false positives.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterable, List, Optional
+
+from ..core import Context, ERROR, Finding, SourceFile, register
+
+CHECK = "pallas-contract"
+
+
+def _resolve_local(sf: SourceFile, node: ast.AST,
+                   at: ast.AST) -> Optional[ast.AST]:
+    """Resolve a Name to the value of a simple assignment in the
+    enclosing function (``grid = (S, KVH, W)``); None if not found."""
+    if not isinstance(node, ast.Name):
+        return node
+    fn = sf.enclosing_function(at)
+    scope = fn if fn is not None else sf.tree
+    found = None
+    for stmt in ast.walk(scope):
+        if isinstance(stmt, ast.Assign) and len(stmt.targets) == 1 \
+                and isinstance(stmt.targets[0], ast.Name) \
+                and stmt.targets[0].id == node.id:
+            found = stmt.value
+    return found
+
+
+def _spec_list(sf: SourceFile, node: ast.AST,
+               at: ast.AST) -> Optional[List[ast.AST]]:
+    """Flatten an in_specs expression to a list of element nodes;
+    handles list literals, resolvable names, and list concatenation."""
+    node = _resolve_local(sf, node, at)
+    if isinstance(node, (ast.List, ast.Tuple)):
+        return list(node.elts)
+    if isinstance(node, ast.BinOp) and isinstance(node.op, ast.Add):
+        left = _spec_list(sf, node.left, at)
+        right = _spec_list(sf, node.right, at)
+        if left is not None and right is not None:
+            return left + right
+    return None
+
+
+def _is_blockspec(sf: SourceFile, node: ast.AST) -> bool:
+    if not isinstance(node, ast.Call):
+        return False
+    dotted = sf.dotted(node.func) or ""
+    return dotted.endswith("BlockSpec")
+
+
+def _kw(call: ast.Call, name: str) -> Optional[ast.AST]:
+    for k in call.keywords:
+        if k.arg == name:
+            return k.value
+    return None
+
+
+def _int_const(node: Optional[ast.AST]) -> Optional[int]:
+    if isinstance(node, ast.Constant) and isinstance(node.value, int):
+        return node.value
+    return None
+
+
+def _check_blockspec(sf: SourceFile, spec: ast.Call, grid_rank: Optional[int],
+                     nsp: int, where: str) -> Iterable[Finding]:
+    shape = spec.args[0] if spec.args else _kw(spec, "block_shape")
+    index_map = spec.args[1] if len(spec.args) > 1 else _kw(spec, "index_map")
+    if not isinstance(index_map, ast.Lambda):
+        return
+    arity = len(index_map.args.args)
+    if grid_rank is not None and arity != grid_rank + nsp:
+        yield Finding(
+            check=CHECK, severity=ERROR, path=sf.rel, line=index_map.lineno,
+            message=(f"{where}: index map takes {arity} arg(s) but grid rank "
+                     f"{grid_rank} + num_scalar_prefetch {nsp} requires "
+                     f"{grid_rank + nsp}"))
+    if isinstance(shape, ast.Tuple):
+        ndim = len(shape.elts)
+        body = index_map.body
+        ret = len(body.elts) if isinstance(body, ast.Tuple) else 1
+        if ret != ndim:
+            yield Finding(
+                check=CHECK, severity=ERROR, path=sf.rel,
+                line=index_map.lineno,
+                message=(f"{where}: block shape has {ndim} dim(s) but the "
+                         f"index map returns {ret} coordinate(s)"))
+
+
+def _check_call_site(sf: SourceFile, call: ast.Call) -> Iterable[Finding]:
+    grid_spec = _kw(call, "grid_spec")
+    grid_spec = _resolve_local(sf, grid_spec, call) if grid_spec is not None \
+        else None
+    if isinstance(grid_spec, ast.Call):
+        holder = grid_spec
+        nsp = _int_const(_kw(holder, "num_scalar_prefetch")) or 0
+    else:
+        holder = call
+        nsp = 0
+    grid_node = _resolve_local(sf, _kw(holder, "grid"), call)
+    grid_rank = len(grid_node.elts) if isinstance(grid_node, ast.Tuple) \
+        else None
+    in_specs = _spec_list(sf, _kw(holder, "in_specs"), call) \
+        if _kw(holder, "in_specs") is not None else None
+    out_specs = _kw(holder, "out_specs")
+    out_list = _spec_list(sf, out_specs, call) if out_specs is not None \
+        else None
+    if out_list is None and out_specs is not None:
+        out_list = [out_specs]
+
+    for i, spec in enumerate(in_specs or []):
+        if _is_blockspec(sf, spec):
+            yield from _check_blockspec(sf, spec, grid_rank, nsp,
+                                        f"in_specs[{i}]")
+    for i, spec in enumerate(out_list or []):
+        if _is_blockspec(sf, spec):
+            yield from _check_blockspec(sf, spec, grid_rank, nsp,
+                                        f"out_specs[{i}]")
+
+    # Immediately-invoked form: operand count must cover prefetch + inputs.
+    parent = sf.parent(call)
+    if isinstance(parent, ast.Call) and parent.func is call \
+            and in_specs is not None \
+            and not any(isinstance(a, ast.Starred) for a in parent.args):
+        want = nsp + len(in_specs)
+        got = len(parent.args)
+        if got != want:
+            yield Finding(
+                check=CHECK, severity=ERROR, path=sf.rel, line=parent.lineno,
+                message=(f"pallas_call invoked with {got} operand(s) but "
+                         f"num_scalar_prefetch {nsp} + {len(in_specs)} "
+                         f"in_specs requires {want}"))
+
+
+def _ref_aliases(sf: SourceFile) -> set:
+    """Import aliases in ``sf`` that point at the kernels ref module."""
+    out = set()
+    for alias, dotted in sf.imports.items():
+        tail = dotted.lstrip(".")
+        if tail == "ref" or tail.endswith(".ref") or ".ref." in tail \
+                or tail.startswith("ref."):
+            out.add(alias)
+    return out
+
+
+def _check_ref_twins(ctx: Context) -> Iterable[Finding]:
+    ops = ctx.find("kernels/ops.py")
+    ref = ctx.find("kernels/ref.py")
+    if ops is None or ref is None:
+        return
+    ref_names = set()
+    for node in ref.tree.body:
+        if isinstance(node, ast.FunctionDef):
+            ref_names.add(node.name)
+        elif isinstance(node, ast.Assign):
+            for t in node.targets:
+                if isinstance(t, ast.Name):
+                    ref_names.add(t.id)
+    aliases = _ref_aliases(ops)
+    for node in ops.tree.body:
+        if not isinstance(node, ast.FunctionDef) or node.name.startswith("_"):
+            continue
+        lowers = any(
+            isinstance(c, ast.Call) and (
+                (isinstance(c.func, ast.Name) and c.func.id.endswith("_pallas"))
+                or (isinstance(c.func, ast.Attribute)
+                    and c.func.attr.endswith("_pallas")))
+            for c in ast.walk(node))
+        if not lowers:
+            continue
+        uses_ref = any(
+            (isinstance(n, ast.Name) and n.id in aliases)
+            or (isinstance(n, ast.Attribute) and isinstance(n.value, ast.Name)
+                and n.value.id in aliases)
+            for n in ast.walk(node))
+        if uses_ref or f"{node.name}_ref" in ref_names:
+            continue
+        yield Finding(
+            check=CHECK, severity=ERROR, path=ops.rel, line=node.lineno,
+            message=(f"wrapper '{node.name}' lowers to a Pallas kernel but "
+                     f"has no XLA twin: define {node.name}_ref in "
+                     "kernels/ref.py or call through the ref module in its "
+                     "fallback branch"))
+
+
+@register("pallas-contract",
+          "BlockSpec/grid/prefetch arithmetic and ops<->ref twin registry")
+def check(ctx: Context) -> Iterable[Finding]:
+    for sf in ctx.files:
+        if not (sf.rel.startswith("kernels/") or "/kernels/" in sf.rel):
+            continue
+        for node in ast.walk(sf.tree):
+            if isinstance(node, ast.Call):
+                dotted = sf.dotted(node.func) or ""
+                if dotted.endswith("pallas_call"):
+                    yield from _check_call_site(sf, node)
+    yield from _check_ref_twins(ctx)

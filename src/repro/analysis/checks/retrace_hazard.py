@@ -1,0 +1,169 @@
+"""retrace-hazard: jit entry points that recompile more than they should.
+
+PR 6's ``jit_compiles`` counter catches retraces at runtime; this is the
+static twin.  Four hazard patterns:
+
+1. **inline wrap-and-invoke** — ``jax.jit(f)(x)`` builds a fresh wrapper
+   (and a fresh compilation cache) on every call;
+2. **jit under a loop** — ``jax.jit(...)`` constructed inside
+   ``for``/``while`` re-wraps per iteration;
+3. **unknown static name** — ``static_argnames`` naming a parameter the
+   wrapped function does not declare (jit raises only when the name is
+   actually passed, so the typo hides until production traffic);
+4. **unhashable static default** — a static parameter whose default is a
+   list/dict/set literal: the first defaulted call raises
+   ``TypeError: unhashable``, and a per-call-constructed value would
+   retrace every step.  ``static_argnums`` out of positional range is
+   flagged the same way.
+
+Signature checks run only when the wrapped callable resolves to a
+function defined in the same module (decorator form or
+``g = jax.jit(f, ...)``); bound methods and imported callables are
+skipped rather than guessed.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List, Optional
+
+from ..core import Context, ERROR, Finding, SourceFile, WARNING, register
+
+CHECK = "retrace-hazard"
+
+_UNHASHABLE = (ast.List, ast.Dict, ast.Set, ast.ListComp, ast.DictComp,
+               ast.SetComp)
+
+
+def _is_jit(sf: SourceFile, node: ast.AST) -> bool:
+    if not isinstance(node, ast.Call):
+        return False
+    dotted = sf.dotted(node.func) or ""
+    return dotted in ("jax.jit", "jax.api.jit") or dotted.endswith(".jax.jit")
+
+
+def _kw(call: ast.Call, name: str) -> Optional[ast.AST]:
+    for k in call.keywords:
+        if k.arg == name:
+            return k.value
+    return None
+
+
+def _str_items(node: Optional[ast.AST]) -> Optional[List[str]]:
+    if node is None:
+        return None
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return [node.value]
+    if isinstance(node, (ast.Tuple, ast.List)):
+        out = []
+        for e in node.elts:
+            if not (isinstance(e, ast.Constant) and isinstance(e.value, str)):
+                return None
+            out.append(e.value)
+        return out
+    return None
+
+
+def _int_items(node: Optional[ast.AST]) -> Optional[List[int]]:
+    if node is None:
+        return None
+    if isinstance(node, ast.Constant) and isinstance(node.value, int):
+        return [node.value]
+    if isinstance(node, (ast.Tuple, ast.List)):
+        out = []
+        for e in node.elts:
+            if not (isinstance(e, ast.Constant) and isinstance(e.value, int)):
+                return None
+            out.append(e.value)
+        return out
+    return None
+
+
+def _signature_check(sf: SourceFile, fn: ast.FunctionDef, jit_call: ast.Call,
+                     line: int) -> Iterable[Finding]:
+    args = fn.args
+    params = [a.arg for a in args.posonlyargs + args.args + args.kwonlyargs]
+    pos_params = [a.arg for a in args.posonlyargs + args.args]
+    defaults: Dict[str, ast.AST] = {}
+    pos_with_default = (args.posonlyargs + args.args)[
+        len(args.posonlyargs) + len(args.args) - len(args.defaults):]
+    for a, d in zip(pos_with_default, args.defaults):
+        defaults[a.arg] = d
+    for a, d in zip(args.kwonlyargs, args.kw_defaults):
+        if d is not None:
+            defaults[a.arg] = d
+
+    for name in _str_items(_kw(jit_call, "static_argnames")) or []:
+        if name not in params:
+            yield Finding(
+                check=CHECK, severity=ERROR, path=sf.rel, line=line,
+                message=(f"static_argnames names '{name}' but "
+                         f"'{fn.name}' has no such parameter"))
+        elif isinstance(defaults.get(name), _UNHASHABLE):
+            yield Finding(
+                check=CHECK, severity=ERROR, path=sf.rel, line=line,
+                message=(f"static parameter '{name}' of '{fn.name}' defaults "
+                         "to an unhashable literal — jit static arguments "
+                         "must be hashable and low-variety"))
+    for num in _int_items(_kw(jit_call, "static_argnums")) or []:
+        if args.vararg is None and num >= len(pos_params):
+            yield Finding(
+                check=CHECK, severity=ERROR, path=sf.rel, line=line,
+                message=(f"static_argnums {num} is out of range for "
+                         f"'{fn.name}' ({len(pos_params)} positional "
+                         "parameter(s))"))
+
+
+def _module_functions(sf: SourceFile) -> Dict[str, ast.FunctionDef]:
+    return {n.name: n for n in ast.walk(sf.tree)
+            if isinstance(n, ast.FunctionDef)}
+
+
+@register("retrace-hazard",
+          "jit entry points with unhashable or unbounded static arguments")
+def check(ctx: Context) -> Iterable[Finding]:
+    for sf in ctx.files:
+        fns = _module_functions(sf)
+        for node in ast.walk(sf.tree):
+            # R1: jax.jit(f)(...) — fresh wrapper per call.
+            if isinstance(node, ast.Call) and _is_jit(sf, node.func):
+                yield Finding(
+                    check=CHECK, severity=WARNING, path=sf.rel,
+                    line=node.lineno,
+                    message=("jax.jit(...) wrapped and invoked inline — the "
+                             "wrapper (and its compile cache) is rebuilt "
+                             "every call; hoist the jitted callable"))
+            # R2: jax.jit constructed under a loop.
+            if _is_jit(sf, node):
+                cur = sf.parent(node)
+                invoked_inline = isinstance(cur, ast.Call) \
+                    and cur.func is node
+                while cur is not None and not isinstance(
+                        cur, (ast.FunctionDef, ast.AsyncFunctionDef,
+                              ast.Lambda)):
+                    if isinstance(cur, (ast.For, ast.While)) \
+                            and not invoked_inline:
+                        yield Finding(
+                            check=CHECK, severity=WARNING, path=sf.rel,
+                            line=node.lineno,
+                            message=("jax.jit(...) constructed inside a loop "
+                                     "— re-wrapped (and potentially "
+                                     "recompiled) every iteration"))
+                        break
+                    cur = sf.parent(cur)
+            # R3/R4 assignment form: g = jax.jit(f, static_arg...=...)
+            if isinstance(node, ast.Call) and _is_jit(sf, node) and node.args:
+                target = node.args[0]
+                if isinstance(target, ast.Name) and target.id in fns:
+                    yield from _signature_check(sf, fns[target.id], node,
+                                                node.lineno)
+        # R3/R4 decorator form: @partial(jax.jit, static_arg...=...)
+        for fn in fns.values():
+            for deco in fn.decorator_list:
+                if isinstance(deco, ast.Call):
+                    dotted = sf.dotted(deco.func) or ""
+                    if dotted.endswith("partial") and deco.args \
+                            and (sf.dotted(deco.args[0]) or "").endswith("jit"):
+                        yield from _signature_check(sf, fn, deco, fn.lineno)
+                    elif _is_jit(sf, deco):
+                        yield from _signature_check(sf, fn, deco, fn.lineno)

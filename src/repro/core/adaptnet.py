@@ -124,7 +124,9 @@ def logits_fn(params: Dict, feats: jnp.ndarray) -> jnp.ndarray:
         k = params["emb_k"][jnp.clip(feats[:, 1], 0, VOCAB - 1)]
         n = params["emb_n"][jnp.clip(feats[:, 2], 0, VOCAB - 1)]
         h = jnp.concatenate([m, k, n], axis=-1)
+    # saralint: ok[dispatch-escape] ADAPTNET's own recommender MLP — routing it through dispatch.gemm would recurse into the dispatcher it implements
     h = jax.nn.relu(h @ params["w1"] + params["b1"])
+    # saralint: ok[dispatch-escape] ADAPTNET's own recommender MLP — routing it through dispatch.gemm would recurse into the dispatcher it implements
     return h @ params["w2"] + params["b2"]
 
 
@@ -149,7 +151,9 @@ def logits_np(params: Dict, feats: np.ndarray) -> np.ndarray:
                             p["emb_k"][np.clip(f[:, 1], 0, VOCAB - 1)],
                             p["emb_n"][np.clip(f[:, 2], 0, VOCAB - 1)]],
                            axis=-1)
+    # saralint: ok[dispatch-escape] host-side NumPy twin of the recommender MLP; runs under an ambient trace where dispatch cannot
     h = np.maximum(h @ p["w1"] + p["b1"], 0.0)
+    # saralint: ok[dispatch-escape] host-side NumPy twin of the recommender MLP; runs under an ambient trace where dispatch cannot
     return h @ p["w2"] + p["b2"]
 
 

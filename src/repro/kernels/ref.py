@@ -18,6 +18,11 @@ def adaptnetx_ref(ids, emb_m, emb_k, emb_n, w1, b1, w2, b2) -> jnp.ndarray:
     return h @ w2.astype(jnp.float32) + b2.astype(jnp.float32)
 
 
+# XLA twin of ops.adaptnetx_recommend under its wrapper name, so the
+# saralint pallas-contract ops<->ref registry resolves it.
+adaptnetx_recommend_ref = adaptnetx_ref
+
+
 def flash_attention_ref(q, k, v, *, causal: bool = True,
                         kv_len: int | None = None,
                         scale: float | None = None) -> jnp.ndarray:

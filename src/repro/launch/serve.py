@@ -109,6 +109,7 @@ def serve_continuous(arch: str = "llama3.2-1b", preset: str = "reduced",
                      shared_prefix_decode: bool = False,
                      defrag_threshold: float = None,
                      shared_prefix_len: int = 0, trace_out: str = None,
+                     sanitize: bool = False,
                      override_cfg=None, log: bool = True):
     """Serve a request set through the continuous-batching engine.
 
@@ -128,7 +129,11 @@ def serve_continuous(arch: str = "llama3.2-1b", preset: str = "reduced",
     recording (``EngineConfig.trace``) and writes a Chrome/Perfetto
     trace-event JSON (plus a ``.jsonl`` event stream) to that path after
     the run — load it at https://ui.perfetto.dev or chrome://tracing.
-    ``prefix_cache`` (requires ``prefill_chunk``) turns on the
+    ``sanitize`` runs the KV-arena sanitizer (``EngineConfig.sanitize``):
+    freed pages are NaN-poisoned, decode block tables are
+    generation-checked, the pool invariants run every step, and leaks
+    are audited at drain — use-after-free raises instead of corrupting
+    output.  ``prefix_cache`` (requires ``prefill_chunk``) turns on the
     cross-request prefix cache: prompts that open with an
     already-served token run map those KV pages refcounted/copy-on-write
     instead of recomputing them; ``shared_prefix_decode`` additionally
@@ -149,7 +154,8 @@ def serve_continuous(arch: str = "llama3.2-1b", preset: str = "reduced",
         adaptnet_dir=adaptnet_ckpt, kv_layout=kv_layout,
         prefill_chunk=prefill_chunk, prefix_cache=prefix_cache,
         shared_prefix_decode=shared_prefix_decode,
-        defrag_threshold=defrag_threshold, trace=trace_out is not None))
+        defrag_threshold=defrag_threshold, trace=trace_out is not None,
+        sanitize=sanitize))
     # ``shared_prefix_len`` > 0 makes every prompt open with the same token
     # run (a system-prompt-style workload) so the cross-request prefix cache
     # has something to hit; the tail stays per-request random.
@@ -235,6 +241,10 @@ def main():
                          "trace-event JSON here after the run")
     ap.add_argument("--waves", type=int, default=0,
                     help=">0: run the legacy wave-based path instead")
+    ap.add_argument("--sanitize", action="store_true",
+                    help="KV-arena sanitizer: poison freed pages, "
+                         "generation-check decode tables, per-step pool "
+                         "invariants, leak audit at drain")
     ap.add_argument("--smoke", action="store_true",
                     help="fast CI smoke: tiny trace, assert completion")
     a = ap.parse_args()
@@ -249,7 +259,7 @@ def main():
             dispatcher=a.dispatcher, adaptnet_ckpt=a.adaptnet_ckpt,
             kv_layout="paged", prefill_chunk=a.prefill_chunk or 8,
             shared_prefix_len=16, defrag_threshold=a.defrag_threshold,
-            log=False)
+            sanitize=a.sanitize, log=False)
         base, _ = serve_continuous(**common)
         outputs, engine = serve_continuous(
             **common, prefix_cache=True,
@@ -276,10 +286,18 @@ def main():
             arch=a.arch, num_requests=3, num_slots=2, prompt_len=12, gen=6,
             temperature=0.0, execute=a.execute, dispatcher=a.dispatcher,
             adaptnet_ckpt=a.adaptnet_ckpt, kv_layout=a.kv_layout,
-            trace_out=a.trace_out)
+            trace_out=a.trace_out, sanitize=a.sanitize)
         assert all(len(v) == 6 for v in outputs.values()), outputs
         engine.pool.check()
         assert engine.pool.num_free == engine.pool.num_blocks
+        if a.sanitize:
+            s = engine.summary()
+            assert s["kv_sanitize_checks"] > 0, s
+            assert s["kv_poison_hits"] == 0 and \
+                s["kv_generation_faults"] == 0, s
+            assert s["kv_leaked_tables"] == 0 and s["kv_leaked_refs"] == 0
+            print(f"sanitizer clean ({int(s['kv_sanitize_checks'])} checks, "
+                  f"{int(s['kv_poison_fills'])} pages poisoned on free)")
         # the plan must be registry-backed: sites that actually traced
         assert engine.gemm_plan and "unembed" in engine.gemm_plan, \
             engine.gemm_plan
@@ -308,7 +326,7 @@ def main():
                      shared_prefix_decode=a.shared_prefix_decode,
                      defrag_threshold=a.defrag_threshold,
                      shared_prefix_len=a.shared_prefix_len,
-                     trace_out=a.trace_out)
+                     trace_out=a.trace_out, sanitize=a.sanitize)
 
 
 if __name__ == "__main__":

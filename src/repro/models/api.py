@@ -60,6 +60,7 @@ class Model:
         return serving.init_paged_state(self.cfg, num_slots, src_len)
 
     def paged_prefill_write(self, arena, layers_cache, block_ids):
+        # saralint: ok[cow-gate] pass-through to the bucketed prefill scatter; the engine only hands it freshly alloc'd, never-shared pages
         return serving.paged_prefill_write(arena, layers_cache, block_ids)
 
     def paged_prefill_step(self, params, tokens, arena, block_tables,

@@ -86,6 +86,7 @@ def _chunked_attn(q, k, v, *, causal: bool, q_offset, kv_len, chunk: int,
             m, l, acc = carry
             k_blk = k[:, kj]                                # (B,kc,KVH,hd)
             v_blk = v[:, kj]
+            # saralint: ok[dispatch-escape] activation-activation attention score; no weight shape for ADAPTNET to tile
             s = jnp.einsum("bqhgd,bkhd->bhgqk", q_blk, k_blk,
                            preferred_element_type=jnp.float32) * scale
             if logit_cap > 0.0:
@@ -98,6 +99,7 @@ def _chunked_attn(q, k, v, *, causal: bool, q_offset, kv_len, chunk: int,
             p = jnp.exp(s - m_new[..., None])
             corr = jnp.exp(m - m_new)
             l_new = l * corr + jnp.sum(p, axis=-1)
+            # saralint: ok[dispatch-escape] softmax-weights x values mix, both activations
             acc_new = acc * corr[..., None] + jnp.einsum(
                 "bhgqk,bkhd->bhgqd", p.astype(v_blk.dtype), v_blk,
                 preferred_element_type=jnp.float32)
@@ -146,6 +148,7 @@ def _chunked_attn_tri(q, k, v, q_pos, k_pos, kv_valid, scale, logit_cap,
         q_blk = q[:, qi]
         k_blk = k[:, kj]
         v_blk = v[:, kj]
+        # saralint: ok[dispatch-escape] activation-activation attention score; no weight shape for ADAPTNET to tile
         s = jnp.einsum("bqhgd,bkhd->bhgqk", q_blk, k_blk,
                        preferred_element_type=jnp.float32) * scale
         if logit_cap > 0.0:
@@ -158,6 +161,7 @@ def _chunked_attn_tri(q, k, v, q_pos, k_pos, kv_valid, scale, logit_cap,
         p = jnp.exp(s - m_new[..., None])
         corr = jnp.exp(m - m_new)
         l_new = l * corr + jnp.sum(p, axis=-1)
+        # saralint: ok[dispatch-escape] softmax-weights x values mix, both activations
         acc_new = acc * corr[..., None] + jnp.einsum(
             "bhgqk,bkhd->bhgqd", p.astype(v_blk.dtype), v_blk,
             preferred_element_type=jnp.float32)
@@ -383,6 +387,7 @@ def gqa_paged_decode(params: Params, x: jnp.ndarray, positions: jnp.ndarray,
     # 0/1 chunk length (masked lanes land in the trash block)
     wm = (write_mask > 0).astype(kv_lens.dtype)
     rows = _paged_chunk_rows(block_tables, kv_lens, wm, 1, bs, NB)
+    # saralint: ok[cow-gate] decode appends at row kv_len of the lane's exclusively-owned tail page (or the trash block when masked); shared prefix pages cover only rows < kv_len
     k_arena = _arena_write_chunk(k_arena, rows, k[:, :1])
     v_arena = _arena_write_chunk(v_arena, rows, v[:, :1])
     attn_len = kv_lens + wm
@@ -419,6 +424,7 @@ def gqa_paged_shared_decode(params: Params, x: jnp.ndarray,
     NB, bs = k_arena.shape[0], k_arena.shape[1]
     wm = (write_mask > 0).astype(kv_lens.dtype)
     rows = _paged_chunk_rows(block_tables, kv_lens, wm, 1, bs, NB)
+    # saralint: ok[cow-gate] decode appends at row kv_len of the lane's exclusively-owned tail page (or the trash block when masked); shared prefix pages cover only rows < kv_len
     k_arena = _arena_write_chunk(k_arena, rows, k[:, :1])
     v_arena = _arena_write_chunk(v_arena, rows, v[:, :1])
     o = kops.shared_paged_attention(
@@ -486,6 +492,7 @@ def gqa_paged_prefill(params: Params, x: jnp.ndarray, positions: jnp.ndarray,
     NB, bs = k_arena.shape[0], k_arena.shape[1]
     S, C = x.shape[0], x.shape[1]
     rows = _paged_chunk_rows(block_tables, kv_lens, chunk_lens, C, bs, NB)
+    # saralint: ok[cow-gate] chunk rows target pages the engine COW-forked via _cow_chunk_pages before this jitted body runs
     k_arena = _arena_write_chunk(k_arena, rows, k)
     v_arena = _arena_write_chunk(v_arena, rows, v)
     attn_len = kv_lens + chunk_lens
@@ -496,6 +503,31 @@ def gqa_paged_prefill(params: Params, x: jnp.ndarray, positions: jnp.ndarray,
     out = hint(dense(out, params["wo"], None, cdt, site="layer.attn.out"),
                "B", None, None)
     return out, k_arena, v_arena
+
+
+def _mla_absorb_q(q_nope, w_uk, cdt, *, site: str):
+    """Absorb W_UK into the queries through the dispatch layer.
+
+    q_nope: (..., S, H, d); w_uk: (r, H, d).  Equivalent to
+    ``einsum("...shd,rhd->...shr")`` but expressed as the per-head
+    expert-bank GEMM x (..., H, S, d) @ w (H, d, r) so ADAPTNET observes
+    the shape and the RSA executes the contraction."""
+    from repro import dispatch
+    wk = jnp.transpose(w_uk.astype(cdt), (1, 2, 0))        # (H, d, r)
+    xq = jnp.moveaxis(q_nope.astype(cdt), -2, -3)          # (..., H, S, d)
+    out = dispatch.gemm(xq, wk, site=site)                 # (..., H, S, r)
+    return jnp.moveaxis(out, -3, -2)                       # (..., S, H, r)
+
+
+def _mla_mix_latent(o_lat, w_uv, cdt, *, site: str):
+    """Mix attention's latent output up through W_UV via the dispatch
+    layer.  o_lat: (..., S, H, r); w_uv: (r, H, d).  Equivalent to
+    ``einsum("...shr,rhd->...shd")`` as the per-head expert-bank GEMM."""
+    from repro import dispatch
+    wv = jnp.transpose(w_uv.astype(cdt), (1, 0, 2))        # (H, r, d)
+    xo = jnp.moveaxis(o_lat.astype(cdt), -2, -3)           # (..., H, S, r)
+    out = dispatch.gemm(xo, wv, site=site)                 # (..., H, S, d)
+    return jnp.moveaxis(out, -3, -2)                       # (..., S, H, d)
 
 
 def mla_paged_prefill(params: Params, x: jnp.ndarray, positions: jnp.ndarray,
@@ -520,17 +552,18 @@ def mla_paged_prefill(params: Params, x: jnp.ndarray, positions: jnp.ndarray,
     from repro.kernels import ops as kops
     NB, bs = ckv_arena.shape[0], ckv_arena.shape[1]
     rows = _paged_chunk_rows(block_tables, kv_lens, chunk_lens, C, bs, NB)
+    # saralint: ok[cow-gate] chunk rows target pages the engine COW-forked via _cow_chunk_pages before this jitted body runs
     ckv_arena = _arena_write_chunk(ckv_arena, rows, c_kv)
     krope_arena = _arena_write_chunk(krope_arena, rows, k_rope)
 
     w_uk = params["w_uk"].reshape(m.kv_lora_rank, H, m.qk_nope_head_dim)
-    q_abs = jnp.einsum("bshd,rhd->bshr", q_nope, w_uk.astype(cdt))
+    q_abs = _mla_absorb_q(q_nope, w_uk, cdt, site="layer.mla.q_absorb")
     attn_len = kv_lens + chunk_lens
     o_lat = kops.mla_paged_prefill_attention(
         q_abs, q_rope, ckv_arena, krope_arena, block_tables, kv_lens,
         attn_len, qk_dim=m.qk_nope_head_dim + m.qk_rope_head_dim)
     w_uv = params["w_uv"].reshape(m.kv_lora_rank, H, m.v_head_dim)
-    out = jnp.einsum("schr,rhd->schd", o_lat.astype(cdt), w_uv.astype(cdt))
+    out = _mla_mix_latent(o_lat, w_uv, cdt, site="layer.mla.v_mix")
     out = out.reshape(S, C, H * m.v_head_dim)
     out = dense(out, params["wo"], None, cdt, site="layer.mla.out")
     return out, ckv_arena, krope_arena
@@ -558,17 +591,20 @@ def mla_paged_decode(params: Params, x: jnp.ndarray, positions: jnp.ndarray,
     NB, bs = ckv_arena.shape[0], ckv_arena.shape[1]
     wm = (write_mask > 0).astype(kv_lens.dtype)
     rows = _paged_chunk_rows(block_tables, kv_lens, wm, 1, bs, NB)
+    # saralint: ok[cow-gate] decode appends at row kv_len of the lane's exclusively-owned tail page (or the trash block when masked); shared prefix pages cover only rows < kv_len
     ckv_arena = _arena_write_chunk(ckv_arena, rows, c_kv[:, :1])
     krope_arena = _arena_write_chunk(krope_arena, rows, k_rope[:, :1])
 
     w_uk = params["w_uk"].reshape(m.kv_lora_rank, H, m.qk_nope_head_dim)
-    q_abs = jnp.einsum("bshd,rhd->bshr", q_nope, w_uk.astype(cdt))[:, 0]
+    q_abs = _mla_absorb_q(q_nope, w_uk, cdt,
+                          site="layer.mla.q_absorb")[:, 0]
     attn_len = kv_lens + wm
     o_lat = kops.mla_paged_attention(
         q_abs, q_rope[:, 0], ckv_arena, krope_arena, block_tables, attn_len,
         qk_dim=m.qk_nope_head_dim + m.qk_rope_head_dim)       # (S, H, r)
     w_uv = params["w_uv"].reshape(m.kv_lora_rank, H, m.v_head_dim)
-    out = jnp.einsum("shr,rhd->shd", o_lat.astype(cdt), w_uv.astype(cdt))
+    out = _mla_mix_latent(o_lat[:, None], w_uv, cdt,
+                          site="layer.mla.v_mix")[:, 0]
     out = out.reshape(S, 1, H * m.v_head_dim)
     out = dense(out, params["wo"], None, cdt, site="layer.mla.out")
     return out, ckv_arena, krope_arena
@@ -669,18 +705,22 @@ def mla_self_attention(params: Params, x: jnp.ndarray, positions: jnp.ndarray,
 
     w_uk = params["w_uk"].reshape(m.kv_lora_rank, H, m.qk_nope_head_dim)
     # absorb W_UK into q:  q_abs[b,s,h,r] = sum_d q_nope[b,s,h,d] * w_uk[r,h,d]
-    q_abs = jnp.einsum("bshd,rhd->bshr", q_nope, w_uk.astype(cdt))
+    q_abs = _mla_absorb_q(q_nope, w_uk, cdt, site="layer.mla.q_absorb")
     scale = 1.0 / jnp.sqrt(jnp.float32(m.qk_nope_head_dim + m.qk_rope_head_dim))
-    s = (jnp.einsum("bshr,btr->bhst", q_abs, ckv_all.astype(cdt)) +
-         jnp.einsum("bshd,btd->bhst", q_rope, krope_all.astype(cdt))) * scale
+    # saralint: ok[dispatch-escape] latent attention scores against the cached activations, not a weight
+    s_nope = jnp.einsum("bshr,btr->bhst", q_abs, ckv_all.astype(cdt))
+    # saralint: ok[dispatch-escape] decoupled-rope scores against the cached activations, not a weight
+    s_rope = jnp.einsum("bshd,btd->bhst", q_rope, krope_all.astype(cdt))
+    s = (s_nope + s_rope) * scale
     t_pos = jnp.arange(ckv_all.shape[1])
     mask = (t_pos[None, :] <= (start + jnp.arange(S))[:, None]) & \
            (t_pos[None, :] < kv_len)
     s = jnp.where(mask[None, None, :, :], s.astype(jnp.float32), NEG_INF)
     p = jax.nn.softmax(s, axis=-1).astype(cdt)
+    # saralint: ok[dispatch-escape] softmax-weights x cached latent rows, both activations
     o_lat = jnp.einsum("bhst,btr->bshr", p, ckv_all.astype(cdt))
     w_uv = params["w_uv"].reshape(m.kv_lora_rank, H, m.v_head_dim)
-    out = jnp.einsum("bshr,rhd->bshd", o_lat, w_uv.astype(cdt))
+    out = _mla_mix_latent(o_lat, w_uv, cdt, site="layer.mla.v_mix")
     out = out.reshape(B, S, H * m.v_head_dim)
     out = dense(out, params["wo"], None, cdt, site="layer.mla.out")
     return out, new_cache

@@ -38,6 +38,22 @@ from typing import Any, Dict, Iterator, List, Optional, Tuple
 
 CATEGORIES = ("request", "step", "dispatch", "compile", "arena")
 
+# The closed taxonomy of step-timeline phases and metric series.  Export
+# validation (obs/export.py) enforces CATEGORIES at runtime; saralint's
+# obs-taxonomy pass enforces all four tuples statically at every
+# recorder call site, so a typo'd literal fails CI instead of silently
+# creating an orphan series.
+STEP_PHASES = ("schedule", "prefill", "prefill_chunk", "decode",
+               "paged_decode", "sample", "sync")
+
+COUNTERS = ("jit_compiles", "dispatch_records", "kv_defrag_auto",
+            "shared_prefix_steps", "prefix_cache_inserted_pages",
+            "prefix_cache_evicted_pages", "kv_sanitize_checks",
+            "kv_poison_hits", "kv_generation_faults")
+
+GAUGES = ("kv_pages_in_use", "kv_fragmentation", "slot_occupancy",
+          "decode_table_width", "shared_prefix_lanes")
+
 # Perfetto phase codes used by the export ("X" complete slice with a
 # duration, "i" instant, "C" counter sample)
 PH_SLICE, PH_INSTANT, PH_COUNTER = "X", "i", "C"

@@ -26,9 +26,11 @@ docs/OBSERVABILITY.md for the trace schema.
 """
 
 from repro.serving.engine import EngineConfig, ServingEngine, sample_logits
-from repro.serving.kv_pool import KVArena, KVBlockPool
+from repro.serving.kv_pool import (KVArena, KVBlockPool, PoolError,
+                                   SanitizerError)
 from repro.serving.metrics import ServingMetrics
 from repro.serving.scheduler import ContinuousScheduler, Request
 
 __all__ = ["EngineConfig", "ServingEngine", "sample_logits", "KVArena",
-           "KVBlockPool", "ServingMetrics", "ContinuousScheduler", "Request"]
+           "KVBlockPool", "PoolError", "SanitizerError", "ServingMetrics",
+           "ContinuousScheduler", "Request"]

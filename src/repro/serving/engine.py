@@ -92,7 +92,8 @@ from repro.dispatch import SiteRegistry
 from repro.models.serving import PAGED_FAMILIES
 from repro.obs import (JitWatch, RequestTracker, StepTimeline, TraceRecorder,
                        write_chrome_trace, write_jsonl)
-from repro.serving.kv_pool import KVArena, KVBlockPool, PoolError
+from repro.serving.kv_pool import (KVArena, KVBlockPool, PoolError,
+                                   SanitizerError)
 from repro.serving.metrics import ServingMetrics
 from repro.serving.prefix_cache import PrefixCache
 from repro.serving.scheduler import ContinuousScheduler, Request
@@ -220,6 +221,15 @@ class EngineConfig:
     # ``export_trace()`` (serve.py --trace-out).
     trace: bool = False
     trace_capacity: int = 65536
+    # KV-arena sanitizer (serving/kv_pool.py): poison freed pages with
+    # NaN, stamp every page with a generation counter (bumped on each
+    # re-allocation) and validate decode block tables against the stamps
+    # captured at table-build time, run the pool invariant check every
+    # step, and audit refcount/pin leaks when ``run()`` drains.  Traps
+    # use-after-free through stale tables as :class:`SanitizerError`
+    # instead of silent garbage logits.  Debug/test mode — poisoning
+    # rewrites one arena page per freed block.
+    sanitize: bool = False
 
 
 class ServingEngine:
@@ -294,8 +304,10 @@ class ServingEngine:
         blocks_per_slot = -(-(e.max_len + row_overhead) // e.block_size)
         num_blocks = (e.num_blocks if e.num_blocks is not None
                       else e.num_slots * blocks_per_slot)
-        self.pool = KVBlockPool(num_blocks, e.block_size)
+        self.pool = KVBlockPool(num_blocks, e.block_size,
+                                sanitize=e.sanitize)
         self.pool.attach_recorder(self.obs)
+        self._leak_audit: Dict[str, int] = {}
         self.prefix_cache: Optional[PrefixCache] = None
         if e.prefix_cache:
             if self.prefill_chunk is None:
@@ -521,6 +533,7 @@ class ServingEngine:
             rows = n + self._fe_rows
             nblk = self.pool.blocks_for(rows)
             table = self.pool.table(req.rid).blocks
+            # saralint: ok[cow-gate] bucketed prefill writes only freshly alloc'd pages; this path never coexists with prefix-cache sharing (cache requires prefill_chunk)
             self.arena.leaves = self._paged_write(
                 self.arena.leaves, new_cache["layers"],
                 jnp.asarray(table[:nblk], jnp.int32))
@@ -743,6 +756,12 @@ class ServingEngine:
                            len(self.sched.active) / e.num_slots)
             self.timeline.end(active=len(self.sched.active),
                               waiting=self.sched.pending())
+        if self.ecfg.sanitize:
+            # full invariant sweep every step: refcount drift and
+            # free-list corruption surface at the step that caused them,
+            # not at teardown
+            self.pool.check()
+            self.obs.count("kv_sanitize_checks", 1)
         self._vtime += 1.0
         return True
 
@@ -863,6 +882,10 @@ class ServingEngine:
                                         self._max_blocks_per_slot)
         rids = [active[s].rid if s in active else None for s in range(S)]
         tables = self.pool.dense_block_table(rids, width)
+        # snapshot the generation stamp of every page the table names;
+        # replayed after the kernel to trap tables that outlived a free
+        gens = (self.pool.table_generations(rids, width)
+                if e.sanitize else None)
         toks = jnp.asarray(self._last_tok)                   # (S, 1)
         self.obs.gauge("decode_table_width", width)
         group = None
@@ -877,6 +900,7 @@ class ServingEngine:
             with self._dispatch_scope("decode"), \
                     self.timeline.phase("paged_decode", lanes=len(active),
                                         width=width, shared_pages=npages):
+                # saralint: ok[cow-gate] decode appends one row into the lane's exclusively-owned tail page; shared prefix pages cover only rows < kv_len
                 logits, leaves = self._paged_shared_decode(
                     self.params, toks, self._state, self.arena.leaves,
                     jnp.asarray(tables), jnp.asarray(kv), jnp.asarray(wm),
@@ -887,6 +911,7 @@ class ServingEngine:
             with self._dispatch_scope("decode"), \
                     self.timeline.phase("paged_decode", lanes=len(active),
                                         width=width):
+                # saralint: ok[cow-gate] decode appends one row into the lane's exclusively-owned tail page; shared prefix pages cover only rows < kv_len
                 logits, leaves = self._paged_decode(
                     self.params, toks, self._state, self.arena.leaves,
                     jnp.asarray(tables), jnp.asarray(kv), jnp.asarray(wm))
@@ -895,7 +920,32 @@ class ServingEngine:
         dt = time.time() - t0
         self.obs.add_scope_wall("decode", dt)
         self.arena.leaves = leaves
-        return np.asarray(logits), dt, kv_read
+        logits = np.asarray(logits)
+        if e.sanitize:
+            self._sanitize_decode(active, rids, tables, gens, logits)
+        return logits, dt, kv_read
+
+    def _sanitize_decode(self, active: Dict[int, Request],
+                         rids, tables, gens, logits: np.ndarray) -> None:
+        """Post-decode sanitizer traps.  (1) generation replay: every
+        (page, generation) pair the step's block table named must still
+        be current — a page freed and re-handed-out since table build is
+        a use-after-free.  (2) poison scan: a non-finite logit row on a
+        live lane means the kernel streamed a poisoned (freed) page."""
+        try:
+            self.pool.assert_generations(rids, tables, gens)
+        except SanitizerError:
+            self.obs.count("kv_generation_faults", 1)
+            raise
+        bad = [s for s, r in sorted(active.items())
+               if not r.stalled and not np.isfinite(logits[s]).all()]
+        if bad:
+            self.obs.count("kv_poison_hits", len(bad))
+            lanes = ", ".join(f"{s} ({active[s].rid})" for s in bad)
+            raise SanitizerError(
+                f"poisoned KV page read: decode produced non-finite "
+                f"logits on lane(s) {lanes} — a freed (NaN-filled) arena "
+                "page is still reachable through a live block table")
 
     def _shared_prefix_group(self, active: Dict[int, Request],
                              kv: np.ndarray, wm: np.ndarray):
@@ -968,6 +1018,12 @@ class ServingEngine:
             self.submit(r)
         while self.step():
             pass
+        if self.ecfg.sanitize:
+            # teardown audit: every request drained, so every page must be
+            # reclaimed and the only surviving pins are the prefix trie's
+            expected = (self.prefix_cache.pages()
+                        if self.prefix_cache is not None else ())
+            self._leak_audit = self.pool.audit_leaks(expected)
         return {r.rid: np.asarray(r.generated, np.int32) for r in requests}
 
     def dispatch_stats(self) -> Dict[str, int]:
@@ -1013,6 +1069,13 @@ class ServingEngine:
         s["kv_cow_copies"] = self.pool.cow_copies
         if self.prefix_cache is not None:
             s.update(self.prefix_cache.stats())
+        if self.ecfg.sanitize:
+            s["kv_sanitize_checks"] = self.pool.sanitize_checks
+            s["kv_poison_fills"] = self.pool.poison_fills
+            s["kv_poison_hits"] = int(
+                self.obs.counters.get("kv_poison_hits", 0))
+            s["kv_generation_faults"] = self.pool.generation_faults
+            s.update(self._leak_audit)
         return s
 
     # -- observability export -------------------------------------------------

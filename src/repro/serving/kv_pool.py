@@ -48,6 +48,11 @@ class PoolError(RuntimeError):
     pass
 
 
+class SanitizerError(PoolError):
+    """A sanitize-mode trap fired: use-after-free through a stale block
+    table, a poisoned page read, or a refcount/pin leak at teardown."""
+
+
 class KVArena:
     """Physical KV pages for a :class:`KVBlockPool`.
 
@@ -95,6 +100,25 @@ class KVArena:
         self.leaves = {name: leaf.at[:, dst].set(leaf[:, src])
                        for name, leaf in self.leaves.items()}
 
+    def poison_page(self, bid: int) -> None:
+        """Sanitize mode: fill a just-freed page with NaN so any read
+        through a stale block table surfaces as NaN logits instead of
+        silently serving another request's KV rows.  Never applied to the
+        trash page — masked-lane writes legitimately land there."""
+        import jax.numpy as jnp
+        self.leaves = {name: leaf.at[:, bid].set(jnp.nan)
+                       for name, leaf in self.leaves.items()}
+
+    def unpoison_page(self, bid: int) -> None:
+        """Sanitize mode: zero a page on (re-)allocation, restoring the
+        fresh-arena state.  Poison therefore lives ONLY on currently-free
+        pages — the decode kernel reads whole pages and masks tail rows
+        as ``0 * row``, so a re-used page's not-yet-written rows must be
+        finite for live lanes while any read of a *free* page still traps
+        (the ASan poison-on-free / unpoison-on-malloc discipline)."""
+        self.leaves = {name: leaf.at[:, bid].set(0)
+                       for name, leaf in self.leaves.items()}
+
 
 @dataclass
 class BlockTable:
@@ -126,7 +150,8 @@ class KVBlockPool:
     ``ensure_writable`` performs copy-on-write before a request mutates a
     page other owners can still see."""
 
-    def __init__(self, num_blocks: int, block_size: int):
+    def __init__(self, num_blocks: int, block_size: int, *,
+                 sanitize: bool = False):
         if num_blocks <= 0 or block_size <= 0:
             raise ValueError("num_blocks and block_size must be positive")
         self.num_blocks = num_blocks
@@ -140,6 +165,15 @@ class KVBlockPool:
         self.defrag_moves = 0          # lifetime pages moved by defrag()
         self.shared_pages = 0          # lifetime pages mapped via share()
         self.cow_copies = 0            # lifetime copy-on-write divergences
+        # sanitize mode: freed pages are NaN-poisoned in the bound arena
+        # and every allocation bumps the page's generation counter, so a
+        # stale block table (use-after-free) is trappable by generation
+        # mismatch or by poison surfacing in decode logits.
+        self.sanitize = sanitize
+        self._gen: List[int] = [0] * num_blocks    # bumped per allocation
+        self.poison_fills = 0          # lifetime pages NaN-poisoned
+        self.generation_faults = 0     # stale-table traps fired
+        self.sanitize_checks = 0       # check()/assert_generations runs
         # optional trace sink (repro.obs.TraceRecorder): reserve / grow /
         # free / defrag / share / cow land as "arena" events + counters
         self.recorder = None
@@ -230,6 +264,82 @@ class KVBlockPool:
     def pincount(self, bid: int) -> int:
         return self._pins[bid]
 
+    def generation(self, bid: int) -> int:
+        return self._gen[bid]
+
+    # -- sanitizer: generation tags + leak audit -----------------------------
+    def table_generations(self, rids: Sequence[Optional[str]],
+                          width: int) -> np.ndarray:
+        """Generation stamp per :meth:`dense_block_table` entry, captured
+        at table-build time.  ``assert_generations`` replays the pair to
+        trap tables consumed after their pages were reclaimed."""
+        g = np.zeros((len(rids), width), np.int64)
+        for i, rid in enumerate(rids):
+            if rid is None:
+                continue
+            blocks = self._tables[rid].blocks[:width]
+            if blocks:
+                gens = [self._gen[b] for b in blocks]
+                g[i, :len(gens)] = gens
+                g[i, len(gens):] = gens[-1]
+        return g
+
+    def assert_generations(self, rids: Sequence[Optional[str]],
+                           tables: np.ndarray, gens: np.ndarray) -> None:
+        """Trap use-after-free through a stale block table: every
+        (page, generation) pair captured when the table was built must
+        still be current — a page freed and re-allocated since then
+        carries a later generation.  Raises :class:`SanitizerError`."""
+        self.sanitize_checks += 1
+        tables = np.asarray(tables)
+        gens = np.asarray(gens)
+        for i, rid in enumerate(rids):
+            if rid is None:
+                continue
+            for j in range(tables.shape[1]):
+                bid = int(tables[i, j])
+                if self._gen[bid] != int(gens[i, j]):
+                    self.generation_faults += 1
+                    raise SanitizerError(
+                        f"use-after-free: lane {i} ({rid}) block table names "
+                        f"page {bid} at generation {int(gens[i, j])} but the "
+                        f"page is now generation {self._gen[bid]} — it was "
+                        "reclaimed and re-allocated after the table was "
+                        "built")
+
+    def audit_leaks(self, expected_pins: Optional[Sequence[int]] = None
+                    ) -> Dict[str, int]:
+        """Teardown audit: after every request drains, no table may
+        survive, no page may keep a table reference, and the pinned set
+        must equal ``expected_pins`` (the prefix-cache trie's pages).
+        Raises :class:`SanitizerError` on any leak; returns the totals
+        the engine folds into ``summary()``."""
+        if self._tables:
+            raise SanitizerError(
+                f"leak audit: {len(self._tables)} block table(s) never "
+                f"freed: {sorted(self._tables)[:8]}")
+        leaked = [b for b in range(self.num_blocks) if self._refs[b] != 0]
+        if leaked:
+            raise SanitizerError(
+                f"leak audit: {len(leaked)} page(s) keep table references "
+                f"with no live table: {leaked[:8]}")
+        pinned = {b for b in range(self.num_blocks) if self._pins[b] > 0}
+        if expected_pins is not None:
+            expect = set(expected_pins)
+            if pinned != expect:
+                raise SanitizerError(
+                    "leak audit: pinned pages disagree with the prefix "
+                    f"cache trie (pinned-not-in-trie: "
+                    f"{sorted(pinned - expect)[:8]}, trie-not-pinned: "
+                    f"{sorted(expect - pinned)[:8]})")
+        self.check()
+        return {
+            "kv_leaked_tables": 0,
+            "kv_leaked_refs": 0,
+            "kv_pinned_pages": len(pinned),
+            "kv_poison_fills": self.poison_fills,
+        }
+
     # -- alloc / extend / free ----------------------------------------------
     def _take_block(self, request_id: str) -> int:
         bid = self._free.popleft()
@@ -238,7 +348,18 @@ class KVBlockPool:
                             f"(refs={self._refs[bid]} pins={self._pins[bid]} "
                             f"-> {request_id})")
         self._refs[bid] = 1
+        self._gen[bid] += 1
+        if self.sanitize and self.arena is not None:
+            self.arena.unpoison_page(bid)
         return bid
+
+    def _release_block(self, bid: int) -> None:
+        """A page's last reference dropped: return it to the free list and,
+        under sanitize with bound storage, NaN-poison its rows."""
+        self._free.append(bid)
+        if self.sanitize and self.arena is not None:
+            self.arena.poison_page(bid)
+            self.poison_fills += 1
 
     def alloc(self, request_id: str, num_tokens: int) -> BlockTable:
         """Reserve blocks covering ``num_tokens`` for a new request."""
@@ -285,7 +406,7 @@ class KVBlockPool:
                                 f"({request_id})")
             self._refs[bid] -= 1
             if self._refs[bid] == 0 and self._pins[bid] == 0:
-                self._free.append(bid)
+                self._release_block(bid)
                 released += 1
         self._trace("free", request_id, released, held=len(t.blocks))
         return released
@@ -327,7 +448,7 @@ class KVBlockPool:
             raise PoolError(f"block {bid} not pinned")
         self._pins[bid] -= 1
         if self._pins[bid] == 0 and self._refs[bid] == 0:
-            self._free.append(bid)
+            self._release_block(bid)
             return True
         return False
 
@@ -352,7 +473,7 @@ class KVBlockPool:
         t.blocks[page_index] = new
         self._refs[bid] -= 1
         if self._refs[bid] == 0 and self._pins[bid] == 0:
-            self._free.append(bid)
+            self._release_block(bid)
         self.cow_copies += 1
         self.peak_in_use = max(self.peak_in_use, self.num_in_use)
         self._trace("cow", request_id, 1, src=bid, dst=new,
@@ -397,6 +518,7 @@ class KVBlockPool:
         if self.arena is not None:
             # the counter records physical page moves, so it only advances
             # when storage is bound (unbound defrag is table bookkeeping)
+            # saralint: ok[cow-gate] defrag relocates whole pages and never moves shared/pinned ones (immovable landmarks); content is copied, not mutated
             self.arena.apply_moves(moves)
             self.defrag_moves += len(moves)
         self._trace("defrag", "_pool", len(moves),
@@ -404,8 +526,9 @@ class KVBlockPool:
                     pinned_landmarks=len(immovable))
         return moves
 
-    # -- invariant check (tests / debug) -------------------------------------
+    # -- invariant check (tests / debug / per-step under sanitize) -----------
     def check(self) -> None:
+        self.sanitize_checks += 1
         refs = [0] * self.num_blocks
         for t in self._tables.values():
             if len(set(t.blocks)) != len(t.blocks):

@@ -187,6 +187,17 @@ class PrefixCache:
         self._root.children.clear()
         return dropped
 
+    def pages(self) -> List[int]:
+        """Every physical page the trie currently pins (one per node).
+        The sanitizer's teardown audit compares this against the pool's
+        pinned set — they must agree exactly."""
+        out, stack = [], list(self._root.children.values())
+        while stack:
+            n = stack.pop()
+            out.append(n.page)
+            stack.extend(n.children.values())
+        return out
+
     # -- stats ---------------------------------------------------------------
     @property
     def num_entries(self) -> int:

@@ -1,0 +1,152 @@
+"""KV-arena sanitizer acceptance tests.
+
+- poison-on-free / unpoison-on-malloc: a freed page is NaN-filled in the
+  bound arena, and re-allocation restores the fresh-arena (zero) state so
+  masked whole-page kernel reads stay finite for live lanes
+- generation tags: a block table snapshot taken before a free+realloc
+  cycle trips ``assert_generations`` (use-after-free through a stale
+  table) as ``SanitizerError``
+- leak audit: surviving tables and pin/trie disagreements raise; a
+  drained pool returns the totals the engine folds into ``summary()``
+- engine: a clean sanitized run reports zero poison hits / generation
+  faults / leaks, and an injected UAF (poisoning a page a live decode
+  lane still reads) is trapped at the very next step
+"""
+
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_arch
+from repro.serving import (EngineConfig, KVArena, KVBlockPool, Request,
+                           SanitizerError, ServingEngine)
+
+ARCH = "llama3.2-1b"
+
+
+def _arena(num_blocks, bs):
+    L, KVH, hd = 2, 1, 4
+    base = np.ones((L, num_blocks + 1, bs, KVH, hd), np.float32)
+    import jax.numpy as jnp
+    return KVArena({"k": jnp.asarray(base), "v": jnp.asarray(base + 0.5)},
+                   block_size=bs)
+
+
+# ---------------------------------------------------------------------------
+# pool: poison / generations / audit
+# ---------------------------------------------------------------------------
+
+def test_poison_on_free_unpoison_on_realloc():
+    pool = KVBlockPool(4, 2, sanitize=True)
+    arena = _arena(4, 2)
+    pool.bind_arena(arena)
+    t = pool.alloc("a", 2)
+    bid = t.blocks[0]
+    pool.free("a")
+    assert pool.poison_fills == 1
+    assert np.isnan(np.asarray(arena.leaves["k"])[:, bid]).all()
+    # the trash page is never poisoned (masked lanes write there)
+    assert np.isfinite(np.asarray(arena.leaves["k"])[:, pool.num_blocks]).all()
+    # exhaust the pool so the poisoned page is re-handed-out
+    pool.alloc("b", 8)
+    assert (np.asarray(arena.leaves["k"])[:, bid] == 0).all()
+    pool.free("b")
+
+
+def test_sanitize_off_keeps_arena_untouched():
+    pool = KVBlockPool(4, 2)
+    arena = _arena(4, 2)
+    pool.bind_arena(arena)
+    pool.alloc("a", 2)
+    pool.free("a")
+    assert pool.poison_fills == 0
+    assert np.isfinite(np.asarray(arena.leaves["k"])).all()
+
+
+def test_generation_trap_on_stale_table():
+    pool = KVBlockPool(8, 4, sanitize=True)
+    pool.alloc("r1", 8)                       # 2 pages
+    tab = pool.dense_block_table(["r1"], 4)
+    gens = pool.table_generations(["r1"], 4)
+    pool.assert_generations(["r1"], tab, gens)    # fresh: passes
+    pool.free("r1")
+    pool.alloc("r2", 32)                      # wraps: r1's pages re-used
+    with pytest.raises(SanitizerError, match="use-after-free"):
+        pool.assert_generations(["r1"], tab, gens)
+    assert pool.generation_faults == 1
+    # None lanes are skipped entirely
+    pool.assert_generations([None], tab, gens)
+    pool.free("r2")
+
+
+def test_leak_audit_paths():
+    pool = KVBlockPool(6, 2, sanitize=True)
+    totals = pool.audit_leaks([])
+    assert totals["kv_leaked_tables"] == 0 and totals["kv_leaked_refs"] == 0
+
+    t = pool.alloc("a", 2)
+    with pytest.raises(SanitizerError, match="never freed"):
+        pool.audit_leaks([])
+    bid = t.blocks[0]
+    pool.pin(bid)
+    pool.free("a")
+    # pinned page survives the free; audit must be told who pinned it
+    with pytest.raises(SanitizerError, match="pinned pages disagree"):
+        pool.audit_leaks([])
+    totals = pool.audit_leaks([bid])
+    assert totals["kv_pinned_pages"] == 1
+    pool.unpin(bid)
+    assert pool.audit_leaks([])["kv_pinned_pages"] == 0
+
+
+# ---------------------------------------------------------------------------
+# engine: clean run + injected UAF
+# ---------------------------------------------------------------------------
+
+def _engine(**kw):
+    cfg = get_arch(ARCH).reduced()
+    ecfg = EngineConfig(num_slots=2, max_len=24, temperature=0.0, seed=0,
+                        kv_layout="paged", sanitize=True, **kw)
+    return ServingEngine(cfg, ecfg), cfg
+
+
+def _requests(cfg, n, prompt_len, gen):
+    rng = np.random.default_rng(0)
+    return [Request(f"r{i}",
+                    rng.integers(0, cfg.vocab_size, prompt_len)
+                    .astype(np.int32), gen)
+            for i in range(n)]
+
+
+def test_engine_sanitized_run_is_clean():
+    eng, cfg = _engine()
+    outs = eng.run(_requests(cfg, 3, 12, 4))
+    assert all(len(v) == 4 for v in outs.values())
+    s = eng.summary()
+    assert s["kv_sanitize_checks"] > 0
+    assert s["kv_poison_hits"] == 0
+    assert s["kv_generation_faults"] == 0
+    assert s["kv_leaked_tables"] == 0 and s["kv_leaked_refs"] == 0
+    assert s["kv_poison_fills"] > 0           # retirements poisoned pages
+    assert eng.pool.num_free == eng.pool.num_blocks
+
+
+def test_engine_traps_injected_uaf():
+    eng, cfg = _engine()
+    for r in _requests(cfg, 2, 12, 6):
+        eng.submit(r)
+    # step until a lane is decoding (prefill done, >= 1 token committed)
+    for _ in range(8):
+        assert eng.step()
+        live = [r for r in eng.sched.active.values()
+                if not r.prefilling and r.generated]
+        if live:
+            break
+    assert live, "no decoding lane after 8 steps"
+    victim = live[0]
+    # inject the UAF: poison a page the lane's table still names, as if
+    # it had been freed while referenced — the rows are inside kv_len,
+    # so the very next decode streams NaN into this lane's logits
+    eng.arena.poison_page(eng.pool.table(victim.rid).blocks[0])
+    with pytest.raises(SanitizerError, match="poisoned KV page"):
+        eng.step()
+    assert int(eng.obs.counters.get("kv_poison_hits", 0)) >= 1
