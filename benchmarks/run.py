@@ -58,7 +58,8 @@ def main() -> None:
         return
 
     t0 = time.time()
-    from benchmarks import (bench_adaptnet_serving, bench_chunked_prefill,
+    from benchmarks import (bench_adaptnet_serving, bench_chaos_serving,
+                            bench_chunked_prefill,
                             bench_gemm_dispatch, bench_kernels,
                             bench_paged_decode, bench_prefix_cache,
                             bench_sara_tpu,
@@ -83,6 +84,7 @@ def main() -> None:
     bench_paged_decode.run()
     bench_chunked_prefill.run()
     bench_prefix_cache.run()
+    bench_chaos_serving.run()
     bench_adaptnet_serving.run()
     aggregate()
     print(f"# benchmarks done in {time.time() - t0:.0f}s")

@@ -45,6 +45,13 @@ python -m repro.launch.serve --arch llama3.2-1b --smoke --prefix-cache \
 python scripts/check_trace.py --require-event cache_hit "$PREFIX_SMOKE"
 python -m benchmarks.bench_prefix_cache --smoke
 
+echo "== chaos smoke (faults injected + contained, survivors greedy-equal) =="
+CHAOS_SMOKE="$(mktemp -d)/trace.json"
+python -m repro.launch.serve --arch llama3.2-1b --smoke --chaos 2 \
+    --deadline 40 --trace-out "$CHAOS_SMOKE"
+python scripts/check_trace.py --require-event fault "$CHAOS_SMOKE"
+python -m benchmarks.bench_chaos_serving --smoke
+
 echo "== self-adaptive smoke (train -> save -> load -> serve adaptnet) =="
 ADAPTNET_SMOKE_DIR="$(mktemp -d)/adaptnet_ckpt"
 python -m repro.launch.train_adaptnet --samples 8000 --epochs 2 \

@@ -8,7 +8,9 @@
 Loads the Chrome/Perfetto trace-event JSON written by
 ``repro.launch.serve --trace-out`` and runs
 ``repro.obs.validate_trace`` requiring at least one event of every
-category (request, step, dispatch, compile, arena) — so any PR that
+always-present category (request, step, dispatch, compile, arena —
+``fault`` only appears when chaos/containment fired, so it is validated
+but not required) — so any PR that
 silently drops a whole instrumentation layer fails here, not in a
 profiling session weeks later.  ``--require-event NAME`` (repeatable)
 additionally demands at least one event with that name — the
@@ -31,7 +33,7 @@ def main() -> int:
     if len(argv) != 1:
         print(__doc__)
         return 2
-    from repro.obs import CATEGORIES, validate_trace
+    from repro.obs import REQUIRED_CATEGORIES, validate_trace
 
     path = argv[0]
     try:
@@ -39,7 +41,7 @@ def main() -> int:
     except (OSError, ValueError) as e:
         print(f"check_trace: cannot load {path}: {e}")
         return 1
-    errs = validate_trace(doc, require_categories=CATEGORIES)
+    errs = validate_trace(doc, require_categories=REQUIRED_CATEGORIES)
     names = {e.get("name") for e in doc.get("traceEvents", [])}
     errs += [f"required event {name!r} absent from trace"
              for name in require_events if name not in names]

@@ -109,7 +109,9 @@ def serve_continuous(arch: str = "llama3.2-1b", preset: str = "reduced",
                      shared_prefix_decode: bool = False,
                      defrag_threshold: float = None,
                      shared_prefix_len: int = 0, trace_out: str = None,
-                     sanitize: bool = False,
+                     sanitize: bool = False, chaos=None,
+                     deadline_s: float = None, snapshot_dir: str = None,
+                     snapshot_every: int = 0,
                      override_cfg=None, log: bool = True):
     """Serve a request set through the continuous-batching engine.
 
@@ -138,6 +140,15 @@ def serve_continuous(arch: str = "llama3.2-1b", preset: str = "reduced",
     already-served token run map those KV pages refcounted/copy-on-write
     instead of recomputing them; ``shared_prefix_decode`` additionally
     batches decode attention over the common physical prefix (cascade).
+    ``chaos`` (a :class:`repro.serving.faults.ChaosConfig`) turns on the
+    seed-driven fault-injection harness — injected pool OOMs / poisoned
+    pages / stalls / forced preemptions are contained by the engine's
+    step error boundary instead of crashing the run.  ``deadline_s``
+    attaches a per-request deadline (virtual steps under the default
+    step clock): queued requests past it expire, and admission sheds
+    requests the rolling-TTFT estimate says cannot make it.
+    ``snapshot_dir`` / ``snapshot_every`` enable crash-safe periodic
+    engine snapshots (``ServingEngine.snapshot``/``restore``).
     """
     from repro.configs.registry import get_arch
     from repro.serving import EngineConfig, Request, ServingEngine
@@ -155,7 +166,8 @@ def serve_continuous(arch: str = "llama3.2-1b", preset: str = "reduced",
         prefill_chunk=prefill_chunk, prefix_cache=prefix_cache,
         shared_prefix_decode=shared_prefix_decode,
         defrag_threshold=defrag_threshold, trace=trace_out is not None,
-        sanitize=sanitize))
+        sanitize=sanitize, chaos=chaos, snapshot_dir=snapshot_dir,
+        snapshot_every=snapshot_every))
     # ``shared_prefix_len`` > 0 makes every prompt open with the same token
     # run (a system-prompt-style workload) so the cross-request prefix cache
     # has something to hit; the tail stays per-request random.
@@ -172,7 +184,7 @@ def serve_continuous(arch: str = "llama3.2-1b", preset: str = "reduced",
             extras = {"src_features": rng.standard_normal(
                 (1, prompt_len, cfg.frontend.feature_dim)).astype(np.float32)}
         reqs.append(Request(rid=f"req-{i}", prompt=p, max_new_tokens=gen,
-                            extras=extras))
+                            extras=extras, deadline_s=deadline_s))
     t0 = time.time()
     outputs = engine.run(reqs)
     if log:
@@ -245,9 +257,60 @@ def main():
                     help="KV-arena sanitizer: poison freed pages, "
                          "generation-check decode tables, per-step pool "
                          "invariants, leak audit at drain")
+    ap.add_argument("--chaos", type=int, default=None, metavar="SEED",
+                    help="seed-driven fault injection (pool OOM, poisoned "
+                         "pages, stalls, forced preemption); faults are "
+                         "contained by the step error boundary, not fatal")
+    ap.add_argument("--deadline", type=float, default=None,
+                    help="per-request deadline (virtual steps under the "
+                         "default step clock): queued requests past it "
+                         "expire, hopeless admissions are shed")
+    ap.add_argument("--snapshot-dir", default=None, metavar="DIR",
+                    help="crash-safe engine snapshots go here "
+                         "(ServingEngine.snapshot/restore)")
+    ap.add_argument("--snapshot-every", type=int, default=0, metavar="N",
+                    help=">0: auto-snapshot every N engine steps "
+                         "(requires --snapshot-dir)")
     ap.add_argument("--smoke", action="store_true",
                     help="fast CI smoke: tiny trace, assert completion")
     a = ap.parse_args()
+    if a.smoke and a.chaos is not None:
+        # Chaos smoke: the same greedy workload served twice — fault-free,
+        # then with every injector armed at boosted probabilities.  The
+        # chaotic run must terminate every request, contain at least one
+        # injected fault inside the step boundary, and leave every
+        # non-faulted request's tokens identical to the fault-free run.
+        from repro.serving import ChaosConfig
+        common = dict(
+            arch=a.arch, num_requests=4, num_slots=2, prompt_len=12,
+            gen=6, temperature=0.0, execute=a.execute,
+            dispatcher=a.dispatcher, adaptnet_ckpt=a.adaptnet_ckpt,
+            kv_layout="paged", prefill_chunk=a.prefill_chunk or 8,
+            sanitize=True, log=False)
+        base, _ = serve_continuous(**common)
+        chaos = ChaosConfig(seed=a.chaos, pool_oom_p=0.15, poison_p=0.15,
+                            stall_p=0.1, preempt_p=0.1)
+        outputs, engine = serve_continuous(
+            **common, chaos=chaos, deadline_s=a.deadline,
+            snapshot_dir=a.snapshot_dir, snapshot_every=a.snapshot_every,
+            trace_out=a.trace_out)
+        s = engine.summary()
+        assert s["faults_injected"] >= 1, s
+        assert s["faults_contained"] >= 1, s
+        outcomes = {r.rid: r.outcome for r in engine.requests.values()}
+        assert all(outcomes.values()), outcomes   # every request terminal
+        done = [rid for rid, o in outcomes.items() if o == "done"]
+        for rid in done:
+            assert np.array_equal(outputs[rid], base[rid]), \
+                (rid, outputs[rid], base[rid])
+        assert s["kv_leaked_tables"] == 0 and s["kv_leaked_refs"] == 0, s
+        assert engine.pool.num_free == engine.pool.num_blocks
+        print(f"chaos smoke OK (seed={a.chaos}: "
+              f"{int(s['faults_injected'])} injected, "
+              f"{int(s['faults_contained'])} contained, outcomes="
+              f"{sorted(outcomes.values())}, greedy parity for "
+              f"{len(done)} survivors)")
+        return
     if a.smoke and a.prefix_cache:
         # Prefix-cache smoke: a shared-prefix workload served twice —
         # cache off, then cache on (+ optional cascade) — must agree
@@ -316,6 +379,12 @@ def main():
                     prompt_len=a.prompt_len, gen=a.gen, waves=a.waves,
                     temperature=a.temperature, top_k=a.top_k)
         return
+    chaos = None
+    if a.chaos is not None:
+        from repro.serving import ChaosConfig
+        chaos = ChaosConfig(seed=a.chaos, pool_oom_p=0.05,
+                            poison_p=0.05 if a.sanitize else 0.0,
+                            stall_p=0.05, preempt_p=0.05)
     serve_continuous(arch=a.arch, preset=a.preset, num_requests=a.requests,
                      num_slots=a.slots, prompt_len=a.prompt_len, gen=a.gen,
                      temperature=a.temperature, top_k=a.top_k,
@@ -326,7 +395,10 @@ def main():
                      shared_prefix_decode=a.shared_prefix_decode,
                      defrag_threshold=a.defrag_threshold,
                      shared_prefix_len=a.shared_prefix_len,
-                     trace_out=a.trace_out, sanitize=a.sanitize)
+                     trace_out=a.trace_out, sanitize=a.sanitize,
+                     chaos=chaos, deadline_s=a.deadline,
+                     snapshot_dir=a.snapshot_dir,
+                     snapshot_every=a.snapshot_every)
 
 
 if __name__ == "__main__":

@@ -18,10 +18,10 @@ trace in Perfetto.
 from repro.obs.export import (to_chrome_trace, validate_trace,
                               write_chrome_trace, write_jsonl)
 from repro.obs.spans import RequestTracker, StepTimeline
-from repro.obs.trace import (CATEGORIES, JitWatch, TraceError, TraceEvent,
-                             TraceRecorder)
+from repro.obs.trace import (CATEGORIES, REQUIRED_CATEGORIES, JitWatch,
+                             TraceError, TraceEvent, TraceRecorder)
 
-__all__ = ["CATEGORIES", "JitWatch", "TraceError", "TraceEvent",
-           "TraceRecorder", "RequestTracker", "StepTimeline",
+__all__ = ["CATEGORIES", "REQUIRED_CATEGORIES", "JitWatch", "TraceError",
+           "TraceEvent", "TraceRecorder", "RequestTracker", "StepTimeline",
            "to_chrome_trace", "validate_trace", "write_chrome_trace",
            "write_jsonl"]

@@ -125,6 +125,26 @@ class RequestTracker:
         del self._live[rid]
         self.closed += 1
 
+    def on_finish(self, rid: str, outcome: str, reason: str = "",
+                  **args) -> None:
+        """Terminal-failure closure (failed / expired / shed / cancelled):
+        close whatever phase span is open — ``queue`` for a request that
+        never got a slot, ``active`` for one that did — then the root,
+        exactly once, mirroring ``on_retire``'s invariant for the failure
+        outcomes the fault boundary and deadline sweep produce."""
+        st = self._need(rid, QUEUED, ACTIVE)
+        now = self.rec.now()
+        phase = "active" if st.state == ACTIVE else "queue"
+        self.rec.slice("request", phase, st.t_phase, now - st.t_phase,
+                       self._track(rid), rid=rid, outcome=outcome)
+        self.rec.instant("request", outcome, self._track(rid), rid=rid,
+                         reason=reason)
+        self.rec.slice("request", "request", st.t_root, now - st.t_root,
+                       self._track(rid), rid=rid, outcome=outcome,
+                       preempts=st.preempts, chunks=st.chunks, **args)
+        del self._live[rid]
+        self.closed += 1
+
 
 class StepTimeline:
     """Engine-step timeline: one root slice per step on the ``engine``

@@ -22,6 +22,9 @@ Every event carries a *category* from :data:`CATEGORIES`:
   ``compile``   a jit cache gained an entry (a retrace) — the raw signal
                 behind width-bucket / shape-diversity retrace storms
   ``arena``     KV block pool traffic (reserve / grow / free / defrag)
+  ``fault``     chaos-harness injections and step-level containment
+                (``serving/faults.py``) — absent from healthy runs, so
+                trace validation requires only :data:`REQUIRED_CATEGORIES`
 
 Timestamps are wall seconds relative to recorder construction
 (``time.perf_counter`` — monotonic, so step-phase slices never overlap or
@@ -36,7 +39,13 @@ from collections import deque
 from dataclasses import dataclass, field
 from typing import Any, Dict, Iterator, List, Optional, Tuple
 
-CATEGORIES = ("request", "step", "dispatch", "compile", "arena")
+CATEGORIES = ("request", "step", "dispatch", "compile", "arena", "fault")
+
+# The categories every healthy serve trace must contain.  "fault" events
+# only exist when chaos injection or step-level containment actually
+# fired, so the CI trace gate (scripts/check_trace.py) and tests require
+# this subset, not CATEGORIES.
+REQUIRED_CATEGORIES = ("request", "step", "dispatch", "compile", "arena")
 
 # The closed taxonomy of step-timeline phases and metric series.  Export
 # validation (obs/export.py) enforces CATEGORIES at runtime; saralint's
@@ -49,7 +58,15 @@ STEP_PHASES = ("schedule", "prefill", "prefill_chunk", "decode",
 COUNTERS = ("jit_compiles", "dispatch_records", "kv_defrag_auto",
             "shared_prefix_steps", "prefix_cache_inserted_pages",
             "prefix_cache_evicted_pages", "kv_sanitize_checks",
-            "kv_poison_hits", "kv_generation_faults")
+            "kv_poison_hits", "kv_generation_faults",
+            # fault tolerance (serving/faults.py + the engine's step
+            # error boundary): injections, containments, engine-level
+            # step retries, terminal request outcomes, snapshots
+            "faults_injected", "faults_contained", "engine_step_retries",
+            "preempt_budget_exhausted", "prefix_cache_fallbacks",
+            "requests_failed", "requests_expired", "requests_shed",
+            "requests_cancelled", "requests_rejected",
+            "engine_snapshots", "engine_restores")
 
 GAUGES = ("kv_pages_in_use", "kv_fragmentation", "slot_occupancy",
           "decode_table_width", "shared_prefix_lanes")

@@ -16,6 +16,12 @@ utilization argument).
              / tokens-per-second / slot utilization / KV rows streamed per
              decode step / prefill KV rows written vs the padded-bucket
              equivalent
+  faults     terminal request outcomes (failed/expired/shed/cancelled/
+             rejected), fault attribution for the engine's step error
+             boundary, and the seed-driven chaos-injection harness
+             (EngineConfig.chaos)
+  snapshot   crash-safe engine snapshot/restore through
+             checkpoint/manager (EngineConfig.snapshot_dir)
 
 Every layer also reports into the ``repro.obs`` trace recorder the engine
 owns: request-lifecycle spans, a per-step phase timeline, KV-arena and
@@ -26,6 +32,8 @@ docs/OBSERVABILITY.md for the trace schema.
 """
 
 from repro.serving.engine import EngineConfig, ServingEngine, sample_logits
+from repro.serving.faults import (OUTCOME_COUNTERS, OUTCOMES, ChaosConfig,
+                                  FaultInjector, attach_rids, fault_rids)
 from repro.serving.kv_pool import (KVArena, KVBlockPool, PoolError,
                                    SanitizerError)
 from repro.serving.metrics import ServingMetrics
@@ -33,4 +41,5 @@ from repro.serving.scheduler import ContinuousScheduler, Request
 
 __all__ = ["EngineConfig", "ServingEngine", "sample_logits", "KVArena",
            "KVBlockPool", "PoolError", "SanitizerError", "ServingMetrics",
-           "ContinuousScheduler", "Request"]
+           "ContinuousScheduler", "Request", "OUTCOMES", "OUTCOME_COUNTERS",
+           "ChaosConfig", "FaultInjector", "attach_rids", "fault_rids"]

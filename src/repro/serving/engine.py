@@ -92,6 +92,8 @@ from repro.dispatch import SiteRegistry
 from repro.models.serving import PAGED_FAMILIES
 from repro.obs import (JitWatch, RequestTracker, StepTimeline, TraceRecorder,
                        write_chrome_trace, write_jsonl)
+from repro.serving.faults import (OUTCOME_COUNTERS, ChaosConfig,
+                                  FaultInjector, fault_rids)
 from repro.serving.kv_pool import (KVArena, KVBlockPool, PoolError,
                                    SanitizerError)
 from repro.serving.metrics import ServingMetrics
@@ -230,6 +232,26 @@ class EngineConfig:
     # instead of silent garbage logits.  Debug/test mode — poisoning
     # rewrites one arena page per freed block.
     sanitize: bool = False
+    # Chaos harness (serving/faults.py): deterministic seed-driven fault
+    # injection — simulated pool OOMs, poisoned pages (requires
+    # ``sanitize``), forced lane stalls, forced mid-prefill preemptions.
+    # None / all-zero probabilities = no injection.
+    chaos: Optional[ChaosConfig] = None
+    # Livelock guard: preempt/readmit cycles a request may consume before
+    # the engine fails it (outcome "failed") instead of requeueing again.
+    preempt_budget: int = 3
+    # Step error boundary: an UNattributable PoolError/SanitizerError
+    # (no ``rids`` — cannot be pinned on one request) is retried this
+    # many times with exponential backoff (``retry_backoff_s`` doubling
+    # per attempt, slept only under the wall clock) before surfacing.
+    max_step_retries: int = 2
+    retry_backoff_s: float = 0.05
+    # Crash safety: when set, ``snapshot()`` / auto-snapshots (every
+    # ``snapshot_every`` steps, 0 = manual only) write a restorable
+    # engine checkpoint through checkpoint/manager; a fresh engine with
+    # the same configs resumes mid-trace via ``restore()``.
+    snapshot_dir: Optional[str] = None
+    snapshot_every: int = 0
 
 
 class ServingEngine:
@@ -320,7 +342,21 @@ class ServingEngine:
             e.num_slots, self.pool,
             max_prefills_per_step=e.max_prefills_per_step, reserve=e.reserve,
             token_overhead=row_overhead, prefill_chunk=self.prefill_chunk,
-            tracker=self.req_spans, prefix_cache=self.prefix_cache)
+            tracker=self.req_spans, prefix_cache=self.prefix_cache,
+            metrics=self.metrics)
+        # every submitted request, live or terminal — how the step error
+        # boundary maps a fault's rids back to Request objects
+        self.requests: Dict[str, Request] = {}
+        self.chaos: Optional[FaultInjector] = None
+        if e.chaos is not None and e.chaos.any_enabled():
+            if e.chaos.poison_p > 0 and not e.sanitize:
+                raise ValueError(
+                    "chaos.poison_p needs sanitize=True: the sanitizer's "
+                    "poison scan is what detects (and contains) the "
+                    "injected page — without it the fault surfaces as "
+                    "silent garbage tokens")
+            self.chaos = FaultInjector(e.chaos, recorder=self.obs)
+        self._step_idx = 0               # monotonic, drives chaos schedules
         # analytic per-token prefill cost (2*M*K*N over every GEMM site at
         # M=1, layer sites times the stack depth) — what each cache-hit
         # token avoids recomputing; feeds metrics.prefill_flops_saved
@@ -482,6 +518,7 @@ class ServingEngine:
         if req.eos_id is None:
             req.eos_id = self.ecfg.eos_id
         self.sched.submit(req)
+        self.requests[req.rid] = req
 
     def _slot_snapshot(self, slot: int):
         return jax.tree_util.tree_map(lambda a: a[slot], self._cache)
@@ -712,9 +749,48 @@ class ServingEngine:
     def _retire(self, req: Request) -> None:
         slot = req.slot
         self.sched.retire(req, self.now())
-        self.metrics.on_retire(req.arrival_time, req.t_admit, req.t_done)
+        req.outcome = "done"
+        self.metrics.on_retire(req.arrival_time, req.t_admit, req.t_done,
+                               in_deadline=not req.expired_at(req.t_done))
         if self.kv_layout == "paged":
             self._kv_rows[slot] = 0      # pages already back in the free list
+
+    def _finish(self, req: Request, outcome: str, reason: str = "") -> None:
+        """Terminal-failure bookkeeping shared by fault containment, the
+        scheduler's deadline/cancel sweep, and preempt-budget exhaustion.
+        When the scheduler already closed the request (``plan.finished``
+        hands them over with ``outcome`` set and slot/pages/span gone)
+        only the engine-side counters remain; otherwise the scheduler
+        teardown runs here too."""
+        slot = req.slot
+        if not req.outcome:
+            self.sched.finish(req, outcome, self.now(), reason=reason)
+        self.metrics.on_finish(req.outcome)
+        self.obs.count(OUTCOME_COUNTERS[req.outcome], 1)
+        if slot >= 0:
+            self._last_tok[slot, 0] = 0
+            if self.kv_layout == "paged":
+                self._kv_rows[slot] = 0
+
+    def _preempt(self, victim: Request) -> None:
+        """Preempt one admitted request (recompute-on-readmit) — unless
+        its preemption budget is spent, in which case it fails instead of
+        requeueing: a victim the pool can never hold would otherwise
+        cycle preempt->readmit->stall->preempt forever (livelock), and
+        each cycle re-prefills its whole context."""
+        victim.preempt_count += 1
+        if victim.preempt_count > self.ecfg.preempt_budget:
+            self.obs.count("preempt_budget_exhausted", 1)
+            self._finish(victim, "failed",
+                         reason=f"preemption budget "
+                                f"({self.ecfg.preempt_budget}) exhausted")
+            return
+        slot = victim.slot
+        self.sched.preempt(victim)
+        self.metrics.preemptions += 1
+        self._last_tok[slot, 0] = 0
+        if self.kv_layout == "paged":
+            self._kv_rows[slot] = 0
 
     def _preempt_newest(self) -> None:
         """Every lane is stalled: preempt the newest request so the rest can
@@ -724,13 +800,57 @@ class ServingEngine:
         the next admission.  ``sched.preempt`` (not ``retire``) keeps the
         request's lifecycle fields clean: no ``t_done`` is stamped until it
         actually finishes."""
-        victim = max(self.sched.active.values(), key=lambda r: r.t_admit)
-        slot = victim.slot
-        self.sched.preempt(victim)
-        self.metrics.preemptions += 1
-        self._last_tok[slot, 0] = 0
-        if self.kv_layout == "paged":
-            self._kv_rows[slot] = 0
+        self._preempt(max(self.sched.active.values(),
+                          key=lambda r: r.t_admit))
+
+    # -- chaos injection points -----------------------------------------------
+    def _inject_admission_chaos(self) -> None:
+        """Post-schedule chaos: force-preempt a mid-prefill lane
+        (exercising recompute-on-readmit and the preemption budget), then
+        possibly raise a simulated pool OOM attributed to one live lane —
+        the containment path's bread and butter."""
+        step = self._step_idx
+        mid_prefill = [r for _, r in sorted(self.sched.active.items())
+                       if r.prefilling]
+        victim = self.chaos.preempt(step, mid_prefill)
+        if victim is not None:
+            self._preempt(victim)
+        live = [r for _, r in sorted(self.sched.active.items())]
+        victim = self.chaos.pool_oom(step, live)
+        if victim is not None:
+            raise self.chaos.oom_error(step, victim)
+
+    def _inject_decode_chaos(self, active: Dict[int, Request],
+                             snaps: Dict) -> None:
+        """Pre-decode chaos: forced lane stalls (writes land in the trash
+        page, the token replays — dense lanes get the rollback snapshot a
+        real stall would have taken) and, under paged+sanitize,
+        NaN-poisoning one fully-written exclusively-owned page of a lane
+        so the post-decode poison scan must trap and attribute it."""
+        step = self._step_idx
+        lanes = [r for _, r in sorted(active.items())]
+        for req in self.chaos.stall_lanes(step, lanes):
+            if not req.stalled:
+                req.stalled = True
+                self.metrics.stalls += 1
+                if self.kv_layout == "dense" and req.slot not in snaps:
+                    snaps[req.slot] = self._slot_snapshot(req.slot)
+        if self.kv_layout != "paged" or self.ecfg.chaos.poison_p <= 0:
+            return
+        bs = self.ecfg.block_size
+        cands = []
+        for slot, req in sorted(active.items()):
+            if req.stalled:
+                continue
+            full = int(self._kv_rows[slot]) // bs
+            pages = [b for b in self.pool.table(req.rid).blocks[:full]
+                     if self.pool.refcount(b) == 1
+                     and self.pool.pincount(b) == 0]
+            cands.append((req, pages))
+        hit = self.chaos.poison(step, cands)
+        if hit is not None:
+            _, page = hit
+            self.arena.poison_page(page)
 
     # -- main loop ------------------------------------------------------------
     def step(self) -> bool:
@@ -741,21 +861,43 @@ class ServingEngine:
         nothing left to do."""
         if self.sched.idle():
             return False
-        self.timeline.begin()
-        try:
-            self._step_body()
-            thr = self.ecfg.defrag_threshold
-            if thr is not None and self.pool.fragmentation() > thr:
-                self.obs.count("kv_defrag_auto", 1)
-                self.defrag()
-        finally:
-            e = self.ecfg
-            self.obs.gauge("kv_pages_in_use", self.pool.num_in_use)
-            self.obs.gauge("kv_fragmentation", self.pool.fragmentation())
-            self.obs.gauge("slot_occupancy",
-                           len(self.sched.active) / e.num_slots)
-            self.timeline.end(active=len(self.sched.active),
-                              waiting=self.sched.pending())
+        retries = max(0, self.ecfg.max_step_retries)
+        delay = self.ecfg.retry_backoff_s
+        for attempt in range(retries + 1):
+            fault = None
+            self.timeline.begin()
+            try:
+                self._step_body()
+                thr = self.ecfg.defrag_threshold
+                if thr is not None and self.pool.fragmentation() > thr:
+                    self.obs.count("kv_defrag_auto", 1)
+                    self.defrag()
+            except (PoolError, SanitizerError) as exc:
+                # step error boundary: decide below whether this is one
+                # request's fault or engine-level trouble — either way
+                # the timeline closes cleanly first
+                fault = exc
+            finally:
+                e = self.ecfg
+                self.obs.gauge("kv_pages_in_use", self.pool.num_in_use)
+                self.obs.gauge("kv_fragmentation", self.pool.fragmentation())
+                self.obs.gauge("slot_occupancy",
+                               len(self.sched.active) / e.num_slots)
+                self.timeline.end(active=len(self.sched.active),
+                                  waiting=self.sched.pending())
+            if fault is None:
+                break
+            if self._contain_fault(fault):
+                break                    # victims failed; engine lives on
+            if attempt >= retries:
+                raise fault              # unattributable and out of retries
+            self.obs.count("engine_step_retries", 1)
+            self.obs.instant("fault", "step_retry", track="faults",
+                             attempt=attempt + 1,
+                             error=type(fault).__name__)
+            if self.ecfg.clock == "wall" and delay > 0:
+                time.sleep(delay)        # virtual clocks retry immediately
+            delay *= 2
         if self.ecfg.sanitize:
             # full invariant sweep every step: refcount drift and
             # free-list corruption surface at the step that caused them,
@@ -763,27 +905,66 @@ class ServingEngine:
             self.pool.check()
             self.obs.count("kv_sanitize_checks", 1)
         self._vtime += 1.0
+        self._step_idx += 1
+        if self.ecfg.snapshot_dir and self.ecfg.snapshot_every > 0 \
+                and self._step_idx % self.ecfg.snapshot_every == 0:
+            self.snapshot()
+        return True
+
+    def _contain_fault(self, fault: Exception) -> bool:
+        """Fail exactly the request(s) a step fault names instead of the
+        whole engine.  Returns True when the fault was attributed to at
+        least one live request — its pages free, its span closes with
+        outcome ``failed``, and surviving lanes simply replay their
+        pending token next step (the raise always precedes token commit,
+        so no generated sequence observes the abandoned step)."""
+        victims = [self.requests[rid] for rid in fault_rids(fault)
+                   if rid in self.requests
+                   and not self.requests[rid].outcome]
+        if not victims:
+            return False
+        self.obs.count("faults_contained", len(victims))
+        for req in victims:
+            self.obs.instant("fault", "contained", track="faults",
+                             rid=req.rid, error=type(fault).__name__)
+            self._finish(req, "failed", reason=str(fault)[:200])
         return True
 
     def _step_body(self) -> None:
         with self.timeline.phase("schedule"):
             plan = self.sched.plan(self.now())
+        # requests the scheduling pass terminated (expired/shed/cancelled):
+        # the scheduler already tore down slot/pages/span, the counters and
+        # lane arrays are the engine's side
+        for req in plan.finished:
+            self._finish(req, req.outcome)
         for req in plan.prefills:
-            if req.cached_prefix_tokens:
-                # cache-hit admission: the lane's first pages arrived
-                # pre-written (shared), so decode bookkeeping and the chunk
-                # stream both resume at the cached offset
+            if self.kv_layout == "paged":
+                # reset lane bookkeeping on EVERY admission — a lane whose
+                # previous occupant left through containment or the
+                # deadline sweep never zeroed its row count, and chunked
+                # prefill extends with `+=` from whatever is here.  Cache
+                # hits resume at the cached offset (prefill_pos), misses
+                # at 0.
                 self._kv_rows[req.slot] = req.prefill_pos
+            if req.cached_prefix_tokens:
                 self.metrics.on_cache_hit(req.cached_prefix_tokens,
                                           req.cached_pages,
                                           self._flops_per_token)
                 self.req_spans.on_cache_hit(req.rid,
                                             tokens=req.cached_prefix_tokens,
                                             pages=req.cached_pages)
+        if self.chaos is not None:
+            self._inject_admission_chaos()
         if self.prefill_chunk is not None:
             self._do_chunk_prefills()
         else:
-            for req in plan.prefills:
+            # every still-prefilling active lane, not just this plan's
+            # admissions: an aborted step (contained fault between
+            # admission and prefill) leaves admitted-but-unprefilled
+            # lanes behind, and they must prefill on the retry
+            for req in [r for _, r in sorted(self.sched.active.items())
+                        if r.prefilling]:
                 self._do_prefill(req)
                 if req.done():
                     self._retire(req)
@@ -805,6 +986,10 @@ class ServingEngine:
                     self.metrics.stalls += 1
                     if self.kv_layout == "dense":
                         snaps[slot] = self._slot_snapshot(slot)
+            if self.chaos is not None:
+                # after grow() (which clears stalled on success), so a
+                # forced stall survives into this step's decode mask
+                self._inject_decode_chaos(active, snaps)
             if self.kv_layout == "paged":
                 logits, dt, kv_read = self._decode_paged(active)
             else:
@@ -942,10 +1127,14 @@ class ServingEngine:
         if bad:
             self.obs.count("kv_poison_hits", len(bad))
             lanes = ", ".join(f"{s} ({active[s].rid})" for s in bad)
-            raise SanitizerError(
+            err = SanitizerError(
                 f"poisoned KV page read: decode produced non-finite "
                 f"logits on lane(s) {lanes} — a freed (NaN-filled) arena "
                 "page is still reachable through a live block table")
+            # attributed: the step error boundary fails exactly these
+            # lanes instead of crashing the engine
+            err.rids = [active[s].rid for s in bad]
+            raise err
 
     def _shared_prefix_group(self, active: Dict[int, Request],
                              kv: np.ndarray, wm: np.ndarray):
@@ -1013,9 +1202,20 @@ class ServingEngine:
         return prefix_pages, prefix_lens, utables, ulens, kv_read, P
 
     def run(self, requests: Sequence[Request]) -> Dict[str, np.ndarray]:
-        """Serve a request set to completion; returns {rid: generated}."""
+        """Serve a request set to completion; returns {rid: generated}.
+        An invalid request (empty prompt, oversized, never-admittable) is
+        recorded as ``rejected`` and skipped — one bad request in a batch
+        must not take the server down with it."""
         for r in requests:
-            self.submit(r)
+            try:
+                self.submit(r)
+            except (ValueError, PoolError) as exc:
+                r.outcome = "rejected"
+                self.requests[r.rid] = r
+                self.metrics.on_finish("rejected")
+                self.obs.count("requests_rejected", 1)
+                self.obs.instant("request", "rejected", f"req:{r.rid}",
+                                 rid=r.rid, reason=str(exc)[:200])
         while self.step():
             pass
         if self.ecfg.sanitize:
@@ -1069,6 +1269,19 @@ class ServingEngine:
         s["kv_cow_copies"] = self.pool.cow_copies
         if self.prefix_cache is not None:
             s.update(self.prefix_cache.stats())
+        s["faults_contained"] = int(
+            self.obs.counters.get("faults_contained", 0))
+        s["engine_step_retries"] = int(
+            self.obs.counters.get("engine_step_retries", 0))
+        s["preempt_budget_exhausted"] = int(
+            self.obs.counters.get("preempt_budget_exhausted", 0))
+        s["engine_snapshots"] = int(
+            self.obs.counters.get("engine_snapshots", 0))
+        s["engine_restores"] = int(
+            self.obs.counters.get("engine_restores", 0))
+        if self.chaos is not None:
+            s["faults_injected"] = self.chaos.total_injected()
+            s.update(self.chaos.summary())
         if self.ecfg.sanitize:
             s["kv_sanitize_checks"] = self.pool.sanitize_checks
             s["kv_poison_fills"] = self.pool.poison_fills
@@ -1077,6 +1290,38 @@ class ServingEngine:
             s["kv_generation_faults"] = self.pool.generation_faults
             s.update(self._leak_audit)
         return s
+
+    # -- crash safety ---------------------------------------------------------
+    def snapshot(self, directory: Optional[str] = None,
+                 blocking: bool = True) -> int:
+        """Write a restorable engine snapshot (KV storage, scheduler
+        queue/slots, live requests, pool ownership, prefix-cache trie,
+        metrics, PRNG) through ``checkpoint/manager`` — atomic rename,
+        so a crash mid-save never corrupts the latest snapshot.  Returns
+        the snapshot's step index."""
+        from repro.serving.snapshot import save_engine
+        d = directory or self.ecfg.snapshot_dir
+        if not d:
+            raise ValueError("snapshot needs a directory: pass one or set "
+                             "EngineConfig.snapshot_dir")
+        step = save_engine(self, d, blocking=blocking)
+        self.obs.count("engine_snapshots", 1)
+        return step
+
+    def restore(self, directory: Optional[str] = None,
+                step: Optional[int] = None) -> int:
+        """Resume from a snapshot into this freshly-built engine (same
+        configs, nothing submitted yet).  Surviving requests continue
+        token-for-token under greedy decoding.  Returns the restored
+        step index."""
+        from repro.serving.snapshot import restore_engine
+        d = directory or self.ecfg.snapshot_dir
+        if not d:
+            raise ValueError("restore needs a directory: pass one or set "
+                             "EngineConfig.snapshot_dir")
+        step = restore_engine(self, d, step=step)
+        self.obs.count("engine_restores", 1)
+        return step
 
     # -- observability export -------------------------------------------------
     def site_timings(self) -> Dict[str, Dict]:

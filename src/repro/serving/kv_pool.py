@@ -300,12 +300,16 @@ class KVBlockPool:
                 bid = int(tables[i, j])
                 if self._gen[bid] != int(gens[i, j]):
                     self.generation_faults += 1
-                    raise SanitizerError(
+                    err = SanitizerError(
                         f"use-after-free: lane {i} ({rid}) block table names "
                         f"page {bid} at generation {int(gens[i, j])} but the "
                         f"page is now generation {self._gen[bid]} — it was "
                         "reclaimed and re-allocated after the table was "
                         "built")
+                    # structured attribution: the engine's fault boundary
+                    # fails exactly this request instead of the engine
+                    err.rids = [str(rid)]
+                    raise err
 
     def audit_leaks(self, expected_pins: Optional[Sequence[int]] = None
                     ) -> Dict[str, int]:

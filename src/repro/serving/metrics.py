@@ -42,6 +42,19 @@ class ServingMetrics:
     completed: int = 0
     stalls: int = 0
     preemptions: int = 0
+    # terminal failure outcomes (serving/faults.py): requests that left
+    # the system without completing, by cause — plus the goodput twin of
+    # ``completed``: completions that also met their deadline (what the
+    # chaos benchmark reports as in-deadline completions/s)
+    failed: int = 0
+    expired: int = 0
+    shed: int = 0
+    cancelled: int = 0
+    rejected: int = 0
+    completed_in_deadline: int = 0
+    # scheduler.plan() gave up a matched prefix under pool pressure and
+    # re-admitted as a cache miss — a silent-fallback storm signal
+    prefix_cache_fallbacks: int = 0
     # KV rows actually streamed by decode vs what a masked-dense decode
     # over full slot capacity would stream (the paged-arena win)
     kv_read_tokens: int = 0
@@ -78,11 +91,38 @@ class ServingMetrics:
         self.ttft.append(t - arrival)
         self._ttft_win.append(t - arrival)
 
-    def on_retire(self, arrival: float, admit: float, t: float) -> None:
+    def on_retire(self, arrival: float, admit: float, t: float,
+                  in_deadline: bool = True) -> None:
         self.latency.append(t - arrival)
         self._latency_win.append(t - arrival)
         self.queue_delay.append(admit - arrival)
         self.completed += 1
+        if in_deadline:
+            self.completed_in_deadline += 1
+
+    def on_finish(self, outcome: str) -> None:
+        """One request left the system on a terminal failure outcome
+        (``failed`` / ``expired`` / ``shed`` / ``cancelled`` /
+        ``rejected`` — see ``serving/faults.py``)."""
+        if outcome == "failed":
+            self.failed += 1
+        elif outcome == "expired":
+            self.expired += 1
+        elif outcome == "shed":
+            self.shed += 1
+        elif outcome == "cancelled":
+            self.cancelled += 1
+        elif outcome == "rejected":
+            self.rejected += 1
+        else:
+            raise ValueError(f"unknown terminal outcome {outcome!r}")
+
+    def ttft_estimate(self) -> Optional[float]:
+        """Estimated queue-to-first-token delay for an arriving request:
+        the rolling-window TTFT median (live behaviour, not lifetime).
+        ``None`` until a first token has been produced — admission
+        control must not shed on a guess."""
+        return percentile(self._ttft_win, 50)
 
     def on_prefill(self, tokens: int, seconds: float,
                    kv_write_rows: int = 0,
@@ -127,6 +167,13 @@ class ServingMetrics:
         win_s = sum(s for _, s in self._decode_win)
         out = {
             "completed": self.completed,
+            "completed_in_deadline": self.completed_in_deadline,
+            "requests_failed": self.failed,
+            "requests_expired": self.expired,
+            "requests_shed": self.shed,
+            "requests_cancelled": self.cancelled,
+            "requests_rejected": self.rejected,
+            "prefix_cache_fallbacks": self.prefix_cache_fallbacks,
             "decode_steps": self.decode_steps,
             "ttft_p50_s": percentile(self.ttft, 50),
             "ttft_p99_s": percentile(self.ttft, 99),

@@ -198,6 +198,55 @@ class PrefixCache:
             stack.extend(n.children.values())
         return out
 
+    # -- snapshot / restore ---------------------------------------------------
+    def export_state(self) -> Dict:
+        """JSON-serializable trie dump for engine snapshots: the nodes in
+        parent-before-child order (``parent`` indexes the same list, -1 =
+        root), each with its physical page, LRU stamp, and the key span's
+        token ids; plus the LRU clock and lifetime counters."""
+        nodes: List[Dict] = []
+        stack = [(c, -1) for c in self._root.children.values()]
+        while stack:
+            node, pidx = stack.pop()
+            idx = len(nodes)
+            nodes.append({
+                "parent": pidx,
+                "page": int(node.page),
+                "stamp": int(node.stamp),
+                "key": np.frombuffer(node.key, np.int32).tolist(),
+            })
+            stack.extend((c, idx) for c in node.children.values())
+        return {"nodes": nodes, "clock": int(self._clock),
+                "hits": int(self.hits), "misses": int(self.misses),
+                "reused_pages": int(self.reused_pages),
+                "inserted_pages": int(self.inserted_pages),
+                "evicted_pages": int(self.evicted_pages)}
+
+    def restore_state(self, state: Dict) -> int:
+        """Rebuild the trie from :meth:`export_state`.  Does NOT touch
+        pool pin counts: snapshot restore rebuilds the pool (pins
+        included) wholesale from the same checkpoint, so re-pinning here
+        would double-count every cached page.  Only valid on an empty
+        cache over that restored pool.  Returns the node count."""
+        if self._root.children:
+            raise ValueError("restore_state needs an empty prefix cache")
+        built: List[_Node] = []
+        for spec in state["nodes"]:
+            parent = (self._root if spec["parent"] < 0
+                      else built[spec["parent"]])
+            key = np.asarray(spec["key"], np.int32).tobytes()
+            node = _Node(key, int(spec["page"]), parent)
+            node.stamp = int(spec["stamp"])
+            parent.children[key] = node
+            built.append(node)
+        self._clock = int(state["clock"])
+        self.hits = int(state["hits"])
+        self.misses = int(state["misses"])
+        self.reused_pages = int(state["reused_pages"])
+        self.inserted_pages = int(state["inserted_pages"])
+        self.evicted_pages = int(state["evicted_pages"])
+        return len(built)
+
     # -- stats ---------------------------------------------------------------
     @property
     def num_entries(self) -> int:

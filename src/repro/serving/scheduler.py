@@ -51,11 +51,23 @@ class Request:
     arrival_time: float = 0.0
     eos_id: Optional[int] = None
     extras: Optional[Dict] = None       # per-request vlm/encdec inputs (B=1)
+    # completion deadline in seconds after ``arrival_time`` (engine-clock
+    # units: wall seconds or virtual steps).  The scheduler expires a
+    # queued request once the deadline passes, and sheds it at admission
+    # when the rolling-TTFT estimate says the deadline cannot be met.
+    deadline_s: Optional[float] = None
 
     # runtime state (engine-owned)
     generated: List[int] = field(default_factory=list)
     slot: int = -1
     stalled: bool = False
+    # terminal outcome ("" while live): done | failed | expired | shed |
+    # cancelled | rejected — see serving/faults.py
+    outcome: str = ""
+    # preempt/readmit cycles consumed (engine fails the request when it
+    # exceeds EngineConfig.preempt_budget — the livelock guard)
+    preempt_count: int = 0
+    cancel_requested: bool = False
     # prefill phase: ``prefilling`` is set at admission and cleared when the
     # prefill completes (bucketed: same step; chunked: after the final
     # chunk); ``prefill_pos`` counts context tokens already streamed into
@@ -95,11 +107,27 @@ class Request:
         return (self.eos_id is not None and len(self.generated) > 0
                 and self.generated[-1] == self.eos_id)
 
+    def cancel(self) -> None:
+        """Revoke the request.  Takes effect at the next scheduling pass:
+        queued or active, the request leaves the system with outcome
+        ``cancelled`` and its pages return to the pool."""
+        self.cancel_requested = True
+
+    def expired_at(self, now: float) -> bool:
+        """Deadline already missed at engine time ``now`` (always False
+        without a deadline, or before the request has even arrived)."""
+        return (self.deadline_s is not None
+                and self.arrival_time <= now
+                and now - self.arrival_time > self.deadline_s)
+
 
 @dataclass
 class StepPlan:
     prefills: List[Request]             # admitted this step (slot assigned)
     decode_slots: List[int]             # slots active after the prefills
+    # requests the scheduling pass terminated (expired / shed /
+    # cancelled) — the engine finishes their metrics/obs bookkeeping
+    finished: List[Request] = field(default_factory=list)
 
 
 class ContinuousScheduler:
@@ -120,7 +148,7 @@ class ContinuousScheduler:
                  max_prefills_per_step: int = 1, reserve: str = "full",
                  token_overhead: int = 0,
                  prefill_chunk: Optional[int] = None,
-                 tracker=None, prefix_cache=None):
+                 tracker=None, prefix_cache=None, metrics=None):
         if reserve not in ("full", "incremental"):
             raise ValueError(reserve)
         self.num_slots = num_slots
@@ -141,6 +169,9 @@ class ContinuousScheduler:
         # each prompt's longest cached prefix, shares those pages into the
         # new table, and reserves pool blocks only for the suffix
         self.prefix_cache = prefix_cache
+        # optional ServingMetrics: the rolling-TTFT window feeds the
+        # load-shedding estimate, and plan() counts cache-miss fallbacks
+        self.metrics = metrics
         self.waiting: deque = deque()
         self.active: Dict[int, Request] = {}
         self._free_slots = list(range(num_slots - 1, -1, -1))
@@ -209,13 +240,42 @@ class ContinuousScheduler:
         return pages, offset
 
     def plan(self, now: float = float("inf")) -> StepPlan:
-        """Admit up to ``max_prefills_per_step`` arrived requests into free
-        slots, KV budget permitting, then decode every active slot."""
+        """Terminate cancelled/expired requests, shed admissions that can
+        no longer meet their deadline, then admit up to
+        ``max_prefills_per_step`` arrived requests into free slots, KV
+        budget permitting, then decode every active slot.  (``now`` =
+        inf, the no-clock default, disables the deadline machinery —
+        there is no time to judge a deadline against.)"""
+        finished: List[Request] = []
+        timed = np.isfinite(now)
+        # cancellation reaches active lanes too: their slot and pages
+        # free here, before admission can use them
+        for req in [r for r in self.active.values() if r.cancel_requested]:
+            self.finish(req, "cancelled", now)
+            finished.append(req)
+        for req in [r for r in self.waiting
+                    if r.cancel_requested or (timed and r.expired_at(now))]:
+            self.finish(req, "cancelled" if req.cancel_requested
+                        else "expired", now)
+            finished.append(req)
         prefills: List[Request] = []
         while (len(prefills) < self.max_prefills_per_step
                and self._free_slots and self.waiting
                and self.waiting[0].arrival_time <= now):
             req = self.waiting[0]
+            # load shedding: when the live TTFT estimate already exceeds
+            # the head's remaining deadline budget, admitting it would
+            # only burn pool pages on a doomed request — drop it now,
+            # with its own terminal outcome so callers can retry later
+            if timed and req.deadline_s is not None \
+                    and self.metrics is not None:
+                est = self.metrics.ttft_estimate()
+                if est is not None and \
+                        (now - req.arrival_time) + est > req.deadline_s:
+                    self.waiting.popleft()
+                    self.finish(req, "shed", now)
+                    finished.append(req)
+                    continue
             pages, offset = self._match_prefix(req)
             reservation = self._reservation(req, cached_tokens=offset)
             need_new = self.pool.blocks_for(reservation) - len(pages)
@@ -239,6 +299,7 @@ class ContinuousScheduler:
                     if need_new > self.pool.num_free:
                         self.prefix_cache.evict(
                             need_new - self.pool.num_free)
+                    self._count_fallback(req)
                 if need_new > self.pool.num_free:
                     break                # FCFS: don't starve the head
             self.waiting.popleft()
@@ -264,7 +325,20 @@ class ContinuousScheduler:
             prefills.append(req)
             if self.tracker is not None:
                 self.tracker.on_admit(req.rid, slot=req.slot)
-        return StepPlan(prefills, sorted(self.active))
+        return StepPlan(prefills, sorted(self.active), finished)
+
+    def _count_fallback(self, req: Request) -> None:
+        """A matched prefix was abandoned under pool pressure and the
+        admission retried as a cache miss.  Count it: each fallback
+        silently re-prefills tokens the cache had, so a storm of these
+        erases the prefix-cache win while hit-rate still looks healthy."""
+        if self.metrics is not None:
+            self.metrics.prefix_cache_fallbacks += 1
+        if self.tracker is not None:
+            rec = self.tracker.rec
+            rec.count("prefix_cache_fallbacks", 1)
+            rec.instant("arena", "prefix_cache_fallback", track="arena",
+                        rid=req.rid)
 
     # -- per-token growth (incremental mode) ----------------------------------
     def grow(self, req: Request, total_tokens: int) -> bool:
@@ -297,6 +371,31 @@ class ContinuousScheduler:
         req.slot = -1
         if self.tracker is not None:
             self.tracker.on_retire(req.rid, tokens=len(req.generated))
+
+    def finish(self, req: Request, outcome: str, now: float = 0.0,
+               reason: str = "") -> None:
+        """Terminally remove a request on a *failure* outcome (``failed``
+        / ``expired`` / ``shed`` / ``cancelled``), queued or active:
+        free its slot and pages and close its span with the outcome.
+        ``retire`` remains the normal-completion path; engine-side
+        bookkeeping (outcome counters, lane arrays) is the caller's job."""
+        if req.slot >= 0 and self.active.get(req.slot) is req:
+            del self.active[req.slot]
+            self._free_slots.append(req.slot)
+        else:
+            try:
+                self.waiting.remove(req)
+            except ValueError:
+                pass                    # already off the queue (shed path)
+        if req.rid in self.pool.live_requests():
+            self.pool.free(req.rid)
+        req.slot = -1
+        req.stalled = False
+        req.prefilling = False
+        req.outcome = outcome
+        req.t_done = now if np.isfinite(now) else req.arrival_time
+        if self.tracker is not None:
+            self.tracker.on_finish(req.rid, outcome=outcome, reason=reason)
 
     # -- preemption -----------------------------------------------------------
     def preempt(self, req: Request) -> None:

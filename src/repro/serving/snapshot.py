@@ -1,0 +1,273 @@
+"""Crash-safe serving-engine snapshot/restore.
+
+A snapshot captures everything a mid-trace engine needs to resume
+serving *exactly* where it stopped: KV storage (page arena or dense
+slot caches), per-lane decode state, the scheduler's queue and slot
+map, every live request's prompt/progress, the KV pool's ownership
+state (free-list order included — future allocations must replay
+identically), the prefix-cache trie, metrics, and the sampling PRNG
+key.  Storage goes through :class:`repro.checkpoint.manager.
+CheckpointManager` (atomic temp-dir + rename), so a crash mid-save
+never corrupts the latest snapshot — the same contract the training
+fault-tolerance loop relies on.
+
+Restore targets a FRESH engine built with the same ``ArchConfig`` /
+``EngineConfig`` (validated against the manifest): arrays are loaded
+into the engine's own freshly-initialized pytree structures, request
+objects and pool tables are rebuilt, and request lifecycle spans are
+re-opened in the tracker so the close-exactly-once invariant keeps
+holding across the restart.  Under the greedy (temperature=0) decode
+path a restored engine produces token-for-token identical completions
+for every surviving request — the kill-and-resume test asserts it.
+"""
+
+from __future__ import annotations
+
+from collections import deque
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.serving.kv_pool import BlockTable
+from repro.serving.scheduler import Request
+
+# EngineConfig fields that must match between snapshot and restore —
+# anything that changes array shapes, allocation behaviour, or the
+# token stream itself.
+_SANITY = ("num_slots", "max_len", "block_size", "reserve", "temperature",
+           "top_k", "seed", "prefill_chunk", "prefix_cache", "src_len")
+
+_METRIC_SCALARS = (
+    "decode_steps", "decode_tokens", "decode_s", "prefill_tokens",
+    "prefill_s", "completed", "stalls", "preemptions", "failed", "expired",
+    "shed", "cancelled", "rejected", "completed_in_deadline",
+    "prefix_cache_fallbacks", "kv_read_tokens", "kv_read_tokens_dense",
+    "prefill_kv_write_rows", "prefill_kv_write_rows_padded",
+    "cache_hit_tokens", "cache_hit_pages", "prefill_flops_saved")
+_METRIC_LISTS = ("ttft", "latency", "queue_delay", "slot_occupancy")
+
+_POOL_COUNTERS = ("peak_in_use", "defrag_moves", "shared_pages",
+                  "cow_copies", "poison_fills", "generation_faults",
+                  "sanitize_checks")
+
+
+def _path_key(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "name",
+                    getattr(p, "idx", p)))) for p in path)
+
+
+def _rebuild(template, flat: Dict[str, np.ndarray], prefix: str):
+    """Load leaves for ``template``'s pytree structure from ``flat``
+    (keys ``prefix/<path>`` — the same path scheme CheckpointManager's
+    flatten uses, so save and restore cannot disagree on naming)."""
+    leaves_p, treedef = jax.tree_util.tree_flatten_with_path(template)
+    out = []
+    for path, leaf in leaves_p:
+        key = f"{prefix}/{_path_key(path)}"
+        if key not in flat:
+            raise KeyError(f"snapshot missing array {key!r}")
+        arr = flat[key]
+        if hasattr(leaf, "dtype"):
+            arr = arr.astype(leaf.dtype)
+        out.append(jnp.asarray(arr))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def _req_meta(req: Request) -> Dict:
+    return {
+        "rid": req.rid,
+        "max_new_tokens": int(req.max_new_tokens),
+        "arrival_time": float(req.arrival_time),
+        "eos_id": None if req.eos_id is None else int(req.eos_id),
+        "deadline_s": (None if req.deadline_s is None
+                       else float(req.deadline_s)),
+        "slot": int(req.slot),
+        "stalled": bool(req.stalled),
+        "prefilling": bool(req.prefilling),
+        "prefill_pos": int(req.prefill_pos),
+        "cached_prefix_tokens": int(req.cached_prefix_tokens),
+        "cached_pages": int(req.cached_pages),
+        "preempt_count": int(req.preempt_count),
+        "t_admit": float(req.t_admit),
+        "t_first_token": float(req.t_first_token),
+    }
+
+
+# ---------------------------------------------------------------------------
+# save
+# ---------------------------------------------------------------------------
+
+def save_engine(engine, directory: str, blocking: bool = True) -> int:
+    """Write one restorable snapshot of ``engine`` under ``directory``
+    (step-numbered by the engine's step index).  Returns that step."""
+    sched, pool = engine.sched, engine.pool
+    live: List[Request] = (list(sched.waiting)
+                           + [sched.active[s] for s in sorted(sched.active)])
+
+    tree: Dict = {"last_tok": np.asarray(engine._last_tok),
+                  "rng_key": np.asarray(engine._key)}
+    if engine.kv_layout == "paged":
+        tree["arena"] = engine.arena.leaves
+        tree["state"] = engine._state
+        tree["kv_rows"] = np.asarray(engine._kv_rows)
+    else:
+        tree["cache"] = engine._cache
+    reqs: Dict[str, Dict] = {}
+    for i, r in enumerate(live):
+        entry: Dict = {"prompt": np.asarray(r.prompt, np.int32),
+                       "generated": np.asarray(r.generated, np.int32)}
+        if r.extras:
+            entry["extras"] = {k: np.asarray(v)
+                               for k, v in r.extras.items()}
+        reqs[str(i)] = entry
+    if reqs:
+        tree["req"] = reqs
+
+    metrics = {k: getattr(engine.metrics, k) for k in _METRIC_SCALARS}
+    metrics.update({k: list(getattr(engine.metrics, k))
+                    for k in _METRIC_LISTS})
+    metrics["windows"] = {
+        "ttft": list(engine.metrics._ttft_win),
+        "latency": list(engine.metrics._latency_win),
+        "decode": [list(x) for x in engine.metrics._decode_win],
+    }
+    meta = {
+        "arch": engine.cfg.name,
+        "kv_layout": engine.kv_layout,
+        "engine": {k: getattr(engine.ecfg, k) for k in _SANITY},
+        "vtime": float(engine._vtime),
+        "step_idx": int(engine._step_idx),
+        "waiting": [r.rid for r in sched.waiting],
+        "active": {str(s): sched.active[s].rid for s in sched.active},
+        "free_slots": [int(s) for s in sched._free_slots],
+        "requests": [_req_meta(r) for r in live],
+        "pool": {
+            "free": [int(b) for b in pool._free],
+            "refs": list(pool._refs),
+            "pins": list(pool._pins),
+            "gen": list(pool._gen),
+            "tables": {rid: {"blocks": list(t.blocks),
+                             "num_tokens": int(t.num_tokens)}
+                       for rid, t in pool._tables.items()},
+            "counters": {k: getattr(pool, k) for k in _POOL_COUNTERS},
+        },
+        "metrics": metrics,
+    }
+    if engine.prefix_cache is not None:
+        meta["prefix_cache"] = engine.prefix_cache.export_state()
+
+    mgr = CheckpointManager(directory)
+    step = int(engine._step_idx)
+    mgr.save(step, tree, metadata=meta, blocking=blocking)
+    return step
+
+
+# ---------------------------------------------------------------------------
+# restore
+# ---------------------------------------------------------------------------
+
+def restore_engine(engine, directory: str,
+                   step: Optional[int] = None) -> int:
+    """Load a snapshot into a freshly-constructed engine (same configs,
+    nothing submitted yet).  Returns the restored step index."""
+    if engine.requests or not engine.sched.idle():
+        raise ValueError("restore needs a fresh engine: requests were "
+                         "already submitted to this one")
+    mgr = CheckpointManager(directory)
+    step, flat, meta = mgr.restore_flat(step)
+
+    if meta["arch"] != engine.cfg.name:
+        raise ValueError(f"snapshot is for arch {meta['arch']!r}, engine "
+                         f"runs {engine.cfg.name!r}")
+    if meta["kv_layout"] != engine.kv_layout:
+        raise ValueError(f"snapshot kv_layout {meta['kv_layout']!r} != "
+                         f"engine {engine.kv_layout!r}")
+    for k in _SANITY:
+        want, have = meta["engine"][k], getattr(engine.ecfg, k)
+        if want != have:
+            raise ValueError(f"snapshot EngineConfig.{k}={want!r} != "
+                             f"engine {have!r}")
+
+    # -- arrays ------------------------------------------------------------
+    engine._last_tok = np.asarray(flat["last_tok"], np.int32)
+    engine._key = jnp.asarray(flat["rng_key"])
+    if engine.kv_layout == "paged":
+        engine.arena.leaves = _rebuild(engine.arena.leaves, flat, "arena")
+        engine._state = _rebuild(engine._state, flat, "state")
+        engine._kv_rows = np.asarray(flat["kv_rows"], np.int32)
+    else:
+        engine._cache = _rebuild(engine._cache, flat, "cache")
+
+    # -- pool --------------------------------------------------------------
+    pool, pm = engine.pool, meta["pool"]
+    pool._free = deque(int(b) for b in pm["free"])
+    pool._refs = [int(x) for x in pm["refs"]]
+    pool._pins = [int(x) for x in pm["pins"]]
+    pool._gen = [int(x) for x in pm["gen"]]
+    pool._tables = {
+        rid: BlockTable(rid, blocks=[int(b) for b in t["blocks"]],
+                        num_tokens=int(t["num_tokens"]))
+        for rid, t in pm["tables"].items()}
+    for k, v in pm["counters"].items():
+        setattr(pool, k, v)
+
+    # -- requests + scheduler ---------------------------------------------
+    by_rid: Dict[str, Request] = {}
+    for i, m in enumerate(meta["requests"]):
+        extras_keys = [k for k in flat if k.startswith(f"req/{i}/extras/")]
+        extras = ({k.rsplit("/", 1)[1]: flat[k] for k in extras_keys}
+                  or None)
+        req = Request(rid=m["rid"],
+                      prompt=np.asarray(flat[f"req/{i}/prompt"], np.int32),
+                      max_new_tokens=m["max_new_tokens"],
+                      arrival_time=m["arrival_time"], eos_id=m["eos_id"],
+                      extras=extras, deadline_s=m["deadline_s"])
+        req.generated = [int(x) for x in flat[f"req/{i}/generated"]]
+        req.slot = m["slot"]
+        req.stalled = m["stalled"]
+        req.prefilling = m["prefilling"]
+        req.prefill_pos = m["prefill_pos"]
+        req.cached_prefix_tokens = m["cached_prefix_tokens"]
+        req.cached_pages = m["cached_pages"]
+        req.preempt_count = m["preempt_count"]
+        req.t_admit = m["t_admit"]
+        req.t_first_token = m["t_first_token"]
+        by_rid[req.rid] = req
+    sched = engine.sched
+    sched.waiting = deque(by_rid[rid] for rid in meta["waiting"])
+    sched.active = {int(s): by_rid[rid]
+                    for s, rid in meta["active"].items()}
+    sched._free_slots = [int(s) for s in meta["free_slots"]]
+    engine.requests = dict(by_rid)
+    # re-open lifecycle spans so close-exactly-once holds across restarts
+    for rid in meta["waiting"]:
+        r = by_rid[rid]
+        engine.req_spans.on_submit(rid, prompt_len=r.prompt_len,
+                                   max_new=r.max_new_tokens)
+    for s, rid in sorted(meta["active"].items()):
+        r = by_rid[rid]
+        engine.req_spans.on_submit(rid, prompt_len=r.prompt_len,
+                                   max_new=r.max_new_tokens)
+        engine.req_spans.on_admit(rid, slot=r.slot)
+
+    # -- prefix cache ------------------------------------------------------
+    if engine.prefix_cache is not None and "prefix_cache" in meta:
+        engine.prefix_cache.restore_state(meta["prefix_cache"])
+
+    # -- metrics -----------------------------------------------------------
+    mm = meta["metrics"]
+    for k in _METRIC_SCALARS:
+        setattr(engine.metrics, k, mm[k])
+    for k in _METRIC_LISTS:
+        setattr(engine.metrics, k, list(mm[k]))
+    engine.metrics._ttft_win.extend(mm["windows"]["ttft"])
+    engine.metrics._latency_win.extend(mm["windows"]["latency"])
+    engine.metrics._decode_win.extend(
+        tuple(x) for x in mm["windows"]["decode"])
+
+    engine._vtime = float(meta["vtime"])
+    engine._step_idx = int(meta["step_idx"])
+    return step

@@ -1,5 +1,7 @@
 """Fault-tolerance: injected failures leave the loss trajectory intact;
-stragglers are detected; restarts are bounded."""
+stragglers are detected; restarts are bounded.  Fail injection schedules
+through ``repro.runtime.failplan`` — the same utility the serving chaos
+harness uses, so the two fault models cannot drift."""
 
 import time
 
@@ -9,6 +11,7 @@ import numpy as np
 import pytest
 
 from repro.runtime.driver import DriverConfig, StepEvent, TrainDriver
+from repro.runtime.failplan import FaultSchedule, make_fail_injector
 
 
 def _toy_problem():
@@ -29,12 +32,9 @@ def _toy_problem():
 
 def _run(tmp_path, fail_steps=(), num_steps=20, name="a"):
     train_step, make_batch = _toy_problem()
-    fired = set()
-
-    def injector(step):
-        if step in fail_steps and step not in fired:
-            fired.add(step)
-            raise RuntimeError(f"simulated node failure at {step}")
+    injector = make_fail_injector(
+        FaultSchedule(steps=fail_steps),
+        message="simulated node failure")
 
     driver = TrainDriver(
         DriverConfig(checkpoint_dir=str(tmp_path / name),
@@ -60,9 +60,9 @@ def test_failure_recovery_preserves_trajectory(tmp_path):
 
 def test_too_many_failures_raises(tmp_path):
     train_step, make_batch = _toy_problem()
-
-    def always_fail(step):
-        raise RuntimeError("dead node")
+    # probability 1.0 with once=False: every step fails, forever
+    always_fail = make_fail_injector(
+        FaultSchedule(probability=1.0, once=False), message="dead node")
 
     driver = TrainDriver(
         DriverConfig(checkpoint_dir=str(tmp_path / "x"), max_restarts=3),

@@ -1,0 +1,296 @@
+"""Fault-tolerant serving acceptance tests.
+
+- FaultSchedule: seed-determinism, replay stability (``once``), victim
+  picks in range
+- deadlines: queued requests expire past their deadline; admission sheds
+  a request the rolling-TTFT estimate says cannot meet its deadline
+- cancellation: queued and active requests leave with ``cancelled`` and
+  their pages return to the pool
+- run() survives invalid requests (recorded ``rejected``, serving
+  continues)
+- chaos pool-OOM: an injected, attributed PoolError fails only its
+  victim; the engine drains cleanly
+- chaos poison + sanitizer interplay: the poison scan traps the page,
+  attributes it to the right lane, and every surviving request's greedy
+  tokens match the fault-free run
+- preemption budget: a request preempted past its budget fails instead
+  of livelocking
+- same chaos seed => identical fault sequence and outcomes
+"""
+
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_arch
+from repro.runtime.failplan import FaultSchedule
+from repro.serving import (ChaosConfig, EngineConfig, Request,
+                           ServingEngine)
+
+ARCH = "llama3.2-1b"
+
+
+def _cfg():
+    return get_arch(ARCH).reduced()
+
+
+def _prompts(cfg, n, prompt_len, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab_size, prompt_len).astype(np.int32)
+            for _ in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# FaultSchedule
+# ---------------------------------------------------------------------------
+
+def test_fault_schedule_deterministic_and_replay_stable():
+    a = FaultSchedule(seed=7, probability=0.5)
+    b = FaultSchedule(seed=7, probability=0.5)
+    assert [a.peek(s) for s in range(64)] == [b.peek(s) for s in range(64)]
+    assert any(a.peek(s) for s in range(64))
+    assert not all(a.peek(s) for s in range(64))
+    # a different seed reshuffles the schedule
+    c = FaultSchedule(seed=8, probability=0.5)
+    assert [a.peek(s) for s in range(64)] != [c.peek(s) for s in range(64)]
+    # once: a fired step never re-fires (replay after restore)
+    step = next(s for s in range(64) if a.peek(s))
+    assert a.fires(step) and not a.fires(step)
+    # picks are deterministic and in range
+    assert all(0 <= a.pick(s, 5) < 5 for s in range(20))
+    assert [a.pick(s, 5) for s in range(20)] == \
+        [b.pick(s, 5) for s in range(20)]
+
+
+# ---------------------------------------------------------------------------
+# deadlines: expiry + shedding
+# ---------------------------------------------------------------------------
+
+def test_queued_request_expires_past_deadline():
+    cfg = _cfg()
+    eng = ServingEngine(cfg, EngineConfig(num_slots=1, max_len=40,
+                                          temperature=0.0))
+    p = _prompts(cfg, 2, 8)
+    slow = Request("slow", p[0], 12)
+    doomed = Request("doomed", p[1], 4, deadline_s=2.0)   # 2 virtual steps
+    res = eng.run([slow, doomed])
+    # the single slot serves `slow` for 12+ steps; `doomed` can never
+    # admit before its 2-step deadline passes in the queue
+    assert slow.outcome == "done" and len(res["slow"]) == 12
+    assert doomed.outcome == "expired" and len(res["doomed"]) == 0
+    s = eng.summary()
+    assert s["requests_expired"] == 1 and s["completed"] == 1
+    assert eng.pool.num_free == eng.pool.num_blocks
+
+
+def test_admission_sheds_on_ttft_estimate():
+    cfg = _cfg()
+    eng = ServingEngine(cfg, EngineConfig(num_slots=1, max_len=40,
+                                          temperature=0.0))
+    # pre-seed the rolling-TTFT window: the live estimate says ~10 steps
+    # to first token, so a 3-step deadline is hopeless at admission
+    for _ in range(4):
+        eng.metrics._ttft_win.append(10.0)
+    hopeless = Request("hopeless", _prompts(cfg, 1, 8)[0], 4, deadline_s=3.0)
+    res = eng.run([hopeless])
+    assert hopeless.outcome == "shed" and len(res["hopeless"]) == 0
+    assert eng.summary()["requests_shed"] == 1
+    assert eng.pool.num_free == eng.pool.num_blocks
+
+
+def test_completed_in_deadline_goodput_twin():
+    cfg = _cfg()
+    eng = ServingEngine(cfg, EngineConfig(num_slots=2, max_len=40,
+                                          temperature=0.0,
+                                          max_prefills_per_step=2))
+    p = _prompts(cfg, 2, 8)
+    relaxed = Request("relaxed", p[0], 6, deadline_s=1000.0)
+    tight = Request("tight", p[1], 6, deadline_s=0.5)
+    eng.run([relaxed, tight])
+    # both complete (tight was admitted immediately so it was never
+    # expired in the queue), but only `relaxed` met its deadline
+    s = eng.summary()
+    assert s["completed"] == 2 and s["completed_in_deadline"] == 1
+
+
+# ---------------------------------------------------------------------------
+# cancellation
+# ---------------------------------------------------------------------------
+
+def test_cancel_queued_and_active():
+    cfg = _cfg()
+    eng = ServingEngine(cfg, EngineConfig(num_slots=1, max_len=40,
+                                          temperature=0.0))
+    p = _prompts(cfg, 3, 8)
+    active = Request("active", p[0], 12)
+    queued = Request("queued", p[1], 4)
+    other = Request("other", p[2], 4)
+    for r in (active, queued, other):
+        eng.submit(r)
+    assert eng.step()                        # `active` admitted
+    active.cancel()
+    queued.cancel()
+    while eng.step():
+        pass
+    assert active.outcome == "cancelled"
+    assert queued.outcome == "cancelled"
+    assert other.outcome == "done" and len(other.generated) == 4
+    assert eng.summary()["requests_cancelled"] == 2
+    assert eng.pool.num_free == eng.pool.num_blocks
+
+
+# ---------------------------------------------------------------------------
+# run() survives invalid requests
+# ---------------------------------------------------------------------------
+
+def test_run_survives_rejected_requests():
+    cfg = _cfg()
+    eng = ServingEngine(cfg, EngineConfig(num_slots=2, max_len=24,
+                                          temperature=0.0))
+    good = Request("good", _prompts(cfg, 1, 8)[0], 4)
+    empty = Request("empty", np.zeros((0,), np.int32), 4)
+    huge = Request("huge", _prompts(cfg, 1, 20)[0], 20)   # > max_len
+    res = eng.run([empty, good, huge])
+    assert good.outcome == "done" and len(res["good"]) == 4
+    assert empty.outcome == "rejected" and huge.outcome == "rejected"
+    s = eng.summary()
+    assert s["requests_rejected"] == 2 and s["completed"] == 1
+
+
+# ---------------------------------------------------------------------------
+# chaos: pool OOM containment
+# ---------------------------------------------------------------------------
+
+def test_chaos_pool_oom_contained():
+    cfg = _cfg()
+    eng = ServingEngine(cfg, EngineConfig(
+        num_slots=2, max_len=24, temperature=0.0, max_prefills_per_step=2,
+        chaos=ChaosConfig(seed=3, pool_oom_p=1.0)))
+    reqs = [Request(f"r{i}", p, 4)
+            for i, p in enumerate(_prompts(cfg, 3, 8))]
+    eng.run(reqs)                            # must not raise
+    # pool_oom fires every step, so every request is eventually the victim
+    assert all(r.outcome == "failed" for r in reqs)
+    s = eng.summary()
+    assert s["faults_injected"] >= 3
+    assert s["chaos_pool_oom_injected"] >= 3
+    assert s["faults_contained"] >= 3
+    assert s["requests_failed"] == 3
+    assert eng.pool.num_free == eng.pool.num_blocks
+
+
+# ---------------------------------------------------------------------------
+# chaos: poison + sanitizer interplay (satellite: attribution + parity)
+# ---------------------------------------------------------------------------
+
+def _chaos_engine(cfg, chaos=None):
+    return ServingEngine(cfg, EngineConfig(
+        num_slots=2, max_len=31, block_size=8, temperature=0.0,
+        kv_layout="paged", prefill_chunk=8, sanitize=True,
+        max_prefills_per_step=2, chaos=chaos))
+
+
+def test_chaos_poison_trapped_attributed_and_parity():
+    cfg = _cfg()
+    prompts = _prompts(cfg, 4, 12, seed=5)
+    baseline = _chaos_engine(cfg).run(
+        [Request(f"r{i}", p, 6) for i, p in enumerate(prompts)])
+
+    reqs = [Request(f"r{i}", p, 6) for i, p in enumerate(prompts)]
+    eng = _chaos_engine(cfg, chaos=ChaosConfig(seed=4, poison_p=0.2))
+    res = eng.run(reqs)                      # must not raise
+    s = eng.summary()
+    assert s["chaos_poison_injected"] >= 1
+    assert s["kv_poison_hits"] >= 1          # the sanitizer was the oracle
+    assert s["faults_contained"] >= 1
+    failed = [r for r in reqs if r.outcome == "failed"]
+    done = [r for r in reqs if r.outcome == "done"]
+    assert failed and done
+    # a poisoned page is attributed to exactly its lane: every surviving
+    # request's greedy tokens match the fault-free run bit-for-bit
+    for r in done:
+        np.testing.assert_array_equal(res[r.rid], baseline[r.rid])
+    assert eng.pool.num_free == eng.pool.num_blocks
+
+
+def test_chaos_poison_requires_sanitize():
+    cfg = _cfg()
+    with pytest.raises(ValueError, match="sanitize"):
+        ServingEngine(cfg, EngineConfig(
+            kv_layout="paged", prefill_chunk=8,
+            chaos=ChaosConfig(poison_p=0.5)))
+
+
+# ---------------------------------------------------------------------------
+# chaos: stalls + forced preemption keep making progress
+# ---------------------------------------------------------------------------
+
+def test_chaos_stall_and_preempt_still_drain():
+    cfg = _cfg()
+    eng = ServingEngine(cfg, EngineConfig(
+        num_slots=2, max_len=31, block_size=8, temperature=0.0,
+        kv_layout="paged", prefill_chunk=4, max_prefills_per_step=2,
+        chaos=ChaosConfig(seed=2, stall_p=0.4, stall_steps=2,
+                          preempt_p=0.4)))
+    reqs = [Request(f"r{i}", p, 5)
+            for i, p in enumerate(_prompts(cfg, 3, 12, seed=9))]
+    res = eng.run(reqs)
+    s = eng.summary()
+    assert s["faults_injected"] >= 1
+    # stalls and preemptions delay but never corrupt: every request that
+    # finished did so with its full token budget
+    for r in reqs:
+        assert r.outcome in ("done", "failed")
+        if r.outcome == "done":
+            assert len(res[r.rid]) == 5
+    assert eng.pool.num_free == eng.pool.num_blocks
+
+
+# ---------------------------------------------------------------------------
+# preemption budget (livelock guard)
+# ---------------------------------------------------------------------------
+
+def test_preempt_budget_exhaustion_fails_request():
+    cfg = _cfg()
+    eng = ServingEngine(cfg, EngineConfig(num_slots=2, max_len=40,
+                                          temperature=0.0,
+                                          preempt_budget=1))
+    victim = Request("victim", _prompts(cfg, 1, 8)[0], 8)
+    eng.submit(victim)
+    assert eng.step()                        # admitted + prefilled
+    assert victim.slot >= 0
+    eng._preempt(victim)                     # 1st: within budget, requeued
+    assert victim.outcome == "" and victim.slot == -1
+    assert eng.step()                        # readmitted
+    eng._preempt(victim)                     # 2nd: budget exhausted
+    assert victim.outcome == "failed"
+    s = eng.summary()
+    assert s["preempt_budget_exhausted"] == 1
+    assert s["requests_failed"] == 1
+    assert not eng.step()                    # nothing left to serve
+    assert eng.pool.num_free == eng.pool.num_blocks
+
+
+# ---------------------------------------------------------------------------
+# chaos determinism
+# ---------------------------------------------------------------------------
+
+def test_chaos_same_seed_same_faults_and_outcomes():
+    cfg = _cfg()
+
+    def run_once():
+        reqs = [Request(f"r{i}", p, 5)
+                for i, p in enumerate(_prompts(cfg, 4, 12, seed=5))]
+        eng = _chaos_engine(cfg, chaos=ChaosConfig(
+            seed=6, pool_oom_p=0.15, poison_p=0.15, stall_p=0.1,
+            preempt_p=0.1))
+        res = eng.run(reqs)
+        return ({r.rid: r.outcome for r in reqs},
+                {k: v for k, v in eng.summary().items()
+                 if k.startswith("chaos_")}, res)
+
+    out_a, chaos_a, res_a = run_once()
+    out_b, chaos_b, res_b = run_once()
+    assert out_a == out_b
+    assert chaos_a == chaos_b
+    for rid in res_a:
+        np.testing.assert_array_equal(res_a[rid], res_b[rid])

@@ -19,7 +19,7 @@ import json
 import numpy as np
 import pytest
 
-from repro.obs import (CATEGORIES, RequestTracker, StepTimeline, TraceError,
+from repro.obs import (REQUIRED_CATEGORIES, RequestTracker, StepTimeline, TraceError,
                        TraceRecorder, to_chrome_trace, validate_trace,
                        write_chrome_trace, write_jsonl)
 
@@ -292,7 +292,7 @@ def test_traced_engine_run_exports_all_categories(tmp_path):
     p = tmp_path / "trace.json"
     jsonl = eng.export_trace(str(p))
     doc = json.loads(p.read_text())
-    assert validate_trace(doc, require_categories=CATEGORIES) == []
+    assert validate_trace(doc, require_categories=REQUIRED_CATEGORIES) == []
     assert doc["otherData"]["counters"]["jit_compiles"] >= 2
     assert doc["otherData"]["site_timings"]            # scope wall joined
     assert (tmp_path / "trace.jsonl").exists() and jsonl.endswith(".jsonl")

@@ -10,7 +10,8 @@
   drained pool returns the totals the engine folds into ``summary()``
 - engine: a clean sanitized run reports zero poison hits / generation
   faults / leaks, and an injected UAF (poisoning a page a live decode
-  lane still reads) is trapped at the very next step
+  lane still reads) is trapped at the very next step, attributed to the
+  victim lane, and contained — the victim fails, the engine keeps serving
 """
 
 import numpy as np
@@ -132,7 +133,8 @@ def test_engine_sanitized_run_is_clean():
 
 def test_engine_traps_injected_uaf():
     eng, cfg = _engine()
-    for r in _requests(cfg, 2, 12, 6):
+    reqs = _requests(cfg, 2, 12, 6)
+    for r in reqs:
         eng.submit(r)
     # step until a lane is decoding (prefill done, >= 1 token committed)
     for _ in range(8):
@@ -145,8 +147,18 @@ def test_engine_traps_injected_uaf():
     victim = live[0]
     # inject the UAF: poison a page the lane's table still names, as if
     # it had been freed while referenced — the rows are inside kv_len,
-    # so the very next decode streams NaN into this lane's logits
+    # so the very next decode streams NaN into this lane's logits.  The
+    # sanitizer traps it AND attributes it to the lane, so the engine's
+    # step error boundary fails only the victim and keeps serving.
     eng.arena.poison_page(eng.pool.table(victim.rid).blocks[0])
-    with pytest.raises(SanitizerError, match="poisoned KV page"):
-        eng.step()
+    assert eng.step()                        # contained, not crashed
+    assert victim.outcome == "failed"
+    assert victim.rid not in eng.pool.live_requests()
     assert int(eng.obs.counters.get("kv_poison_hits", 0)) >= 1
+    assert int(eng.obs.counters.get("faults_contained", 0)) >= 1
+    # the surviving request still completes its full budget
+    while eng.step():
+        pass
+    other = [r for r in reqs if r is not victim][0]
+    assert other.outcome == "done"
+    assert len(other.generated) == 6
