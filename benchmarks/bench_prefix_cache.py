@@ -19,10 +19,13 @@ engines and reports, per variant:
     (page sharing is bitwise — same rows, same physical arena reads)
 
 The cascade variant (``shared_prefix_decode``) additionally batches
-decode attention over the group's common physical prefix and merges
-per-lane suffix state by online softmax.  That reassociates the softmax
-reduction, so its tokens are reported as a match *fraction* rather than
-asserted — exact parity is only claimed for the refcounting path.
+decode attention over the group's common physical prefix.  The XLA
+reference rebuilds each lane's combined table and runs ONE masked
+softmax, so cascade greedy tokens are bitwise the plain tokens and the
+bench ASSERTS per-request equality wherever the resolved paged impl is
+``xla`` (everywhere off-TPU).  Only the Pallas kernel keeps the
+two-phase online-softmax merge — streaming shared pages once per group
+is its point — so on TPU the match is reported as a fraction instead.
 
 ``--smoke`` is the CI gate: hits > 0, exact greedy parity cache-on vs
 cache-off, KV-write reduction > 1.4x on the tiny trace, and a bounded
@@ -141,8 +144,19 @@ def run(n: int = 16, shared_frac: float = 0.75, prefix_len: int = 64,
     off = {k: v for k, v in outputs["cache_off"].items()}
     for rid, toks in off.items():
         np.testing.assert_array_equal(outputs["cache_on"][rid], toks)
-    match = np.mean([np.array_equal(outputs["cache_on_cascade"][r], t)
-                     for r, t in off.items()])
+    from repro.kernels.ops import default_paged_impl
+    if default_paged_impl() == "xla":
+        # single-softmax XLA cascade: bitwise parity is a hard claim
+        for rid, toks in off.items():
+            np.testing.assert_array_equal(outputs["cache_on_cascade"][rid],
+                                          toks)
+        match = 1.0
+        cascade_note = "single masked softmax; asserted bitwise"
+    else:
+        # Pallas keeps the two-phase online-softmax merge (reassociated)
+        match = np.mean([np.array_equal(outputs["cache_on_cascade"][r], t)
+                         for r, t in off.items()])
+        cascade_note = "pallas two-phase merge; reported, not asserted"
     rows += [
         {"name": "bench_prefix_cache.prefill_kv_write_reduction_x",
          "value": round(reduction, 3),
@@ -150,8 +164,7 @@ def run(n: int = 16, shared_frac: float = 0.75, prefix_len: int = 64,
         {"name": "bench_prefix_cache.greedy_parity", "value": 1,
          "derived": "cache_on tokens == cache_off tokens, exactly"},
         {"name": "bench_prefix_cache.cascade_greedy_match_frac",
-         "value": round(float(match), 3),
-         "derived": "softmax reassociation; reported, not asserted"},
+         "value": round(float(match), 3), "derived": cascade_note},
     ]
     return emit(rows, "bench_prefix_cache",
                 config={"n": n, "shared_frac": shared_frac,

@@ -62,7 +62,7 @@ def main() -> None:
                             bench_chunked_prefill,
                             bench_gemm_dispatch, bench_kernels,
                             bench_paged_decode, bench_prefix_cache,
-                            bench_sara_tpu,
+                            bench_sara_tpu, bench_spec_decode,
                             bench_serving, fig3_motivation, fig7_classifiers,
                             fig8_adaptnet, fig9_adaptnetx, fig11_workloads,
                             fig12_histograms, fig13_ppa, fig14_sigma,
@@ -84,6 +84,7 @@ def main() -> None:
     bench_paged_decode.run()
     bench_chunked_prefill.run()
     bench_prefix_cache.run()
+    bench_spec_decode.run()
     bench_chaos_serving.run()
     bench_adaptnet_serving.run()
     aggregate()

@@ -1,9 +1,15 @@
 #!/usr/bin/env bash
 # CI gate: tier-1 tests + fast serving/dispatch/paged/chunked/adaptnet
 # smokes + docs-consistency check.
-#   bash scripts/check.sh
+#   bash scripts/check.sh           # tier-1 (-m "not slow") + smokes
+#   bash scripts/check.sh --full    # everything, slow markers included
 set -euo pipefail
 cd "$(dirname "$0")/.."
+
+PYTEST_MARK=(-m "not slow")
+if [[ "${1:-}" == "--full" ]]; then
+    PYTEST_MARK=()
+fi
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
@@ -14,7 +20,7 @@ echo "== static analysis (saralint contract checks, fail on any finding) =="
 python -m repro.analysis src/repro
 
 echo "== tier-1 tests =="
-python -m pytest -x -q
+python -m pytest -x -q "${PYTEST_MARK[@]}"
 
 echo "== serving smoke =="
 python -m repro.launch.serve --arch llama3.2-1b --smoke
@@ -44,6 +50,10 @@ python -m repro.launch.serve --arch llama3.2-1b --smoke --prefix-cache \
     --trace-out "$PREFIX_SMOKE"
 python scripts/check_trace.py --require-event cache_hit "$PREFIX_SMOKE"
 python -m benchmarks.bench_prefix_cache --smoke
+
+echo "== spec-decode smoke (speculative == plain greedy, drafts accepted) =="
+python -m repro.launch.serve --arch llama3.2-1b --smoke --spec-draft self
+python -m benchmarks.bench_spec_decode --smoke
 
 echo "== chaos smoke (faults injected + contained, survivors greedy-equal) =="
 CHAOS_SMOKE="$(mktemp -d)/trace.json"

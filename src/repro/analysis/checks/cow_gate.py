@@ -33,6 +33,9 @@ WRITERS = {
     "paged_prefill_write",      # model-level bucketed KV scatter
     "copy_page",                # raw arena page copy
     "apply_moves",              # raw arena defrag gather
+    "_spec_verify",             # engine jit wrapper: spec-decode verify chunk
+    "_draft_prefill",           # spec_decode jit wrapper: draft catch-up
+    "_draft_loop",              # spec_decode jit wrapper: fused draft rounds
 }
 
 #: calls that establish copy-on-write protection for the writes that follow

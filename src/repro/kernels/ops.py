@@ -155,10 +155,13 @@ def shared_paged_attention(q, k_arena, v_arena, unique_tables, unique_lens,
     """Cascade decode for shared prefixes: one softmax pass over a lane's
     shared-prefix rows (streamed ONCE for every sharing lane via
     ``prefix_pages``) plus one over its unique suffix rows (per-lane
-    ``unique_tables``), merged by online-softmax state.  Mathematically
-    equal to :func:`paged_attention` over the concatenated page lists, but
-    the merge reassociates the softmax so the result is not
-    bitwise-identical to the single-pass kernel.
+    ``unique_tables``).  Mathematically equal to :func:`paged_attention`
+    over the concatenated page lists.  The XLA reference rebuilds each
+    lane's combined table and runs ONE masked softmax, so it is BITWISE
+    equal to the plain path (greedy cascade parity is asserted, not
+    approximate); the Pallas path keeps the two-phase online-softmax
+    merge — streaming the shared pages once per group is its point — and
+    matches numerically.
 
     q: (S, H, hd) one query token per lane; prefix_pages: (P,) int32 pages
     every sharing lane's table starts with (tail-pad with the last id);

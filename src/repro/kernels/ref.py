@@ -250,18 +250,39 @@ def shared_paged_attention_ref(q, k_arena, v_arena, unique_tables,
                                unique_lens, prefix_pages, prefix_lens,
                                *, scale: float | None = None,
                                logit_cap: float = 0.0) -> jnp.ndarray:
-    """Cascade decode oracle: shared-prefix phase + per-lane unique phase,
-    merged by online-softmax state.  Mathematically equal to
-    :func:`paged_attention_ref` over the concatenated page lists (the two
-    phases partition each lane's rows).  Returns (S, H, hd_v)."""
-    o_p, m_p, l_p = shared_prefix_attention_ref(
-        q, k_arena, v_arena, prefix_pages, prefix_lens, scale=scale,
-        logit_cap=logit_cap)
-    o_u, m_u, l_u = paged_attention_lse_ref(
-        q, k_arena, v_arena, unique_tables, unique_lens, scale=scale,
-        logit_cap=logit_cap)
-    o, _, _ = merge_softmax_states(o_p, m_p, l_p, o_u, m_u, l_u)
-    return o.astype(q.dtype)
+    """Cascade decode oracle — BITWISE equal to :func:`paged_attention_ref`
+    over the concatenated page lists.
+
+    Instead of running the prefix and unique phases separately and merging
+    online-softmax states (which reassociates the reduction, so greedy
+    parity with the plain path held only numerically), each lane's combined
+    table is rebuilt gap-free — its prefix pages followed immediately by
+    its unique pages, exactly the order the lane's full block table has
+    them in — and ONE masked softmax runs over it via
+    :func:`paged_attention_ref`.  The only difference from the plain path
+    is trailing table padding, and padded columns are exact no-ops: their
+    ``-1e30`` scores underflow to 0.0 after ``exp``, leaving every partial
+    sum bit-identical.  The two-phase + merge structure survives in the
+    Pallas kernel path (``ops.shared_paged_attention``), where streaming
+    the shared pages once per group is the point.  Returns (S, H, hd_v).
+    """
+    S = q.shape[0]
+    bs = k_arena.shape[1]
+    pw = prefix_pages.shape[0]
+    uw = unique_tables.shape[1]
+    # pages each lane takes from the shared run (prefix_lens is a whole
+    # number of fully-written pages by construction; 0 = not in the group)
+    npref = prefix_lens // bs                               # (S,)
+    j = jnp.arange(pw + uw)                                 # (W,)
+    in_prefix = j[None, :] < npref[:, None]                 # (S, W)
+    pref_cols = jnp.broadcast_to(prefix_pages[jnp.clip(j, 0, pw - 1)][None],
+                                 (S, pw + uw))
+    uniq_idx = jnp.clip(j[None, :] - npref[:, None], 0, uw - 1)
+    uniq_cols = jnp.take_along_axis(unique_tables, uniq_idx, axis=1)
+    combined = jnp.where(in_prefix, pref_cols, uniq_cols)   # (S, W) int32
+    return paged_attention_ref(q, k_arena, v_arena, combined,
+                               prefix_lens + unique_lens, scale=scale,
+                               logit_cap=logit_cap)
 
 
 def linear_attn_ref(r, k, v, logw, u) -> jnp.ndarray:

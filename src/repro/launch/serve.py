@@ -111,7 +111,8 @@ def serve_continuous(arch: str = "llama3.2-1b", preset: str = "reduced",
                      shared_prefix_len: int = 0, trace_out: str = None,
                      sanitize: bool = False, chaos=None,
                      deadline_s: float = None, snapshot_dir: str = None,
-                     snapshot_every: int = 0,
+                     snapshot_every: int = 0, spec_draft: str = None,
+                     spec_k: int = 4,
                      override_cfg=None, log: bool = True):
     """Serve a request set through the continuous-batching engine.
 
@@ -149,6 +150,13 @@ def serve_continuous(arch: str = "llama3.2-1b", preset: str = "reduced",
     requests the rolling-TTFT estimate says cannot make it.
     ``snapshot_dir`` / ``snapshot_every`` enable crash-safe periodic
     engine snapshots (``ServingEngine.snapshot``/``restore``).
+    ``spec_draft`` turns on speculative decoding (requires
+    ``prefill_chunk`` and greedy sampling, ``temperature=0``): "self"
+    for self-speculation or a registry arch name for a separate draft
+    model; the draft proposes up to ``spec_k`` tokens per lane per step
+    and one target verify pass commits the longest agreeing prefix plus
+    a corrected token — outputs stay bitwise-identical to plain greedy
+    decode.
     """
     from repro.configs.registry import get_arch
     from repro.serving import EngineConfig, Request, ServingEngine
@@ -167,7 +175,8 @@ def serve_continuous(arch: str = "llama3.2-1b", preset: str = "reduced",
         shared_prefix_decode=shared_prefix_decode,
         defrag_threshold=defrag_threshold, trace=trace_out is not None,
         sanitize=sanitize, chaos=chaos, snapshot_dir=snapshot_dir,
-        snapshot_every=snapshot_every))
+        snapshot_every=snapshot_every, spec_draft=spec_draft,
+        spec_k=spec_k))
     # ``shared_prefix_len`` > 0 makes every prompt open with the same token
     # run (a system-prompt-style workload) so the cross-request prefix cache
     # has something to hit; the tail stays per-request random.
@@ -271,6 +280,14 @@ def main():
     ap.add_argument("--snapshot-every", type=int, default=0, metavar="N",
                     help=">0: auto-snapshot every N engine steps "
                          "(requires --snapshot-dir)")
+    ap.add_argument("--spec-draft", default=None, metavar="DRAFT",
+                    help="speculative decoding: 'self' or a registry "
+                         "arch name for the draft model (requires "
+                         "--prefill-chunk and --temperature 0; outputs "
+                         "stay bitwise-identical to plain greedy decode)")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="draft tokens proposed per lane per spec step "
+                         "(verified by one K+1-row target pass)")
     ap.add_argument("--smoke", action="store_true",
                     help="fast CI smoke: tiny trace, assert completion")
     a = ap.parse_args()
@@ -344,6 +361,41 @@ def main():
               f"{stats['prefix_cache_hit_rate']:.2f}, reused_pages="
               f"{stats['prefix_cache_reused_pages']}, greedy parity)")
         return
+    if a.smoke and a.spec_draft:
+        # Spec-decode smoke: the same greedy workload served twice —
+        # plain, then speculatively — must agree token-for-token (every
+        # committed token is a target verify argmax) while the spec run
+        # actually accepts draft tokens and commits more than one token
+        # per verify step.
+        common = dict(
+            arch=a.arch, num_requests=4, num_slots=2, prompt_len=12,
+            gen=6, temperature=0.0, execute=a.execute,
+            dispatcher=a.dispatcher, adaptnet_ckpt=a.adaptnet_ckpt,
+            kv_layout="paged", prefill_chunk=a.prefill_chunk or 8,
+            sanitize=a.sanitize, log=False)
+        base, _ = serve_continuous(**common)
+        outputs, engine = serve_continuous(
+            **common, spec_draft=a.spec_draft, spec_k=a.spec_k,
+            trace_out=a.trace_out)
+        assert all(len(v) == 6 for v in outputs.values()), outputs
+        assert set(outputs) == set(base)
+        for rid in base:
+            assert np.array_equal(outputs[rid], base[rid]), \
+                (rid, outputs[rid], base[rid])
+        s = engine.summary()
+        assert s["spec_steps"] > 0, s
+        assert s["spec_accepted_tokens"] >= 1, s
+        if a.spec_draft == "self":
+            assert s["spec_accepted_per_step"] > 1.0, s
+        assert engine.spec.live_pages() == 0
+        engine.pool.check()
+        assert engine.pool.num_free == engine.pool.num_blocks
+        print(f"spec-decode smoke OK (draft={a.spec_draft}, k={a.spec_k}: "
+              f"greedy parity, {int(s['spec_accepted_tokens'])} accepted "
+              f"draft tokens, "
+              f"{s['spec_accepted_per_step']:.2f} committed/step over "
+              f"{int(s['spec_steps'])} verify steps)")
+        return
     if a.smoke:
         outputs, engine = serve_continuous(
             arch=a.arch, num_requests=3, num_slots=2, prompt_len=12, gen=6,
@@ -398,7 +450,8 @@ def main():
                      trace_out=a.trace_out, sanitize=a.sanitize,
                      chaos=chaos, deadline_s=a.deadline,
                      snapshot_dir=a.snapshot_dir,
-                     snapshot_every=a.snapshot_every)
+                     snapshot_every=a.snapshot_every,
+                     spec_draft=a.spec_draft, spec_k=a.spec_k)
 
 
 if __name__ == "__main__":

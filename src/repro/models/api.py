@@ -68,6 +68,11 @@ class Model:
         return serving.paged_prefill_step(params, tokens, self.cfg, arena,
                                           block_tables, kv_lens, chunk_lens)
 
+    def paged_verify_step(self, params, tokens, arena, block_tables,
+                          kv_lens, chunk_lens):
+        return serving.paged_verify_step(params, tokens, self.cfg, arena,
+                                         block_tables, kv_lens, chunk_lens)
+
     def paged_decode_step(self, params, tokens, state, arena, block_tables,
                           kv_lens, write_mask):
         return serving.paged_decode_step(params, tokens, self.cfg, state,

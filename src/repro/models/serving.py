@@ -315,6 +315,45 @@ def paged_prefill_step(params: Params, tokens: jnp.ndarray, cfg: ArchConfig,
     return _lm_head(params, h_last, cfg), new_arena
 
 
+def paged_verify_step(params: Params, tokens: jnp.ndarray, cfg: ArchConfig,
+                      arena: Dict[str, Any], block_tables: jnp.ndarray,
+                      kv_lens: jnp.ndarray, chunk_lens: jnp.ndarray
+                      ) -> Tuple[jnp.ndarray, Dict[str, Any]]:
+    """Speculative-decode verifier: the ragged chunked-prefill pass with
+    logits at EVERY chunk row.
+
+    Identical to :func:`paged_prefill_step` — tokens (S, C) carry each
+    lane's pending token followed by its draft proposals, KV rows land in
+    the lane's pages before attention, row r attends causally through the
+    block table — except the LM head runs over all C rows, because row i's
+    logits are what accepts or corrects draft token i+1.  Returns
+    ((S, C, V) logits, new arena); rows past ``chunk_lens`` are garbage
+    the caller ignores (their KV went to the trash page).
+    """
+    fam = cfg.family
+    if fam not in CHUNKED_PREFILL_FAMILIES:
+        raise ValueError(f"family {fam!r} cannot verify through the paged "
+                         f"arena (chunked prefill supports "
+                         f"{CHUNKED_PREFILL_FAMILIES})")
+    S, C = tokens.shape
+    x = _embed(params, tokens, cfg)
+    positions = kv_lens[:, None] + jnp.arange(C)[None, :]
+
+    def body(h, xs):
+        layer_p, ak, av = xs
+        h, nk, nv = paged_prefill_layer_apply(
+            layer_p, h, positions, cfg, k_arena=ak, v_arena=av,
+            block_tables=block_tables, kv_lens=kv_lens,
+            chunk_lens=chunk_lens)
+        return h, (nk, nv)
+
+    body = _maybe_remat(body, cfg)
+    x, new_arena = _scan_paged_layers(body, x, params, arena)
+
+    x = rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    return _lm_head(params, x, cfg), new_arena
+
+
 # ---------------------------------------------------------------------------
 # decoder-stack step (shared by prefill and decode; S is the step width)
 # ---------------------------------------------------------------------------

@@ -53,7 +53,8 @@ REQUIRED_CATEGORIES = ("request", "step", "dispatch", "compile", "arena")
 # recorder call site, so a typo'd literal fails CI instead of silently
 # creating an orphan series.
 STEP_PHASES = ("schedule", "prefill", "prefill_chunk", "decode",
-               "paged_decode", "sample", "sync")
+               "paged_decode", "spec_draft", "spec_verify", "sample",
+               "sync")
 
 COUNTERS = ("jit_compiles", "dispatch_records", "kv_defrag_auto",
             "shared_prefix_steps", "prefix_cache_inserted_pages",
@@ -66,10 +67,16 @@ COUNTERS = ("jit_compiles", "dispatch_records", "kv_defrag_auto",
             "preempt_budget_exhausted", "prefix_cache_fallbacks",
             "requests_failed", "requests_expired", "requests_shed",
             "requests_cancelled", "requests_rejected",
-            "engine_snapshots", "engine_restores")
+            "engine_snapshots", "engine_restores",
+            # speculative decoding (serving/spec_decode.py): verify
+            # steps taken, draft tokens proposed/accepted, bonus tokens
+            # committed from the verify argmax, draft-pool preemptions
+            "spec_steps", "spec_drafted_tokens", "spec_accepted_tokens",
+            "spec_bonus_tokens", "spec_draft_preempts")
 
 GAUGES = ("kv_pages_in_use", "kv_fragmentation", "slot_occupancy",
-          "decode_table_width", "shared_prefix_lanes")
+          "decode_table_width", "shared_prefix_lanes",
+          "spec_accepted_per_step")
 
 # Perfetto phase codes used by the export ("X" complete slice with a
 # duration, "i" instant, "C" counter sample)

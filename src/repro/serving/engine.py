@@ -99,6 +99,8 @@ from repro.serving.kv_pool import (KVArena, KVBlockPool, PoolError,
 from repro.serving.metrics import ServingMetrics
 from repro.serving.prefix_cache import PrefixCache
 from repro.serving.scheduler import ContinuousScheduler, Request
+from repro.serving.spec_decode import (SpecDecoder, accept_tokens,
+                                       resolve_draft)
 
 
 def sample_logits(key, logits: jnp.ndarray, temperature: float = 1.0,
@@ -207,12 +209,34 @@ class EngineConfig:
     prefix_cache: bool = False
     # Cascade decode: when >= 2 decode lanes' block tables start with the
     # same physical pages, stream that shared prefix ONCE per step for the
-    # whole group (two-phase online-softmax merge) instead of once per
-    # lane.  Opt-in on top of prefix_cache: the merged softmax is
-    # mathematically exact but reassociated, so greedy parity with
-    # cache-off holds numerically rather than bitwise.  GQA text families
-    # only (absorbed MLA keeps the plain paged decode).
+    # whole group instead of once per lane.  Opt-in on top of
+    # prefix_cache.  The XLA reference rebuilds each lane's combined
+    # table and runs one masked softmax, so greedy parity with cache-off
+    # is bitwise; the Pallas kernel keeps the two-phase online-softmax
+    # merge and matches numerically.  GQA text families only (absorbed
+    # MLA keeps the plain paged decode).
     shared_prefix_decode: bool = False
+    # Speculative decoding (serving/spec_decode.py): draft ``spec_k``
+    # tokens per lane per step with a draft model, verify all of them
+    # (plus the pending token) with ONE target pass through the ragged
+    # chunked-prefill kernel, and commit the longest matching prefix +
+    # one corrected token.  Every committed token is the target verify
+    # argmax, so output is bitwise-identical to plain greedy decode.
+    # ``spec_draft`` names a registry arch for the draft model, or
+    # "self" for self-speculation (shares the target's params — the
+    # acceptance-rate upper bound, what the benchmark uses to isolate
+    # engine overheads).  Requires prefill_chunk (the verifier IS the
+    # chunk kernel), greedy decoding (temperature <= 0), and is
+    # incompatible with shared_prefix_decode (the verify chunk replaces
+    # the decode step the cascade would group).
+    spec_draft: Optional[str] = None
+    spec_k: int = 4
+    # Draft-arena page budget (None = same as the target pool).  Draft
+    # KV lives under the same pool economics; a lane whose draft
+    # reservation fails is draft-preempted for the step (plain C=1
+    # verify, counted in spec_draft_preempts) — a small budget is the
+    # test lever for that path.
+    spec_draft_blocks: Optional[int] = None
     # Auto-defrag: compact the pool after any step that leaves
     # fragmentation() above this threshold (None = manual defrag() only).
     defrag_threshold: Optional[float] = None
@@ -419,6 +443,40 @@ class ServingEngine:
             self._decode = JitWatch(
                 jax.jit(jax.vmap(self.model.decode_step,
                                  in_axes=(None, 0, 0))), "decode", self.obs)
+        self.spec: Optional[SpecDecoder] = None
+        if e.spec_draft is not None:
+            if self.prefill_chunk is None:
+                raise ValueError(
+                    "spec_draft requires prefill_chunk: the verify pass IS "
+                    "the ragged chunked-prefill kernel (spec_k + 1 rows "
+                    "per lane through block tables)")
+            if e.temperature > 0.0:
+                raise ValueError(
+                    "spec_draft requires greedy decoding (temperature <= "
+                    "0): the accept rule compares drafts against the "
+                    "verify argmax, which is only the sampling rule when "
+                    "greedy")
+            if e.shared_prefix_decode:
+                raise ValueError(
+                    "spec_draft is incompatible with shared_prefix_decode: "
+                    "the verify chunk replaces the decode step the "
+                    "cascade would group")
+            if e.spec_k < 1:
+                raise ValueError("spec_k must be >= 1")
+            draft_cfg, draft_params = resolve_draft(
+                cfg, self.params, e.spec_draft, e.seed)
+            self.spec = SpecDecoder(
+                draft_cfg, draft_params, num_slots=e.num_slots,
+                block_size=e.block_size,
+                num_blocks=(e.spec_draft_blocks
+                            if e.spec_draft_blocks is not None
+                            else num_blocks),
+                max_blocks_per_slot=self._max_blocks_per_slot,
+                chunk=self.prefill_chunk, spec_k=e.spec_k,
+                recorder=self.obs)
+            self._spec_verify = JitWatch(
+                jax.jit(self.model.paged_verify_step), "spec_verify",
+                self.obs)
         # what one masked-dense decode step would stream: every slot's full
         # capacity (recurrent-state families have no KV rows to speak of)
         self._dense_kv_rows = (e.num_slots * self._cache_len
@@ -752,6 +810,8 @@ class ServingEngine:
         req.outcome = "done"
         self.metrics.on_retire(req.arrival_time, req.t_admit, req.t_done,
                                in_deadline=not req.expired_at(req.t_done))
+        if self.spec is not None:
+            self.spec.release(req.rid)
         if self.kv_layout == "paged":
             self._kv_rows[slot] = 0      # pages already back in the free list
 
@@ -767,6 +827,8 @@ class ServingEngine:
             self.sched.finish(req, outcome, self.now(), reason=reason)
         self.metrics.on_finish(req.outcome)
         self.obs.count(OUTCOME_COUNTERS[req.outcome], 1)
+        if self.spec is not None:
+            self.spec.release(req.rid)
         if slot >= 0:
             self._last_tok[slot, 0] = 0
             if self.kv_layout == "paged":
@@ -788,6 +850,8 @@ class ServingEngine:
         slot = victim.slot
         self.sched.preempt(victim)
         self.metrics.preemptions += 1
+        if self.spec is not None:
+            self.spec.release(victim.rid)
         self._last_tok[slot, 0] = 0
         if self.kv_layout == "paged":
             self._kv_rows[slot] = 0
@@ -903,6 +967,8 @@ class ServingEngine:
             # free-list corruption surface at the step that caused them,
             # not at teardown
             self.pool.check()
+            if self.spec is not None:
+                self.spec.check()
             self.obs.count("kv_sanitize_checks", 1)
         self._vtime += 1.0
         self._step_idx += 1
@@ -975,7 +1041,9 @@ class ServingEngine:
         active = {s: self.sched.active[s] for s in plan.decode_slots
                   if s in self.sched.active
                   and not self.sched.active[s].prefilling}
-        if active:
+        if active and self.spec is not None:
+            self._spec_decode_step(active)
+        elif active:
             # decide stalls BEFORE decoding: the coming step writes the KV of
             # each lane's pending token, so its block table must cover
             # prompt + generated tokens
@@ -1136,6 +1204,166 @@ class ServingEngine:
             err.rids = [active[s].rid for s in bad]
             raise err
 
+    def _spec_decode_step(self, active: Dict[int, Request]) -> None:
+        """One speculative step over the fully-prefilled lanes: draft up
+        to ``spec_k`` tokens per lane (draft model, own page arena),
+        verify every lane's pending token + drafts with ONE target pass
+        through the ragged chunked-prefill kernel (C = spec_k + 1 rows
+        per lane), and commit the longest draft prefix the verify argmax
+        agrees with plus one corrected/bonus token.  Every committed
+        token is a target verify argmax, so sequences are bitwise
+        greedy-parity with plain decode — speculation only changes how
+        many commit per step.  Rejected drafts roll back by NOT
+        advancing per-lane lengths: the rows they wrote (target and
+        draft arenas alike) sit past the new kv length inside
+        already-reserved pages and are overwritten in place next step —
+        COW-gated below where target pages are shared with the prefix
+        cache, so the rewind can never scribble on another request."""
+        e = self.ecfg
+        S, K = e.num_slots, e.spec_k
+        # per-lane draft quota: the bonus token always commits one, so
+        # never draft past the remaining budget; reserve verify rows
+        # [L-1, L-1+k] up front, degrading k -> 0 before stalling
+        quota: Dict[int, int] = {}
+        for slot, req in sorted(active.items()):
+            L = req.prompt_len + len(req.generated)
+            k = max(0, min(K, req.max_new_tokens - len(req.generated) - 1))
+            if not self.sched.grow(req, L + k):
+                k = 0
+                if not self.sched.grow(req, L):
+                    self.metrics.stalls += 1
+            quota[slot] = k
+        if self.chaos is not None:
+            self._inject_decode_chaos(active, {})
+        for slot, req in sorted(active.items()):
+            if req.stalled:
+                continue                 # writes nothing: no fork needed
+            L = req.prompt_len + len(req.generated)
+            if not self._cow_chunk_pages(req, L - 1, quota[slot] + 1):
+                self.metrics.stalls += 1
+
+        draft_lanes = {s: (r, quota[s]) for s, r in active.items()
+                       if not r.stalled and quota[s] > 0}
+        drafts: Dict[int, List[int]] = {}
+        preempts = 0
+        dt_draft = 0.0
+        if draft_lanes:
+            t0 = time.time()
+            with self._dispatch_scope("spec_draft"), \
+                    self.timeline.phase("spec_draft",
+                                        lanes=len(draft_lanes)):
+                drafts, preempts = self.spec.draft(draft_lanes)
+            dt_draft = time.time() - t0
+            self.obs.add_scope_wall("spec_draft", dt_draft)
+            if preempts:
+                self.obs.count("spec_draft_preempts", preempts)
+
+        # verify: one ragged chunk batch at fixed width (compiles once).
+        # Row 0 is the pending token (exactly what plain decode would
+        # process), rows 1..k are the drafts; stalled lanes ride along
+        # with chunk 0 (rows land in the trash page, logits ignored).
+        C = K + 1
+        toks = np.zeros((S, C), np.int32)
+        clens = np.zeros((S,), np.int32)
+        for slot, req in sorted(active.items()):
+            if req.stalled:
+                continue
+            d = drafts.get(slot, [])
+            toks[slot, 0] = self._last_tok[slot, 0]
+            toks[slot, 1:1 + len(d)] = d
+            clens[slot] = 1 + len(d)
+        kv = np.where(clens > 0, self._kv_rows, 0).astype(np.int32)
+        width = self._max_blocks_per_slot
+        rids = [active[s].rid if s in active and clens[s] > 0 else None
+                for s in range(S)]
+        tables = self.pool.dense_block_table(rids, width)
+        gens = (self.pool.table_generations(rids, width)
+                if e.sanitize else None)
+        kv_read = e.block_size * sum(
+            self.pool.blocks_for(int(kv[s]) + int(clens[s]))
+            for s in range(S))
+        t0 = time.time()
+        with self._dispatch_scope("spec_verify"), \
+                self.timeline.phase("spec_verify",
+                                    lanes=int((clens > 0).sum()),
+                                    width=width):
+            # saralint: ok[cow-gate] verify rows are COW-forked above (_cow_chunk_pages over [L-1, L-1+k]) before this write
+            logits, leaves = self._spec_verify(
+                self.params, jnp.asarray(toks), self.arena.leaves,
+                jnp.asarray(tables), jnp.asarray(kv), jnp.asarray(clens))
+        with self.timeline.phase("sync"):
+            logits, leaves = jax.block_until_ready((logits, leaves))
+        dt = time.time() - t0
+        self.obs.add_scope_wall("spec_verify", dt)
+        self.arena.leaves = leaves
+        self._dispatch("spec_verify")
+        logits = np.asarray(logits)          # (S, C, V)
+        if e.sanitize:
+            self._sanitize_spec(active, rids, tables, gens, logits, clens)
+
+        with self.timeline.phase("sample"):
+            argm = np.argmax(logits, -1)     # (S, C) greedy verify picks
+            committed = accepted = bonus = drafted = live = 0
+            for slot, req in sorted(active.items()):
+                if req.stalled:
+                    continue             # replays the pending token
+                live += 1
+                d = drafts.get(slot, [])
+                drafted += len(d)
+                a, commit = accept_tokens(d, argm[slot, :len(d) + 1])
+                c = 0
+                for t in commit:         # EOS can land mid-commit
+                    req.generated.append(int(t))
+                    c += 1
+                    if req.done():
+                        break
+                accepted += min(a, c)
+                bonus += c - min(a, c)
+                committed += c
+                self._kv_rows[slot] += c
+                self._last_tok[slot, 0] = req.generated[-1]
+                self.spec.commit(req.rid, int(self._kv_rows[slot]))
+                if req.t_first_token < 0:
+                    req.t_first_token = self.now()
+                    self.metrics.on_first_token(req.arrival_time,
+                                                req.t_first_token)
+                    self.req_spans.on_first_token(req.rid)
+                if req.done():
+                    self._retire(req)
+        self.obs.count("spec_steps", 1)
+        self.obs.count("spec_drafted_tokens", drafted)
+        self.obs.count("spec_accepted_tokens", accepted)
+        self.obs.count("spec_bonus_tokens", bonus)
+        self.obs.gauge("spec_accepted_per_step", committed / max(live, 1))
+        self.metrics.on_spec_step(live, drafted, accepted, bonus, preempts)
+        self.metrics.on_decode_step(
+            len(active), e.num_slots, committed, dt + dt_draft,
+            kv_read_tokens=kv_read,
+            kv_read_tokens_dense=self._dense_kv_rows)
+
+    def _sanitize_spec(self, active: Dict[int, Request], rids, tables,
+                       gens, logits: np.ndarray, clens: np.ndarray) -> None:
+        """Post-verify sanitizer traps — the spec twin of
+        ``_sanitize_decode``, scanning only each lane's live chunk rows
+        (rows past ``clens`` are trash-page garbage by construction)."""
+        try:
+            self.pool.assert_generations(rids, tables, gens)
+        except SanitizerError:
+            self.obs.count("kv_generation_faults", 1)
+            raise
+        bad = [s for s, r in sorted(active.items())
+               if not r.stalled
+               and not np.isfinite(logits[s, :int(clens[s])]).all()]
+        if bad:
+            self.obs.count("kv_poison_hits", len(bad))
+            lanes = ", ".join(f"{s} ({active[s].rid})" for s in bad)
+            err = SanitizerError(
+                f"poisoned KV page read: spec verify produced non-finite "
+                f"logits on lane(s) {lanes} — a freed (NaN-filled) arena "
+                "page is still reachable through a live block table")
+            err.rids = [active[s].rid for s in bad]
+            raise err
+
     def _shared_prefix_group(self, active: Dict[int, Request],
                              kv: np.ndarray, wm: np.ndarray):
         """Detect the hottest shared page run among the decode lanes: the
@@ -1224,6 +1452,12 @@ class ServingEngine:
             expected = (self.prefix_cache.pages()
                         if self.prefix_cache is not None else ())
             self._leak_audit = self.pool.audit_leaks(expected)
+            if self.spec is not None:
+                # draft pages are released with their target request, so
+                # a drained engine must leave the draft pool empty too
+                self.spec.check()
+                self._leak_audit["kv_draft_leaked_blocks"] = \
+                    self.spec.live_pages()
         return {r.rid: np.asarray(r.generated, np.int32) for r in requests}
 
     def dispatch_stats(self) -> Dict[str, int]:

@@ -71,6 +71,15 @@ class ServingMetrics:
     cache_hit_tokens: int = 0
     cache_hit_pages: int = 0
     prefill_flops_saved: float = 0.0
+    # Speculative decoding (serving/spec_decode.py): verify steps taken,
+    # draft tokens proposed/accepted, bonus tokens committed from the
+    # verify argmax, and draft-pool preemptions (draft arena dry -> the
+    # lane fell back to a plain C=1 verify that step)
+    spec_steps: int = 0
+    spec_drafted: int = 0
+    spec_accepted: int = 0
+    spec_bonus: int = 0
+    spec_draft_preempts: int = 0
     # Rolling windows (last ``rolling_window`` samples) so a long run's
     # summary reports live behaviour, not lifetime averages: a regression
     # an hour in is invisible in a lifetime p99 but jumps out of a
@@ -144,6 +153,21 @@ class ServingMetrics:
         self.cache_hit_pages += pages
         self.prefill_flops_saved += tokens * flops_per_token
 
+    def on_spec_step(self, lanes: int, drafted: int, accepted: int,
+                     bonus: int, preempts: int = 0) -> None:
+        """One engine step that went through the speculative verify path.
+        ``drafted`` counts draft tokens proposed across all ``lanes``,
+        ``accepted`` the subset the target's verify pass kept, ``bonus``
+        the corrected/extension tokens committed from the verify argmax
+        (one per non-stalled lane).  Committed tokens are reported
+        separately through :meth:`on_decode_step` so ``decode_tok_s``
+        stays comparable with plain decode."""
+        self.spec_steps += 1
+        self.spec_drafted += drafted
+        self.spec_accepted += accepted
+        self.spec_bonus += bonus
+        self.spec_draft_preempts += preempts
+
     def on_decode_step(self, active: int, slots: int, tokens: int,
                        seconds: float, kv_read_tokens: int = 0,
                        kv_read_tokens_dense: int = 0) -> None:
@@ -210,6 +234,16 @@ class ServingMetrics:
             "cache_hit_tokens": self.cache_hit_tokens,
             "cache_hit_pages": self.cache_hit_pages,
             "prefill_flops_saved": self.prefill_flops_saved,
+            "spec_steps": self.spec_steps,
+            "spec_drafted_tokens": self.spec_drafted,
+            "spec_accepted_tokens": self.spec_accepted,
+            "spec_bonus_tokens": self.spec_bonus,
+            "spec_draft_preempts": self.spec_draft_preempts,
+            "spec_accept_rate": (self.spec_accepted / self.spec_drafted
+                                 if self.spec_drafted else None),
+            "spec_accepted_per_step": ((self.spec_accepted + self.spec_bonus)
+                                       / self.spec_steps
+                                       if self.spec_steps else None),
         }
         if sara_cache:
             hits = sara_cache.get("hits", 0)

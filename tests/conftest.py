@@ -8,6 +8,15 @@ import numpy as np
 import pytest
 
 
+def pytest_collection_modifyitems(items):
+    # two-tier taxonomy (see docs/TESTING.md): anything not explicitly
+    # marked slow IS tier-1, so `-m tier1` and `-m "not slow"` select
+    # the same canonical green bar
+    for item in items:
+        if "slow" not in item.keywords:
+            item.add_marker(pytest.mark.tier1)
+
+
 @pytest.fixture(scope="session")
 def rng():
     return np.random.default_rng(0)

@@ -294,3 +294,74 @@ def test_chaos_same_seed_same_faults_and_outcomes():
     assert chaos_a == chaos_b
     for rid in res_a:
         np.testing.assert_array_equal(res_a[rid], res_b[rid])
+
+
+# ---------------------------------------------------------------------------
+# chaos under speculative decoding: a fault mid-verify contains to its
+# victims with draft state rolled back (runtime/failplan schedules drive
+# the injection; serving/spec_decode.py owns the draft state)
+# ---------------------------------------------------------------------------
+
+def _spec_chaos_engine(cfg, chaos=None):
+    return ServingEngine(cfg, EngineConfig(
+        num_slots=2, max_len=31, block_size=8, temperature=0.0,
+        kv_layout="paged", prefill_chunk=8, sanitize=True,
+        max_prefills_per_step=2, spec_draft="self", spec_k=3, chaos=chaos))
+
+
+def test_spec_poison_mid_verify_contained_with_draft_rollback():
+    """An injected poisoned page surfaces INSIDE the spec verify pass
+    (non-finite verify logits on the victim's chunk rows).  The step
+    error boundary must fail exactly the victim: its target pages AND
+    its draft-arena pages free, no token from the aborted step commits,
+    and every survivor's greedy tokens stay bitwise equal to the
+    fault-free spec run."""
+    cfg = _cfg()
+    prompts = _prompts(cfg, 4, 12, seed=5)
+    baseline = _spec_chaos_engine(cfg).run(
+        [Request(f"r{i}", p, 6) for i, p in enumerate(prompts)])
+
+    reqs = [Request(f"r{i}", p, 6) for i, p in enumerate(prompts)]
+    eng = _spec_chaos_engine(cfg, chaos=ChaosConfig(seed=4, poison_p=0.2))
+    res = eng.run(reqs)                      # must not raise
+    s = eng.summary()
+    assert s["chaos_poison_injected"] >= 1
+    assert s["kv_poison_hits"] >= 1          # trapped by _sanitize_spec
+    assert s["faults_contained"] >= 1
+    failed = [r for r in reqs if r.outcome == "failed"]
+    done = [r for r in reqs if r.outcome == "done"]
+    assert failed and done
+    for r in done:
+        np.testing.assert_array_equal(res[r.rid], baseline[r.rid])
+    # rollback is complete on both arenas: target pool fully reclaimed,
+    # and no victim left draft rows or draft pages behind
+    assert eng.pool.num_free == eng.pool.num_blocks
+    assert eng.spec.live_pages() == 0
+    assert s["kv_draft_leaked_blocks"] == 0
+    for r in failed:
+        assert eng.spec.rows(r.rid) == 0
+
+
+def test_spec_chaos_stall_preempt_drain_and_draft_release():
+    """Forced stalls make spec lanes replay their pending token (chunk 0
+    through the verify batch) and forced preemptions must release the
+    victim's draft pages with its target pages; the engine still drains
+    with full token budgets."""
+    cfg = _cfg()
+    eng = ServingEngine(cfg, EngineConfig(
+        num_slots=2, max_len=31, block_size=8, temperature=0.0,
+        kv_layout="paged", prefill_chunk=4, max_prefills_per_step=2,
+        spec_draft="self", spec_k=2,
+        chaos=ChaosConfig(seed=2, stall_p=0.4, stall_steps=2,
+                          preempt_p=0.4)))
+    reqs = [Request(f"r{i}", p, 5)
+            for i, p in enumerate(_prompts(cfg, 3, 12, seed=9))]
+    res = eng.run(reqs)
+    s = eng.summary()
+    assert s["faults_injected"] >= 1
+    for r in reqs:
+        assert r.outcome in ("done", "failed")
+        if r.outcome == "done":
+            assert len(res[r.rid]) == 5
+    assert eng.pool.num_free == eng.pool.num_blocks
+    assert eng.spec.live_pages() == 0

@@ -94,6 +94,7 @@ def test_shape_applicability_table(arch):
         assert not answers["long_500k"]
 
 
+@pytest.mark.slow
 def test_param_counts_match_published_sizes():
     """Full configs land near their nameplate parameter counts."""
     targets = {

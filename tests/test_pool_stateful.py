@@ -1,0 +1,260 @@
+"""Stateful property tests for the KV block pool + prefix-cache trie.
+
+Speculative decoding made rollback-into-reserved-pages a new client of
+the pool's sharing machinery, so the invariants stop being something
+individual unit tests can cover path-by-path: any interleaving of
+reserve / extend / share / ensure_writable / free / pin (cache insert) /
+evict / defrag must preserve
+
+  * ``KVBlockPool.check()``: per-table page uniqueness, refcounts that
+    match the tables exactly, no negative pins, and free list ==
+    the unreferenced AND unpinned block set;
+  * landmark immobility: defrag never relocates a shared (refcount > 1)
+    or pinned page — other tables and the cache index hold physical ids;
+  * conservation: after every table is freed and the cache cleared, all
+    blocks are back on the free list.
+
+Two drivers generate the interleavings: a seeded random-walk driver that
+always runs (CI has no extra deps), and a Hypothesis
+``RuleBasedStateMachine`` that runs where ``hypothesis`` is installed —
+same operations, but with shrinking when a counterexample is found.
+"""
+
+import random
+
+import numpy as np
+import pytest
+
+from repro.serving.kv_pool import KVBlockPool, PoolError
+from repro.serving.prefix_cache import PrefixCache
+
+NUM_BLOCKS = 24
+BLOCK_SIZE = 8
+
+
+class PoolWorkout:
+    """One random interleaving of pool + cache operations with the
+    invariants asserted after every op.  Shared by the seeded driver and
+    the Hypothesis machine (the machine calls the ops directly)."""
+
+    def __init__(self, seed: int):
+        self.rng = random.Random(seed)
+        self.pool = KVBlockPool(NUM_BLOCKS, BLOCK_SIZE)
+        self.cache = PrefixCache(self.pool)
+        self.tokens = {}          # rid -> token array backing its pages
+        self.next_rid = 0
+        self.inserted = []        # token arrays the cache has indexed
+
+    # -- operations (each safe to call in any state) ------------------------
+    def op_alloc(self):
+        rid = f"q{self.next_rid}"
+        self.next_rid += 1
+        n = self.rng.randint(1, 6 * BLOCK_SIZE)
+        try:
+            self.pool.alloc(rid, n)
+        except PoolError:
+            return                # expected OOM under pressure
+        self.tokens[rid] = np.asarray(
+            self.rng.choices(range(1, 500), k=n), np.int32)
+
+    def op_extend(self):
+        rid = self._live()
+        if rid is None:
+            return
+        t = self.pool.table(rid)
+        n = t.num_tokens + self.rng.randint(1, 2 * BLOCK_SIZE)
+        try:
+            self.pool.extend(rid, n)
+        except PoolError:
+            return
+        extra = np.asarray(
+            self.rng.choices(range(1, 500), k=n - len(self.tokens[rid])),
+            np.int32)
+        self.tokens[rid] = np.concatenate([self.tokens[rid], extra])
+
+    def op_free(self):
+        rid = self._live()
+        if rid is None:
+            return
+        self.pool.free(rid)
+        del self.tokens[rid]
+
+    def op_share(self):
+        """Map a live request's leading pages into a fresh table — the
+        raw version of a prefix-cache hit."""
+        donor = self._live()
+        if donor is None:
+            return
+        blocks = self.pool.table(donor).blocks
+        if not blocks:
+            return
+        k = self.rng.randint(1, len(blocks))
+        rid = f"q{self.next_rid}"
+        self.next_rid += 1
+        self.pool.share(rid, blocks[:k])
+        self.tokens[rid] = self.tokens[donor][:k * BLOCK_SIZE].copy()
+
+    def op_cow(self):
+        """ensure_writable on a random page — exclusive pages pass
+        through, shared/pinned ones fork (spec decode's rollback write
+        path does exactly this before rewinding into a page)."""
+        rid = self._live()
+        if rid is None:
+            return
+        blocks = self.pool.table(rid).blocks
+        if not blocks:
+            return
+        try:
+            self.pool.ensure_writable(
+                rid, self.rng.randrange(len(blocks)))
+        except PoolError:
+            return                # no free block for the copy
+
+
+    def op_insert(self):
+        """Index a live request's fully-covered pages in the cache
+        (pins them, like a completed prefill does)."""
+        rid = self._live()
+        if rid is None:
+            return
+        toks = self.tokens[rid]
+        nfull = len(toks) // BLOCK_SIZE
+        blocks = self.pool.table(rid).blocks[:nfull]
+        if not blocks:
+            return
+        self.cache.insert(toks[:nfull * BLOCK_SIZE], blocks)
+        self.inserted.append(toks[:nfull * BLOCK_SIZE].copy())
+
+    def op_cache_hit(self):
+        """Look a previously inserted prompt up and share the match into
+        a fresh table — the admission path of a cache hit."""
+        if not self.inserted:
+            return
+        toks = self.rng.choice(self.inserted)
+        pages = self.cache.match(toks)
+        if not pages:
+            return                # evicted since insertion
+        rid = f"q{self.next_rid}"
+        self.next_rid += 1
+        self.pool.share(rid, pages)
+        self.tokens[rid] = np.asarray(toks[:len(pages) * BLOCK_SIZE],
+                                      np.int32)
+
+    def op_evict(self):
+        self.cache.evict(self.rng.randint(1, 4))
+
+    def op_defrag(self):
+        """Defrag must keep every shared/pinned page exactly where other
+        owners expect it (landmarks immovable)."""
+        pool = self.pool
+        landmarks = {b for b in range(NUM_BLOCKS)
+                     if pool.pincount(b) > 0 or pool.refcount(b) > 1}
+        moves = pool.defrag()
+        moved = set(moves)
+        assert not (landmarks & moved), \
+            f"defrag moved landmark pages {sorted(landmarks & moved)}"
+
+    OPS = ("alloc", "alloc", "extend", "extend", "free", "share", "cow",
+           "cow", "insert", "cache_hit", "evict", "defrag")
+
+    def step(self):
+        getattr(self, f"op_{self.rng.choice(self.OPS)}")()
+        self.pool.check()
+
+    def teardown(self):
+        for rid in list(self.tokens):
+            self.pool.free(rid)
+        self.cache.clear()
+        self.pool.check()
+        assert self.pool.num_free == NUM_BLOCKS, \
+            f"leak: {NUM_BLOCKS - self.pool.num_free} blocks unreclaimed"
+
+    def _live(self):
+        live = sorted(self.tokens)
+        return self.rng.choice(live) if live else None
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_random_interleaving_preserves_invariants(seed):
+    w = PoolWorkout(seed)
+    for _ in range(300):
+        w.step()
+    w.teardown()
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis state machine: the same operation set, generatively driven
+# with shrinking.  Skipped where hypothesis isn't installed.
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import settings
+    from hypothesis import strategies as st
+    from hypothesis.stateful import (RuleBasedStateMachine, initialize,
+                                     invariant, rule)
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+
+    class PoolMachine(RuleBasedStateMachine):
+        @initialize(seed=st.integers(0, 2**32 - 1))
+        def init_pool(self, seed):
+            # Hypothesis drives WHICH op runs; the workout's internal rng
+            # (seeded by a drawn value, so shrinkable) picks operands
+            self.w = PoolWorkout(seed)
+
+        @rule()
+        def alloc(self):
+            self.w.op_alloc()
+
+        @rule()
+        def extend(self):
+            self.w.op_extend()
+
+        @rule()
+        def free(self):
+            self.w.op_free()
+
+        @rule()
+        def share(self):
+            self.w.op_share()
+
+        @rule()
+        def cow(self):
+            self.w.op_cow()
+
+        @rule()
+        def insert(self):
+            self.w.op_insert()
+
+        @rule()
+        def cache_hit(self):
+            self.w.op_cache_hit()
+
+        @rule()
+        def evict(self):
+            self.w.op_evict()
+
+        @rule()
+        def defrag(self):
+            self.w.op_defrag()
+
+        @invariant()
+        def pool_invariants(self):
+            if hasattr(self, "w"):
+                self.w.pool.check()
+
+        def teardown(self):
+            if hasattr(self, "w"):
+                self.w.teardown()
+
+    PoolMachine.TestCase.settings = settings(
+        max_examples=25, stateful_step_count=60, deadline=None)
+    TestPoolMachine = PoolMachine.TestCase
+else:
+
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_pool_state_machine():
+        pass

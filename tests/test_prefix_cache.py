@@ -258,11 +258,31 @@ def _cascade_case(seed=0):
 
 
 def test_shared_prefix_ref_matches_concatenated_paged():
+    """BITWISE, not allclose: the ref rebuilds one gap-free combined
+    table per lane and runs a single masked softmax, so greedy decode
+    over the cascade path must produce the exact floats the plain paged
+    path does (the engine's shared-prefix greedy-parity proof leans on
+    this)."""
     (q, k, v, ut, ul, pp, pl, ft, fl) = _cascade_case()
     o_full = ops.paged_attention(q, k, v, ft, fl, impl="xla")
     o_casc = shared_paged_attention_ref(q, k, v, ut, ul, pp, pl)
-    np.testing.assert_allclose(np.asarray(o_casc), np.asarray(o_full),
-                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(o_casc), np.asarray(o_full))
+
+
+def test_shared_prefix_ref_bitwise_with_padded_tables():
+    """Pad-width mismatch must not perturb the floats: widening the
+    unique tables (and the prefix page list) with garbage page ids past
+    the real lengths changes only masked lanes, so the output stays
+    bit-identical to the unpadded call."""
+    (q, k, v, ut, ul, pp, pl, ft, fl) = _cascade_case(seed=6)
+    o_ref = shared_paged_attention_ref(q, k, v, ut, ul, pp, pl)
+    ut_wide = jnp.concatenate(
+        [ut, jnp.full((ut.shape[0], 3), 7, jnp.int32)], axis=1)
+    pp_wide = jnp.concatenate([pp, jnp.asarray([7, 7], jnp.int32)])
+    o_wide = shared_paged_attention_ref(q, k, v, ut_wide, ul, pp_wide, pl)
+    np.testing.assert_array_equal(np.asarray(o_wide), np.asarray(o_ref))
+    o_full = ops.paged_attention(q, k, v, ft, fl, impl="xla")
+    np.testing.assert_array_equal(np.asarray(o_wide), np.asarray(o_full))
 
 
 def test_shared_paged_attention_pallas_matches_xla():

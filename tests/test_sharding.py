@@ -29,6 +29,7 @@ def _axis_sz(mesh, ax):
     return mesh.devices.shape[mesh.axis_names.index(ax)]
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ["llama3.2-1b", "qwen2-moe-a2.7b",
                                   "rwkv6-1.6b", "zamba2-7b",
                                   "deepseek-v3-671b"])
@@ -110,6 +111,7 @@ MULTIDEV_SCRIPT = textwrap.dedent("""
 """)
 
 
+@pytest.mark.slow
 def test_train_step_mesh_invariance():
     """The sharded train step computes the SAME loss on (1,1), (4,2), (2,4)
     and (8,1) meshes — the distribution layer is semantics-preserving."""

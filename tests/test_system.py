@@ -38,6 +38,7 @@ def test_train_e2e_with_injected_failure(tmp_path):
     assert losses[-1] < losses[0] * 0.9
 
 
+@pytest.mark.slow
 def test_serve_e2e_all_families():
     """Wave serving runs for one arch per family; greedy decode is
     deterministic."""
